@@ -1,0 +1,49 @@
+"""Paper Fig 11: micro-batch size sweep — throughput/energy optimum and the
+latency U-curve, both anchored near the total L1D size of the active cores
+(the paper's cache-aware micro-batching; up to 11x penalty without it)."""
+from __future__ import annotations
+
+from benchmarks.common import engine_cfg, fmt_table, stream_for
+
+
+def run(quick: bool = True) -> dict:
+    from repro.core.engine import CStreamEngine
+    from repro.core.strategies import cache_aware_batch_bytes
+    from repro.core.energy import PROFILES
+    from repro.data.stream import rate_for_dataset
+
+    stream = stream_for("rovio", quick)
+    rate = rate_for_dataset(words_per_tuple=4)
+    sizes = [400, 2048, 8192, 32768, 131072, 524288, 2097152]
+    rows = []
+    for mb_bytes in sizes:
+        cfg = engine_cfg("tcomp32", quick, micro_batch_bytes=mb_bytes)
+        eng = CStreamEngine(cfg, sample=stream[: 1 << 14])
+        try:
+            res = eng.compress(stream, arrival_rate_tps=rate, max_blocks=64)
+        except ValueError:  # stream shorter than one batch
+            continue
+        mb = res.n_tuples * 4 / 1e6
+        rows.append({
+            "batch_bytes": mb_bytes,
+            "mbps": mb / res.stats.wall_s,
+            "j_per_mb": (res.stats.energy_j or 0) / mb,
+            "latency_ms": 1e3 * (res.stats.latency_s or 0),
+        })
+    l1d = cache_aware_batch_bytes(PROFILES["rk3399_amp"])
+    best_thpt = max(rows, key=lambda r: r["mbps"])
+    spread = best_thpt["mbps"] / min(r["mbps"] for r in rows)
+    lat = [r["latency_ms"] for r in rows]
+    u_curve = lat[0] > min(lat) and lat[-1] > min(lat)
+    claims = {
+        "throughput_penalty_large": spread > 3,  # paper reports up to 11x
+        "latency_u_curve": u_curve,
+        "optimum_within_64x_of_l1d": 1 / 64 <= best_thpt["batch_bytes"] / l1d <= 64,
+    }
+    print(fmt_table(rows, ["batch_bytes", "mbps", "j_per_mb", "latency_ms"], f"Fig 11: batch sweep (L1D total = {l1d}B)"))
+    print(f"   max/min throughput spread: {spread:.1f}x;  claims: {claims}")
+    return {"rows": rows, "l1d_bytes": l1d, "spread": spread, "claims": claims}
+
+
+if __name__ == "__main__":
+    run()

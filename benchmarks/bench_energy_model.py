@@ -1,0 +1,55 @@
+"""Paper Fig 8: frequency regulation — the energy U-curve and DVFS
+strategies, via the documented analytic energy model (no DVFS exists on
+TPU/CPU containers; DESIGN.md §2 maps this axis to the model).
+
+P(f) = P_static + c*f^3 (voltage scales with f), t(f) = W/f =>
+E(f) = P(f) * t(f) is non-monotone with a minimum at moderate f —
+matching Fig 8a's observation (0.6 GHz beats both 0.408 and 1.8 GHz)."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table
+
+
+def run(quick: bool = True) -> dict:
+    freqs = [0.408, 0.6, 0.816, 1.0, 1.2, 1.416, 1.8]
+    p_static, c, work = 0.35, 0.25, 1.0  # normalized RK3399-like constants
+    rows = []
+    for f in freqs:
+        t = work / f
+        p = p_static + c * f ** 3
+        rows.append({"freq_ghz": f, "time_s": t, "power_w": p, "energy_j": p * t})
+    e = [r["energy_j"] for r in rows]
+    emin_idx = e.index(min(e))
+
+    # DVFS strategies (Fig 8b): 'performance' = fixed max; 'conservative' =
+    # slow adaptation (fewer switches, runs at lower f when idle);
+    # 'ondemand' = frequent switching with per-switch overhead.
+    switch_overhead_j, switch_overhead_s = 0.02, 0.004
+    perf = rows[-1]
+    cons_f = 1.0
+    cons = {"strategy": "conservative",
+            "energy_j": (p_static + c * cons_f ** 3) * (work / cons_f) + 4 * switch_overhead_j,
+            "latency_s": work / cons_f + 4 * switch_overhead_s}
+    onde_f = 1.1
+    onde = {"strategy": "ondemand",
+            "energy_j": (p_static + c * onde_f ** 3) * (work / onde_f) + 60 * switch_overhead_j,
+            "latency_s": work / onde_f + 60 * switch_overhead_s}
+    dvfs_rows = [
+        {"strategy": "performance", "energy_j": perf["energy_j"], "latency_s": perf["time_s"]},
+        cons,
+        onde,
+    ]
+    claims = {
+        "u_curve": 0 < emin_idx < len(freqs) - 1,
+        "conservative_saves_energy": cons["energy_j"] < dvfs_rows[0]["energy_j"],
+        "conservative_costs_latency": cons["latency_s"] > dvfs_rows[0]["latency_s"],
+        "ondemand_worse_than_conservative": onde["energy_j"] > cons["energy_j"],
+    }
+    print(fmt_table(rows, ["freq_ghz", "time_s", "power_w", "energy_j"], "Fig 8a: frequency sweep (model)"))
+    print(fmt_table(dvfs_rows, ["strategy", "energy_j", "latency_s"], "Fig 8b: DVFS strategies (model)"))
+    print("   claims:", claims)
+    return {"rows": rows, "dvfs_rows": dvfs_rows, "claims": claims}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Beyond-paper production paths: the paper's codecs applied to the three
+LM-serving/training boundaries (DESIGN.md §3).
+
+  1. input feed      — Delta-LEB128 host->device token transfer ratio;
+  2. gradient sync   — NUQ-8/4 wire-byte reduction + error-feedback bias;
+  3. KV cache        — NUQ-8 cache bytes vs bf16 + decode logit error.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_table
+
+
+def run(quick: bool = True) -> dict:
+    rows = []
+
+    # 1. compressed input feed
+    from repro.data.pipeline import CompressedFeed, zipf_token_stream
+
+    feed = CompressedFeed(zipf_token_stream(151_936, 8, 255, seed=0)).start()
+    try:
+        for _ in range(3):
+            feed.next_batch()
+        rows.append({
+            "path": "input feed (delta-leb128)",
+            "compression_x": feed.stats.ratio,
+            "fidelity": "lossless (exact)",
+        })
+    finally:
+        feed.stop()
+
+    # 2. gradient compression
+    from repro.core.gradient import GradCompressionConfig, ef_init, ef_step, roundtrip, wire_bytes
+
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 0.01, (1 << 16,)).astype(np.float32))
+    for qb in (8, 4):
+        cfg = GradCompressionConfig(qbits=qb)
+        rel = float(jnp.linalg.norm(roundtrip(g, cfg) - g) / jnp.linalg.norm(g))
+        res = ef_init({"g": g})
+        acc = jnp.zeros_like(g)
+        for _ in range(16):
+            gh, res = ef_step({"g": g}, res, cfg)
+            acc += gh["g"]
+        bias = float(jnp.linalg.norm(acc / 16 - g) / jnp.linalg.norm(g))
+        rows.append({
+            "path": f"gradient sync (nuq{qb}+EF)",
+            "compression_x": g.size * 4 / wire_bytes(g, cfg),
+            "fidelity": f"1-step {100*rel:.1f}% -> EF bias {100*bias:.2f}%",
+        })
+
+    # 3. KV cache
+    from repro.core import kvcache
+
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 512, 4, 64))
+    codes, scale = kvcache.quantize_block(k)
+    kh = kvcache.dequantize_block(codes, scale, dtype=jnp.float32)
+    rel = float(jnp.linalg.norm(kh - k) / jnp.linalg.norm(k))
+    qbytes = codes.size + scale.size * 4
+    rows.append({
+        "path": "kv cache (nuq8 + group scales)",
+        "compression_x": k.size * 2 / qbytes,  # vs bf16
+        "fidelity": f"value rel err {100*rel:.1f}%",
+    })
+
+    claims = {
+        "feed_lossless_gt_1.3x": rows[0]["compression_x"] > 1.3,
+        "grad_nuq8_4x": rows[1]["compression_x"] > 3.5,
+        "kv_cache_halves_bf16": rows[3]["compression_x"] > 1.8,
+    }
+    print(fmt_table(rows, ["path", "compression_x", "fidelity"], "Production paths (beyond-paper)"))
+    print("   claims:", claims)
+    return {"rows": rows, "claims": claims}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Aggregates the dry-run JSON records (experiments/dryrun/*.json) into the
+EXPERIMENTS.md roofline table: three terms per (arch x shape x mesh),
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt_table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(dirpath: str = DRYRUN_DIR, tag: str = "") -> list:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, f"*{tag}.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table_rows(recs: list) -> list:
+    rows = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "status": "SKIP (sub-quadratic rule)",
+            })
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"], "status": "ERROR"})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "mesh": r["mesh"],
+            "status": "ok",
+            "compute_s": t["compute_s"],
+            "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "dominant": t["dominant"],
+            "useful_flops": r.get("useful_flops_frac"),
+        })
+    return rows
+
+
+def run(quick: bool = True) -> dict:
+    recs = load_records()
+    rows = table_rows(recs)
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(fmt_table(
+        rows,
+        ["arch", "shape", "mesh", "status", "compute_s", "memory_s", "collective_s", "dominant", "useful_flops"],
+        f"Roofline terms from dry-run ({len(ok)} ok / {len(rows)} cells)",
+    ))
+    dominants = {}
+    for r in ok:
+        dominants[r["dominant"]] = dominants.get(r["dominant"], 0) + 1
+    print("   dominant-term histogram:", dominants)
+    return {"rows": rows, "dominants": dominants}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Fig 9: scalability — throughput/energy as big+little core counts
+vary (the core-count regulation knob)."""
+from __future__ import annotations
+
+from benchmarks.common import engine_cfg, fmt_table, stream_for
+
+
+def run(quick: bool = True) -> dict:
+    from repro.core.energy import CoreSpec, HardwareProfile, PROFILES
+    from repro.core.engine import CStreamEngine
+
+    stream = stream_for("rovio", quick)
+    combos = [(0, 1), (0, 2), (0, 4), (1, 0), (1, 2), (2, 0), (2, 4), (1, 4)]
+    rows = []
+    for nb, nl in combos:
+        name = f"{nb}B+{nl}L"
+        PROFILES[name] = HardwareProfile(
+            name,
+            [CoreSpec("big", 2.0, 1.5, 0.15)] * nb + [CoreSpec("little", 1.0, 0.5, 0.08)] * nl,
+        )
+        cfg = engine_cfg("tcomp32", quick, profile=name, lanes=max(nb + nl, 1))
+        eng = CStreamEngine(cfg, sample=stream[: 1 << 14])
+        res = eng.compress(stream, max_blocks=32)
+        mb = res.n_tuples * 4 / 1e6
+        rows.append({
+            "cores": name,
+            "mbps": mb / res.makespan_s,
+            "j_per_mb": (res.stats.energy_j or 0) / mb,
+        })
+    by = {r["cores"]: r for r in rows}
+    claims = {
+        "throughput_scales_with_cores": by["2B+4L"]["mbps"] > 1.5 * by["0B+1L"]["mbps"],
+        "energy_throughput_tradeoff": by["2B+4L"]["j_per_mb"] > by["0B+2L"]["j_per_mb"] * 0.8,
+        "amp_beats_smp_little_energy": by["1B+2L"]["j_per_mb"] < by["0B+4L"]["j_per_mb"] * 1.5,
+    }
+    print(fmt_table(rows, ["cores", "mbps", "j_per_mb"], "Fig 9: core scaling"))
+    print("   claims:", claims)
+    return {"rows": rows, "claims": claims}
+
+
+if __name__ == "__main__":
+    run()

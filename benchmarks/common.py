@@ -1,0 +1,67 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.engine import CStreamEngine
+from repro.core.strategies import (
+    EngineConfig,
+    ExecutionStrategy,
+    SchedulingStrategy,
+    StateStrategy,
+)
+from repro.data.datasets import make_dataset
+
+#: paper §4.1: metrics averaged over ~932800 bytes; quick mode uses ~1/4.
+def stream_for(name: str, quick: bool = True, **kw) -> np.ndarray:
+    n = (1 << 16) if quick else (1 << 18)
+    return make_dataset(name, n_tuples=n, **kw).stream()
+
+
+def engine_cfg(codec: str, quick: bool = True, **overrides) -> EngineConfig:
+    cfg = dict(
+        codec=codec,
+        execution=ExecutionStrategy.LAZY,
+        micro_batch_bytes=8192,
+        lanes=4,
+        state=StateStrategy.PRIVATE,
+        scheduling=SchedulingStrategy.ASYMMETRIC,
+        profile="rk3399_amp",
+    )
+    cfg.update(overrides)
+    return EngineConfig(**cfg)
+
+
+def fmt_table(rows: List[Dict], cols: List[str], title: str) -> str:
+    if not rows:
+        return f"== {title}: (no rows)"
+    widths = {c: max(len(c), max(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    out = [f"== {title}"]
+    out.append("  " + "  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        out.append("  " + "  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+    return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1000 or abs(v) < 0.01:
+            return f"{v:.3g}"
+        return f"{v:.3f}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,101 @@
+"""Architecture registry scaffolding: ArchSpec, shape sets, input specs.
+
+Every assigned architecture registers an ArchSpec with its published
+ModelConfig and the four LM shapes.  `input_specs()` returns
+ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no allocation)
+for the dry-run; smoke tests instantiate `spec.model.reduced()` instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+#: the assigned LM shape set (task spec): decode_*/long_* lower serve_step.
+TRAIN_4K = ShapeSpec("train_4k", "train", 4_096, 256)
+PREFILL_32K = ShapeSpec("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeSpec("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeSpec("long_500k", "decode", 524_288, 1)
+LM_SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+FULL_ATTN_SKIP = (
+    "long_500k needs sub-quadratic attention; pure full-attention arch — "
+    "skipped per task spec (DESIGN.md §6)"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    model: ModelConfig
+    source: str  # provenance tag from the assignment table
+    shapes: Tuple[ShapeSpec, ...] = LM_SHAPES
+    skips: Optional[Dict[str, str]] = None  # shape name -> reason
+    notes: str = ""
+
+    def runnable_shapes(self) -> Tuple[ShapeSpec, ...]:
+        skips = self.skips or {}
+        return tuple(s for s in self.shapes if s.name not in skips)
+
+
+_REGISTRY: Dict[str, Callable[[], ArchSpec]] = {}
+
+
+def register_arch(arch_id: str):
+    def deco(fn):
+        _REGISTRY[arch_id] = fn
+        return fn
+
+    return deco
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def arch_ids():
+    return sorted(_REGISTRY)
+
+
+# ------------------------------------------------------------ input specs --
+def input_specs(spec: ArchSpec, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape).
+
+    train:   {inputs, labels}           prefill: {inputs}
+    decode:  {inputs_t} (the KV cache operand is built by the launcher from
+             eval_shape(init_decode_cache) — it is carried state, not a feed).
+    For embedding-frontend archs (musicgen, pixtral) `inputs` are precomputed
+    frame/patch embeddings (B, S, d_model) — the stub mandated by the task."""
+    cfg = spec.model
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if cfg.input_kind == "embeddings":
+        def ins(b, s):
+            return jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        def ins(b, s):
+            return jax.ShapeDtypeStruct((b, s), tok)
+
+    if shape.kind == "train":
+        return {
+            "inputs": ins(B, S),
+            "labels": jax.ShapeDtypeStruct((B, S), tok),
+        }
+    if shape.kind == "prefill":
+        return {"inputs": ins(B, S)}
+    return {"inputs_t": ins(B, 1)}

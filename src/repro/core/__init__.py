@@ -1,0 +1,4 @@
+# The paper's primary contribution — the CStream stream-compression system:
+# codecs, parallelization strategies (execution/state/scheduling), planner,
+# energy model — with sibling subpackages for the substrates.
+from repro.core.algorithms import Codec, Encoded, codec_names, make_codec  # noqa: F401

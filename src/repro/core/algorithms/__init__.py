@@ -1,0 +1,39 @@
+"""CStream's ten compression algorithms (paper Table 1)."""
+from repro.core.algorithms.base import (
+    Codec,
+    CodecMeta,
+    Encoded,
+    codec_names,
+    make_codec,
+)
+
+# importing registers each codec
+from repro.core.algorithms import adpcm as _adpcm  # noqa: F401
+from repro.core.algorithms import dictionary as _dictionary  # noqa: F401
+from repro.core.algorithms import elias as _elias  # noqa: F401
+from repro.core.algorithms import leb128 as _leb128  # noqa: F401
+from repro.core.algorithms import pla as _pla  # noqa: F401
+from repro.core.algorithms import rle as _rle  # noqa: F401
+
+#: paper Table 1 names -> registry names
+PAPER_TABLE1 = {
+    "LEB128-NUQ": "leb128_nuq",
+    "ADPCM": "adpcm",
+    "UANUQ": "uanuq",
+    "UAADPCM": "uaadpcm",
+    "LEB128": "leb128",
+    "Delta-LEB128": "delta_leb128",
+    "Tcomp32": "tcomp32",
+    "Tdic32": "tdic32",
+    "RLE": "rle",
+    "PLA": "pla",
+}
+
+__all__ = [
+    "Codec",
+    "CodecMeta",
+    "Encoded",
+    "codec_names",
+    "make_codec",
+    "PAPER_TABLE1",
+]

@@ -1,0 +1,99 @@
+"""Codec API for CStream's ten compression algorithms (paper Table 1).
+
+Design (DESIGN.md §5):
+  * Streams are `(lanes, B)` uint32 tuple arrays. `lanes` are parallel
+    substreams, each with *private* state — the TPU mapping of the paper's
+    private-per-thread state (SIMD lanes inside a chip, shard_map across chips).
+  * Encoders are shape-stable: every input tuple owns one output symbol slot
+    `(codes[l, b, 2], bitlen[l, b])`; run-suppressing codecs (RLE, PLA) set
+    bitlen = 0 on suppressed slots. The bit-packer (core/bits.py, Pallas
+    kernels/bitpack.py) turns symbol slots into a dense bitstream.
+  * Stateful codecs carry a state pytree with leading dim `lanes`; `decode`
+    replays the same state evolution, so a decoder needs only the symbol
+    stream. `flush` emits the trailing state (e.g. RLE's open run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Encoded:
+    """Shape-stable encoder output: one symbol slot per input tuple."""
+
+    codes: jax.Array  # uint32[L, B, 2]  (low word, high word), LSB-first
+    bitlen: jax.Array  # int32[L, B]     (0 => suppressed slot)
+
+    @property
+    def total_bits(self) -> jax.Array:
+        return jnp.sum(self.bitlen)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecMeta:
+    name: str
+    lossy: bool
+    stateful: bool
+    state_kind: str  # 'none' | 'value' | 'dictionary' | 'model'
+    aligned: bool
+
+
+class Codec:
+    """Base class. Subclasses are immutable config holders; all methods are
+    jit-compatible pure functions of (state, data)."""
+
+    meta: CodecMeta
+
+    def init_state(self, lanes: int) -> Any:
+        return None
+
+    def encode(self, state: Any, x: jax.Array) -> Tuple[Any, Encoded]:
+        raise NotImplementedError
+
+    def decode(self, state: Any, enc: Encoded) -> Tuple[Any, jax.Array]:
+        """Replays encoder state; returns reconstructed uint32[L, B]."""
+        raise NotImplementedError
+
+    def flush(self, state: Any) -> Optional[Encoded]:
+        """Final symbols for trailing state (None if codec has none)."""
+        return None
+
+    # -- convenience ---------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self.meta.name
+
+    def roundtrip(self, x: jax.Array) -> jax.Array:
+        """Single-shot encode+decode starting from fresh state (testing)."""
+        lanes = x.shape[0]
+        st_e = self.init_state(lanes)
+        st_d = self.init_state(lanes)
+        _, enc = self.encode(st_e, x)
+        _, xhat = self.decode(st_d, enc)
+        return xhat
+
+
+_REGISTRY: Dict[str, Callable[..., Codec]] = {}
+
+
+def register(name: str):
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def make_codec(name: str, **kwargs) -> Codec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown codec {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def codec_names():
+    return sorted(_REGISTRY)

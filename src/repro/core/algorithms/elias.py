@@ -1,0 +1,68 @@
+"""Byte-unaligned stateless codecs: Tcomp32 (lossless) and UANUQ (lossy).
+
+Tcomp32 (paper §3.1.4) is simplified Elias coding: suppress leading zeros of
+each 32-bit tuple and emit a 6-bit length prefix followed by the significant
+bits *minus the implicit leading one* (Elias-gamma style, so 16-bit values
+cost 6+15=21 bits). Output is bit-granular (byte-unaligned) — the extra
+shift/mask work the paper pays on CPU cores is exactly what the carry-free
+scatter packer (core/bits.py) absorbs on TPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits
+from repro.core.algorithms import nuq
+from repro.core.algorithms.base import Codec, CodecMeta, Encoded, register
+
+U32 = jnp.uint32
+PREFIX_BITS = 6
+
+
+@register("tcomp32")
+class Tcomp32(Codec):
+    meta = CodecMeta("tcomp32", lossy=False, stateful=False, state_kind="none", aligned=False)
+
+    def encode(self, state: Any, x: jax.Array) -> Tuple[Any, Encoded]:
+        nbits = bits.bit_length(x)
+        nstored = jnp.maximum(nbits - 1, 0)  # MSB is implicit for v > 0
+        stored = x & bits.mask_bits(nstored)
+        # code = [6-bit length][stored bits], LSB-first
+        c0 = (nbits.astype(U32) & U32(0x3F)) | bits._safe_lshift(stored, PREFIX_BITS)
+        c1 = bits._safe_rshift(stored, 32 - PREFIX_BITS)
+        blen = PREFIX_BITS + nstored
+        return state, Encoded(jnp.stack([c0, c1], axis=-1), blen.astype(jnp.int32))
+
+    def decode(self, state: Any, enc: Encoded) -> Tuple[Any, jax.Array]:
+        c0 = enc.codes[..., 0]
+        c1 = enc.codes[..., 1]
+        nbits = (c0 & U32(0x3F)).astype(jnp.int32)
+        nstored = jnp.maximum(nbits - 1, 0)
+        stored = (bits._safe_rshift(c0, PREFIX_BITS) | bits._safe_lshift(c1, 32 - PREFIX_BITS)) & bits.mask_bits(nstored)
+        msb = jnp.where(nbits > 0, bits._safe_lshift(jnp.uint32(1), nstored), U32(0))
+        return state, stored | msb
+
+
+@register("uanuq")
+class UANUQ(Codec):
+    """Unaligned NUQ: mu-law quantize to exactly `qbits` bits per tuple."""
+
+    meta = CodecMeta("uanuq", lossy=True, stateful=False, state_kind="none", aligned=False)
+
+    def __init__(self, qbits: int = 12, vmax: float = float(2**32 - 1), mu: float = nuq.DEFAULT_MU):
+        self.qbits = qbits
+        self.vmax = vmax
+        self.mu = mu
+
+    def encode(self, state: Any, x: jax.Array) -> Tuple[Any, Encoded]:
+        q = nuq.mulaw_encode_unsigned(jnp.minimum(x, U32(int(self.vmax))), self.qbits, self.vmax, self.mu)
+        codes = jnp.stack([q, jnp.zeros_like(q)], axis=-1)
+        blen = jnp.full(x.shape, self.qbits, jnp.int32)
+        return state, Encoded(codes, blen)
+
+    def decode(self, state: Any, enc: Encoded) -> Tuple[Any, jax.Array]:
+        v = nuq.mulaw_decode_unsigned(enc.codes[..., 0], self.qbits, self.vmax, self.mu)
+        return state, v.astype(U32)

@@ -1,0 +1,113 @@
+"""LEB128 family: LEB128 (lossless, stateless, aligned), Delta-LEB128
+(lossless, value-state, aligned), LEB128-NUQ (lossy, stateless, aligned).
+
+LEB128 follows Android-Dex (paper Alg. 2): 7 data bits per byte, MSB is the
+continuation flag. The CPU byte-append loop becomes a fixed 5-step vectorized
+byte assembly (32-bit tuples need at most 5 groups) — shape-stable for TPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits
+from repro.core.algorithms import nuq
+from repro.core.algorithms.base import Codec, CodecMeta, Encoded, register
+
+U32 = jnp.uint32
+
+
+def leb128_encode_words(v: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Vectorized LEB128: returns (c0, c1, bitlen) for uint32 values."""
+    v = v.astype(U32)
+    nbytes = jnp.maximum(1, (bits.bit_length(v) + 6) // 7)
+    c0 = jnp.zeros_like(v)
+    c1 = jnp.zeros_like(v)
+    for i in range(5):
+        group = (v >> U32(7 * i)) & U32(0x7F)
+        cont = (nbytes > i + 1).astype(U32) << U32(7)
+        byte = jnp.where(nbytes > i, group | cont, U32(0))
+        if i < 4:
+            c0 = c0 | (byte << U32(8 * i))
+        else:
+            c1 = c1 | byte
+    return c0, c1, (nbytes * 8).astype(jnp.int32)
+
+
+def leb128_decode_words(codes: jax.Array, bitlen: jax.Array) -> jax.Array:
+    """Inverse of leb128_encode_words on symbol slots."""
+    c0 = codes[..., 0]
+    c1 = codes[..., 1]
+    nbytes = bitlen // 8
+    v = jnp.zeros_like(c0)
+    for i in range(5):
+        byte = (c0 >> U32(8 * i)) & U32(0xFF) if i < 4 else c1 & U32(0xFF)
+        group = byte & U32(0x7F)
+        v = v | jnp.where(nbytes > i, group << U32(7 * i), U32(0))
+    return v
+
+
+@register("leb128")
+class LEB128(Codec):
+    meta = CodecMeta("leb128", lossy=False, stateful=False, state_kind="none", aligned=True)
+
+    def encode(self, state: Any, x: jax.Array) -> Tuple[Any, Encoded]:
+        c0, c1, blen = leb128_encode_words(x)
+        return state, Encoded(jnp.stack([c0, c1], axis=-1), blen)
+
+    def decode(self, state: Any, enc: Encoded) -> Tuple[Any, jax.Array]:
+        return state, leb128_decode_words(enc.codes, enc.bitlen)
+
+
+@register("delta_leb128")
+class DeltaLEB128(Codec):
+    """Delta (value state, paper Alg. 4) + zigzag + LEB128.
+
+    The delta is computed in uint32 wraparound arithmetic, and zigzag is a
+    bijection, so the codec is lossless for arbitrary inputs. Within a
+    micro-batch the deltas are computed with a shifted difference (parallel);
+    the lane state carries the last value across micro-batches.
+    """
+
+    meta = CodecMeta("delta_leb128", lossy=False, stateful=True, state_kind="value", aligned=True)
+
+    def init_state(self, lanes: int):
+        return {"prev": jnp.zeros((lanes,), U32)}
+
+    def encode(self, state: Any, x: jax.Array) -> Tuple[Any, Encoded]:
+        prev = jnp.concatenate([state["prev"][:, None], x[:, :-1]], axis=1)
+        delta = x - prev  # uint32 wraparound
+        z = bits.zigzag_encode(delta.astype(jnp.int32))
+        c0, c1, blen = leb128_encode_words(z)
+        return {"prev": x[:, -1]}, Encoded(jnp.stack([c0, c1], axis=-1), blen)
+
+    def decode(self, state: Any, enc: Encoded) -> Tuple[Any, jax.Array]:
+        z = leb128_decode_words(enc.codes, enc.bitlen)
+        delta = bits.zigzag_decode(z).astype(U32)
+        # prefix-sum turns the sequential reconstruction into a parallel scan
+        x = state["prev"][:, None] + jnp.cumsum(delta, axis=1, dtype=U32)
+        return {"prev": x[:, -1]}, x
+
+
+@register("leb128_nuq")
+class LEB128NUQ(Codec):
+    """Lossy: mu-law NUQ of the value, then LEB128 of the quantized code."""
+
+    meta = CodecMeta("leb128_nuq", lossy=True, stateful=False, state_kind="none", aligned=True)
+
+    def __init__(self, qbits: int = 8, vmax: float = float(2**32 - 1), mu: float = nuq.DEFAULT_MU):
+        self.qbits = qbits
+        self.vmax = vmax
+        self.mu = mu
+
+    def encode(self, state: Any, x: jax.Array) -> Tuple[Any, Encoded]:
+        q = nuq.mulaw_encode_unsigned(jnp.minimum(x, U32(int(self.vmax))), self.qbits, self.vmax, self.mu)
+        c0, c1, blen = leb128_encode_words(q)
+        return state, Encoded(jnp.stack([c0, c1], axis=-1), blen)
+
+    def decode(self, state: Any, enc: Encoded) -> Tuple[Any, jax.Array]:
+        q = leb128_decode_words(enc.codes, enc.bitlen)
+        v = nuq.mulaw_decode_unsigned(q, self.qbits, self.vmax, self.mu)
+        return state, v.astype(U32)

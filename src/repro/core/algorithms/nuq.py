@@ -1,0 +1,55 @@
+"""Non-uniform quantization (NUQ) — the lossy core shared by LEB128-NUQ,
+UANUQ, ADPCM and UAADPCM.
+
+The paper uses non-uniform quantization [27] to trade fidelity for ratio. We
+implement the classic mu-law companding quantizer: fine resolution near zero,
+log-spaced elsewhere — matching the paper's observation that IoT values (and
+deltas especially) concentrate at small magnitudes. Fully vectorized; maps to
+the TPU VPU (transcendentals) and is also provided as a fused Pallas kernel
+(kernels/delta_nuq.py) for the ADPCM hot loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_MU = 255.0
+
+
+def mulaw_encode_unsigned(v: jax.Array, qbits: int, vmax: float, mu: float = DEFAULT_MU) -> jax.Array:
+    """Quantize unsigned values in [0, vmax] to `qbits`-bit codes."""
+    x = v.astype(jnp.float32) / jnp.float32(vmax)
+    y = jnp.log1p(mu * x) / jnp.log1p(mu)
+    levels = (1 << qbits) - 1
+    return jnp.clip(jnp.round(y * levels), 0, levels).astype(jnp.uint32)
+
+
+def mulaw_decode_unsigned(
+    code: jax.Array, qbits: int, vmax: float, mu: float = DEFAULT_MU, round_int: bool = True
+) -> jax.Array:
+    """Dequantize. `round_int=True` snaps to the integer grid (uint32 tuple
+    codecs); `round_int=False` keeps the continuous value (float substreams,
+    e.g. the gradient/delta kernels)."""
+    levels = (1 << qbits) - 1
+    y = code.astype(jnp.float32) / jnp.float32(levels)
+    x = (jnp.power(1.0 + mu, y) - 1.0) / mu
+    if round_int:
+        return jnp.clip(jnp.round(x * vmax), 0, vmax).astype(jnp.float32)
+    return (x * vmax).astype(jnp.float32)
+
+
+def mulaw_encode_signed(d: jax.Array, qbits: int, dmax: float, mu: float = DEFAULT_MU) -> jax.Array:
+    """Quantize signed values in [-dmax, dmax]: 1 sign bit + (qbits-1) magnitude."""
+    d = d.astype(jnp.float32)
+    sign = (d < 0).astype(jnp.uint32)
+    mag = mulaw_encode_unsigned(jnp.abs(d), qbits - 1, dmax, mu)
+    return (sign << (qbits - 1)) | mag
+
+
+def mulaw_decode_signed(
+    code: jax.Array, qbits: int, dmax: float, mu: float = DEFAULT_MU, round_int: bool = True
+) -> jax.Array:
+    sign_bit = (code >> (qbits - 1)) & jnp.uint32(1)
+    mag_mask = jnp.uint32((1 << (qbits - 1)) - 1)
+    mag = mulaw_decode_unsigned(code & mag_mask, qbits - 1, dmax, mu, round_int=round_int)
+    return jnp.where(sign_bit == 1, -mag, mag)

@@ -1,0 +1,139 @@
+"""Bit-level utilities for stream compression on TPU.
+
+TPU adaptation note (DESIGN.md §5): variable-length bit output is realized with
+carry-free scatter-add packing. Every emitted symbol owns a *disjoint* bit range
+in the output stream, so integer ADD of the shifted contributions is exactly
+bitwise OR — this turns sequential bit-appending (the CPU formulation in the
+paper) into a data-parallel scatter, which XLA maps onto the VPU.
+
+All math is done on uint32 words (pairs of words for codes up to 64 bits) so the
+package never requires jax_enable_x64.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+# numpy scalars: plain literals to the tracer (never captured-constant arrays,
+# which Pallas kernels reject)
+_ONE = np.uint32(1)
+_ZERO = np.uint32(0)
+
+
+def bit_length(v: jax.Array) -> jax.Array:
+    """Number of significant bits in each uint32 (0 for 0). Vectorized CLZ."""
+    v = v.astype(U32)
+    n = jnp.zeros(v.shape, jnp.int32)
+    for shift in (16, 8, 4, 2, 1):
+        big = v >= (_ONE << shift)
+        n = jnp.where(big, n + shift, n)
+        v = jnp.where(big, v >> shift, v)
+    return n + (v > 0).astype(jnp.int32)
+
+
+def _safe_rshift(x: jax.Array, s: jax.Array) -> jax.Array:
+    """x >> s with s possibly 32 (returns 0), avoiding UB shifts."""
+    s = jnp.asarray(s)
+    full = s >= 32
+    s_eff = jnp.where(full, 0, s).astype(U32)
+    return jnp.where(full, _ZERO, x >> s_eff)
+
+
+def _safe_lshift(x: jax.Array, s: jax.Array) -> jax.Array:
+    s = jnp.asarray(s)
+    full = s >= 32
+    s_eff = jnp.where(full, 0, s).astype(U32)
+    return jnp.where(full, _ZERO, x << s_eff)
+
+
+def mask_bits(nbits: jax.Array) -> jax.Array:
+    """Low-`nbits` mask as uint32; nbits may be 0..32."""
+    nbits = jnp.asarray(nbits)
+    return jnp.where(
+        nbits >= 32,
+        np.uint32(0xFFFFFFFF),
+        _safe_lshift(jnp.asarray(1, U32), nbits) - _ONE,
+    )
+
+
+def code64_shift(c0: jax.Array, c1: jax.Array, s: jax.Array):
+    """Shift the 64-bit code (c0 = low word, c1 = high word) left by s (0..31).
+
+    Returns the three uint32 words (lo, mid, hi) of the 96-bit result.
+    """
+    s = s.astype(jnp.int32)
+    r = 32 - s
+    lo = _safe_lshift(c0, s)
+    mid = _safe_rshift(c0, r) | _safe_lshift(c1, s)
+    hi = _safe_rshift(c1, r)
+    return lo, mid, hi
+
+
+def pack_bits(codes: jax.Array, bitlen: jax.Array, out_words: int):
+    """Pack variable-length codes into a dense bitstream.
+
+    Args:
+      codes: uint32[N, 2] — low/high words of each symbol's code (LSB-first).
+      bitlen: int32[N] — number of valid bits per symbol (0 = not emitted).
+      out_words: static size of the output word buffer (worst case).
+
+    Returns:
+      words: uint32[out_words] — packed bitstream (LSB-first within words).
+      total_bits: int32 scalar.
+      offsets: int32[N] — bit offset of each symbol (for parallel unpack/tests).
+    """
+    bitlen = bitlen.astype(jnp.int32)
+    offsets = jnp.cumsum(bitlen) - bitlen  # exclusive scan
+    total_bits = offsets[-1] + bitlen[-1] if bitlen.shape[0] else jnp.int32(0)
+
+    c0 = codes[:, 0] & mask_bits(jnp.minimum(bitlen, 32))
+    c1 = codes[:, 1] & mask_bits(jnp.maximum(bitlen - 32, 0))
+    w = (offsets // 32).astype(jnp.int32)
+    s = (offsets % 32).astype(jnp.int32)
+    lo, mid, hi = code64_shift(c0, c1, s)
+    # Suppressed symbols (bitlen==0) contribute nothing.
+    emit = bitlen > 0
+    lo = jnp.where(emit, lo, _ZERO)
+    mid = jnp.where(emit, mid, _ZERO)
+    hi = jnp.where(emit, hi, _ZERO)
+
+    words = jnp.zeros((out_words,), U32)
+    # Disjoint bit ranges => ADD == OR (no carries possible).
+    words = words.at[w].add(lo, mode="drop")
+    words = words.at[w + 1].add(mid, mode="drop")
+    words = words.at[w + 2].add(hi, mode="drop")
+    return words, total_bits, offsets
+
+
+def extract_bits(words: jax.Array, offsets: jax.Array, nbits: jax.Array):
+    """Extract `nbits`-long fields at `offsets` from a packed bitstream.
+
+    Returns uint32[N, 2] codes (low/high words). nbits may be 0..64.
+    """
+    offsets = offsets.astype(jnp.int32)
+    nbits = nbits.astype(jnp.int32)
+    w = offsets // 32
+    s = offsets % 32
+    n = words.shape[0]
+    g0 = words[jnp.clip(w, 0, n - 1)]
+    g1 = jnp.where(w + 1 < n, words[jnp.clip(w + 1, 0, n - 1)], _ZERO)
+    g2 = jnp.where(w + 2 < n, words[jnp.clip(w + 2, 0, n - 1)], _ZERO)
+    r = 32 - s
+    lo = _safe_rshift(g0, s) | _safe_lshift(g1, r)
+    hi = _safe_rshift(g1, s) | _safe_lshift(g2, r)
+    lo = lo & mask_bits(jnp.minimum(nbits, 32))
+    hi = hi & mask_bits(jnp.maximum(nbits - 32, 0))
+    return jnp.stack([lo, hi], axis=-1)
+
+
+def zigzag_encode(d: jax.Array) -> jax.Array:
+    """Map signed int32 deltas to uint32 so small magnitudes are small."""
+    d = d.astype(jnp.int32)
+    return ((d << 1) ^ (d >> 31)).astype(U32)
+
+
+def zigzag_decode(z: jax.Array) -> jax.Array:
+    z = z.astype(U32)
+    return ((z >> 1) ^ (-(z & _ONE)).astype(U32)).astype(jnp.int32)

@@ -1,0 +1,118 @@
+"""Energy accounting — the TPU adaptation of the paper's INA226 energy meter.
+
+The paper measures Joules with custom hardware (§3.5). Neither that meter nor
+DVFS exists for a TPU pod (and this container is CPU-only), so energy here is
+an *analytic model* with two modes, both documented as models rather than
+measurements (DESIGN.md §2):
+
+  * ``edge`` mode — reproduces the paper's evaluation structure: per-core
+    active/idle power × busy/idle time, for the hardware profiles of Table 2
+    (RK3399 AMP/SMP, H2+, Z8350). Speeds follow the paper's roofline finding
+    (A72 big core ≈ 2× A53 little core, Fig 6a).
+  * ``tpu`` mode — energy-per-step from the dry-run roofline terms:
+    E = FLOPs·e_flop + HBM_bytes·e_hbm + ICI_bytes·e_ici + P_static·t.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreSpec:
+    kind: str  # 'big' | 'little' | 'smp'
+    speed: float  # relative instructions/s at reference frequency
+    p_active_w: float
+    p_idle_w: float
+    l1d_bytes: int = 32 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    cores: List[CoreSpec]
+
+    @property
+    def total_l1d_bytes(self) -> int:
+        return sum(c.l1d_bytes for c in self.cores)
+
+    @property
+    def speeds(self) -> List[float]:
+        return [c.speed for c in self.cores]
+
+
+def _amp(n_big, n_little, sp_big=2.0, sp_little=1.0):
+    return [CoreSpec("big", sp_big, 1.5, 0.15)] * n_big + [
+        CoreSpec("little", sp_little, 0.5, 0.08)
+    ] * n_little
+
+
+#: Table 2 processors as profiles (speeds normalized to an A53@1.416GHz).
+RK3399_AMP = HardwareProfile("rk3399_amp", _amp(2, 4))
+RK3399_SMP_BIG = HardwareProfile("rk3399_smp_big", _amp(2, 0))
+RK3399_SMP_LITTLE = HardwareProfile("rk3399_smp_little", _amp(0, 4))
+H2PLUS = HardwareProfile(  # 32-bit RISC: ~0.6x per-word efficiency on 32b regs
+    "h2plus", [CoreSpec("smp", 0.6, 0.45, 0.08)] * 4
+)
+Z8350 = HardwareProfile(  # CISC: higher unit energy (paper Fig 7)
+    "z8350", [CoreSpec("smp", 1.1, 1.0, 0.25, l1d_bytes=24 * 1024)] * 4
+)
+
+PROFILES = {
+    p.name: p
+    for p in (RK3399_AMP, RK3399_SMP_BIG, RK3399_SMP_LITTLE, H2PLUS, Z8350)
+}
+
+
+def edge_energy_j(
+    profile: HardwareProfile,
+    busy_s: Sequence[float],
+    makespan_s: float,
+    spin_wait: bool = False,
+) -> float:
+    """Per-core busy times + idle remainder -> Joules (paper §4.1 procedure:
+    static consumption is measured separately and excluded; this is the
+    dynamic compression energy).
+
+    spin_wait=True models barrier-synchronized uniform scheduling, where a
+    core that finished its equal share burns near-active power spinning at
+    the barrier (paper Fig 13b: big cores 'waiting for little cores' — the
+    measured +13.4% energy of symmetric scheduling comes from this)."""
+    assert len(busy_s) <= len(profile.cores)
+    e = 0.0
+    for core, b in zip(profile.cores, busy_s):
+        b = min(b, makespan_s)
+        p_wait = 0.75 * core.p_active_w if spin_wait else core.p_idle_w
+        e += core.p_active_w * b + p_wait * (makespan_s - b)
+    return e
+
+
+# ---------------------------------------------------------------- TPU mode --
+@dataclasses.dataclass(frozen=True)
+class TpuChip:
+    """v5e-class modeling constants (per chip). peak numbers are the roofline
+    constants mandated for this reproduction; energy coefficients are
+    published-order-of-magnitude modeling values."""
+
+    peak_flops: float = 197e12  # bf16 FLOP/s
+    hbm_bw: float = 819e9  # B/s
+    ici_bw: float = 50e9  # B/s per link
+    vmem_bytes: int = 128 * 1024 * 1024
+    e_flop_j: float = 0.55e-12
+    e_hbm_j: float = 12e-12
+    e_ici_j: float = 30e-12
+    p_static_w: float = 40.0
+
+
+V5E = TpuChip()
+
+
+def tpu_energy_j(
+    flops: float, hbm_bytes: float, ici_bytes: float, wall_s: float, chip: TpuChip = V5E
+) -> float:
+    return (
+        flops * chip.e_flop_j
+        + hbm_bytes * chip.e_hbm_j
+        + ici_bytes * chip.e_ici_j
+        + chip.p_static_w * wall_s
+    )

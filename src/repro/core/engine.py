@@ -1,0 +1,285 @@
+"""CStreamEngine — parallel stream compression with pluggable execution,
+state-management and scheduling strategies (paper §3.3–3.4).
+
+Layering (DESIGN.md §2):
+  * the *vectorized execution layer* runs the codec over `lanes` private
+    substreams and bit-packs symbols — measured wall-clock throughput;
+  * the *worker schedule layer* maps micro-batch blocks onto a hardware
+    profile's cores (uniform vs asymmetry-aware) and yields modeled makespan,
+    per-tuple latency and energy — the paper's evaluation axes. On real
+    asymmetric silicon the same assignment drives thread placement; on this
+    CPU-only container the speeds come from the hardware profile (documented
+    simulation, constants from paper Fig 6a).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bits, metrics
+from repro.core.algorithms import Encoded, make_codec
+from repro.core.calibration import calibrated_kwargs
+from repro.core.energy import edge_energy_j
+from repro.core.strategies import (
+    EngineConfig,
+    ExecutionStrategy,
+    SchedulingStrategy,
+    StateStrategy,
+    schedule_blocks,
+)
+
+
+@dataclasses.dataclass
+class CompressResult:
+    stats: metrics.RunStats
+    total_bits: float
+    n_tuples: int
+    per_block_bits: np.ndarray
+    makespan_s: float
+    busy_s: List[float]
+    blocked_s: float  # dispatch/sync overhead (paper Fig 10b 'blocked time')
+    running_s: float  # pure compression time
+
+
+def _merge_shared_dictionary(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Deterministic cross-lane dictionary merge (shared-state strategy).
+
+    All lanes converge to the same table after every micro-batch with true
+    last-writer-wins semantics (per-slot write timestamps) — the batched
+    equivalent of the paper's lock-guarded shared table. Decoder-replayable;
+    the paper's lock contention becomes this all-lane reduction (and an
+    all-gather across devices in the sharded engine)."""
+    lanes, ts_size = state["table"].shape
+    key = jnp.where(state["valid"], state["ts"], -1)  # (L, TS)
+    best_lane = jnp.argmax(key, axis=0)  # (TS,)
+    slot = jnp.arange(ts_size)
+    table = state["table"][best_lane, slot]
+    valid = jnp.any(state["valid"], axis=0)
+    ts = key[best_lane, slot]
+    clock = jnp.broadcast_to(jnp.max(state["clock"]), (lanes,))
+    return {
+        "table": jnp.broadcast_to(table, (lanes, ts_size)),
+        "valid": jnp.broadcast_to(valid, (lanes, ts_size)),
+        "ts": jnp.broadcast_to(ts, (lanes, ts_size)),
+        "clock": clock,
+    }
+
+
+class CStreamEngine:
+    def __init__(self, config: EngineConfig, sample: Optional[np.ndarray] = None):
+        self.config = config
+        kwargs = dict(config.codec_kwargs)
+        if config.calibrate and sample is not None:
+            auto = calibrated_kwargs(config.codec, sample)
+            for k, v in auto.items():
+                kwargs.setdefault(k, v)
+        self.codec = make_codec(config.codec, **kwargs)
+        self._step = jax.jit(self._step_impl)
+
+    # ------------------------------------------------------------ core step
+    def _step_impl(self, state: Any, block: jax.Array):
+        """Encode one micro-batch block (lanes, B) and pack its bitstream."""
+        state, enc = self.codec.encode(state, block)
+        if (
+            self.config.state == StateStrategy.SHARED
+            and self.codec.meta.state_kind == "dictionary"
+        ):
+            state = _merge_shared_dictionary(state)
+        lanes, B = block.shape
+        flat_codes = enc.codes.reshape(lanes * B, 2)
+        flat_blen = enc.bitlen.reshape(lanes * B)
+        out_words = lanes * B * 2 + 2
+        words, total_bits, _ = bits.pack_bits(flat_codes, flat_blen, out_words)
+        return state, words, total_bits
+
+    # ------------------------------------------------------------- shaping
+    def _block_tuples(self) -> int:
+        cfg = self.config
+        if cfg.execution == ExecutionStrategy.EAGER:
+            return cfg.lanes  # one tuple per lane per dispatch
+        per_lane = max(1, cfg.micro_batch_bytes // 4 // cfg.lanes)
+        if self.codec.name == "pla":
+            w = self.codec.window
+            per_lane = max(w, (per_lane // w) * w)
+        return per_lane * cfg.lanes
+
+    def _blocks(self, values: np.ndarray) -> np.ndarray:
+        bt = self._block_tuples()
+        n = (len(values) // bt) * bt
+        if n == 0:
+            raise ValueError(f"stream shorter than one micro-batch ({bt} tuples)")
+        lanes = self.config.lanes
+        return values[:n].reshape(-1, lanes, bt // lanes)
+
+    # ------------------------------------------------------------- compress
+    def compress(
+        self,
+        values: np.ndarray,
+        arrival_rate_tps: Optional[float] = None,
+        max_blocks: Optional[int] = None,
+        breakdown: bool = False,
+    ) -> CompressResult:
+        cfg = self.config
+        blocks = self._blocks(np.asarray(values, np.uint32))
+        if max_blocks is not None:
+            blocks = blocks[:max_blocks]
+        blocks_dev = jnp.asarray(blocks)
+        n_blocks, lanes, B = blocks.shape
+        n_tuples = n_blocks * lanes * B
+
+        state = self.codec.init_state(lanes)
+        # warm-up (compile) outside the timed region
+        w_state, _, _ = jax.block_until_ready(self._step(state, blocks_dev[0]))
+
+        state = self.codec.init_state(lanes)
+        bits_acc = []
+        t0 = time.perf_counter()
+        for i in range(n_blocks):
+            state, words, total_bits = self._step(state, blocks_dev[i])
+            bits_acc.append(total_bits)
+        jax.block_until_ready(bits_acc)
+        wall = time.perf_counter() - t0
+
+        per_block_bits = np.array([float(b) for b in bits_acc])
+        total_bits = float(per_block_bits.sum())
+
+        # ---- schedule layer: map blocks onto the hardware profile ---------
+        profile = cfg.hardware()
+        per_block_cost = wall / n_blocks  # measured mean cost at speed 1.0
+        costs = per_block_cost * per_block_bits / max(per_block_bits.mean(), 1.0)
+        speeds = profile.speeds
+        _, busy, makespan = schedule_blocks(list(costs), speeds, cfg.scheduling)
+        # uniform scheduling implies barrier spin-wait (paper Fig 13b)
+        energy = edge_energy_j(
+            profile, busy, makespan,
+            spin_wait=cfg.scheduling == SchedulingStrategy.UNIFORM,
+        )
+
+        # ---- latency model (paper §4.1 end-to-end latency) -----------------
+        latency = None
+        if arrival_rate_tps:
+            batch_fill_s = (lanes * B) / arrival_rate_tps
+            proc = per_block_cost
+            # tuples wait on average half the fill window + processing, plus
+            # queueing if the server is slower than the arrival rate
+            rho = proc / max(batch_fill_s, 1e-12)
+            queue = 0.5 * proc * rho / max(1.0 - rho, 1e-2) if rho < 1 else 10 * proc
+            latency = batch_fill_s / 2.0 + proc + queue
+
+        input_bytes = n_tuples * 4
+        stats = metrics.RunStats(
+            name=f"{self.codec.name}/{cfg.execution.value}/{cfg.state.value}/{cfg.scheduling.value}",
+            input_bytes=input_bytes,
+            output_bytes=total_bits / 8.0,
+            wall_s=wall,
+            ratio=metrics.compression_ratio(input_bytes * 8, total_bits),
+            latency_s=latency,
+            energy_j=energy,
+        )
+        # Fig 10b breakdown: 'running' = pure compression compute, measured by
+        # replaying all blocks under a single dispatch (lax.scan); 'blocked' =
+        # per-block dispatch/synchronization overhead — the cost eager
+        # execution pays per tuple (paper: partitioning/sync/cache thrashing).
+        if breakdown:
+            def scan_all(st, blks):
+                def body(s, blk):
+                    s, _, tb = self._step_impl(s, blk)
+                    return s, tb
+                _, tbs = jax.lax.scan(body, st, blks)
+                return tbs
+            scan_jit = jax.jit(scan_all)
+            st0 = self.codec.init_state(lanes)
+            jax.block_until_ready(scan_jit(st0, blocks_dev))  # compile
+            t1 = time.perf_counter()
+            jax.block_until_ready(scan_jit(st0, blocks_dev))
+            running = min(time.perf_counter() - t1, wall)
+        else:
+            running = min(per_block_cost * n_blocks, wall)
+        return CompressResult(
+            stats=stats,
+            total_bits=total_bits,
+            n_tuples=n_tuples,
+            per_block_bits=per_block_bits,
+            makespan_s=makespan,
+            busy_s=busy,
+            blocked_s=max(wall - running, 0.0),
+            running_s=running,
+        )
+
+    # -------------------------------------------------- lossy fidelity check
+    def roundtrip_nrmse(self, values: np.ndarray) -> float:
+        blocks = self._blocks(np.asarray(values, np.uint32))
+        st_e = self.codec.init_state(self.config.lanes)
+        st_d = self.codec.init_state(self.config.lanes)
+        outs = []
+        for i in range(blocks.shape[0]):
+            st_e, enc = self.codec.encode(st_e, jnp.asarray(blocks[i]))
+            st_d, xhat = self.codec.decode(st_d, enc)
+            outs.append(np.asarray(xhat))
+        xhat = np.stack(outs)
+        return metrics.nrmse(blocks, xhat)
+
+
+# ----------------------------------------------------------- sharded engine --
+def sharded_compress_fn(
+    codec_name: str,
+    mesh,
+    axis: str = "data",
+    shared_state: bool = False,
+    **codec_kwargs,
+):
+    """Build a pjit-able compression step distributed over a mesh axis.
+
+    Private mode (default): each device owns its lane group and codec state —
+    the paper's private-state strategy at pod scale, zero per-batch
+    collectives beyond the bit-count psum. Shared mode (dictionary codecs):
+    tables are merged across devices every micro-batch via pmax — the
+    collective-latency analogue of the paper's lock contention, visible in
+    the dry-run roofline. Used by launch/dryrun.py and the gradient path.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    codec = make_codec(codec_name, **codec_kwargs)
+
+    def shard_step(state, block):  # per-device view: (lanes_local, B)
+        state, enc = codec.encode(state, block)
+        if shared_state and codec.meta.state_kind == "dictionary":
+            state = _merge_shared_dictionary(state)  # lanes within the device
+            # cross-device last-writer-wins: the collective analogue of the
+            # paper's lock-guarded shared table
+            tables = jax.lax.all_gather(state["table"][0], axis)  # (ndev, TS)
+            valids = jax.lax.all_gather(state["valid"][0], axis)
+            tss = jax.lax.all_gather(state["ts"][0], axis)
+            key = jnp.where(valids, tss, -1)
+            best = jnp.argmax(key, axis=0)
+            slot = jnp.arange(key.shape[-1])
+            lanes = state["table"].shape[0]
+            state = {
+                "table": jnp.broadcast_to(tables[best, slot], (lanes, key.shape[-1])),
+                "valid": jnp.broadcast_to(jnp.any(valids, 0), (lanes, key.shape[-1])),
+                "ts": jnp.broadcast_to(key[best, slot], (lanes, key.shape[-1])),
+                "clock": jnp.broadcast_to(jax.lax.pmax(state["clock"][0], axis), (lanes,)),
+            }
+        lanes, B = block.shape
+        words, total_bits, _ = bits.pack_bits(
+            enc.codes.reshape(lanes * B, 2),
+            enc.bitlen.reshape(lanes * B),
+            lanes * B * 2 + 2,
+        )
+        total_bits = jax.lax.psum(total_bits, axis)
+        return state, words, total_bits
+
+    return jax.jit(
+        jax.shard_map(
+            shard_step,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis, None)),
+            out_specs=(P(axis), P(axis), P()),
+        )
+    )

@@ -1,0 +1,66 @@
+"""Evaluation metrics (paper §4.1): compression ratio, NRMSE, throughput,
+end-to-end latency, and the analytic energy estimate."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def compression_ratio(input_bits: float, output_bits: float) -> float:
+    """loaded data size / compressed data size (paper §2.1)."""
+    return float(input_bits) / max(float(output_bits), 1.0)
+
+
+def nrmse(x: jax.Array, xhat: jax.Array) -> float:
+    """NRMSE = sqrt(mean((x - y)^2)) / mean(x)  (paper §4.1)."""
+    xf = np.asarray(x, dtype=np.float64)
+    yf = np.asarray(xhat, dtype=np.float64)
+    denom = max(abs(xf.mean()), 1e-12)
+    return float(np.sqrt(np.mean((xf - yf) ** 2)) / denom)
+
+
+@dataclasses.dataclass
+class RunStats:
+    """One compression run's measurements."""
+
+    name: str
+    input_bytes: int
+    output_bytes: float
+    wall_s: float
+    ratio: float
+    nrmse: Optional[float] = None
+    latency_s: Optional[float] = None  # avg end-to-end per-tuple latency
+    energy_j: Optional[float] = None
+
+    @property
+    def throughput_mbps(self) -> float:
+        return self.input_bytes / 1e6 / max(self.wall_s, 1e-12)
+
+    def row(self) -> str:
+        parts = [
+            self.name,
+            f"{self.ratio:.3f}",
+            f"{self.throughput_mbps:.2f}MB/s",
+            f"nrmse={self.nrmse:.4f}" if self.nrmse is not None else "lossless",
+        ]
+        if self.latency_s is not None:
+            parts.append(f"lat={self.latency_s*1e3:.3f}ms")
+        if self.energy_j is not None:
+            parts.append(f"E={self.energy_j:.4f}J")
+        return ",".join(parts)
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
+    """Wall-time a jitted function (block_until_ready), return (result, secs)."""
+    result = None
+    for _ in range(warmup):
+        result = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = jax.block_until_ready(fn(*args))
+    return result, (time.perf_counter() - t0) / iters

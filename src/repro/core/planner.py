@@ -1,0 +1,120 @@
+"""Solution-space planner (paper §5.1, Fig 4).
+
+Enumerates (codec x strategy x hardware-knob) candidates, measures each on a
+sample window, filters by the user's constraints (min ratio, max NRMSE,
+energy budget) and picks by lexicographic priority — reproducing the paper's
+end-to-end case study where CStream chooses PLA + private state +
+asymmetry-aware scheduling + cache-sized micro-batches (point A) over the
+careless configuration (point B).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import CStreamEngine
+from repro.core.strategies import (
+    EngineConfig,
+    ExecutionStrategy,
+    SchedulingStrategy,
+    StateStrategy,
+    cache_aware_batch_bytes,
+)
+from repro.core import energy as energy_mod
+
+
+@dataclasses.dataclass
+class Constraints:
+    min_ratio: float = 1.0
+    max_nrmse: float = 1.0
+    max_energy_j_per_mb: float = float("inf")
+    profile: str = "rk3399_amp"
+
+
+@dataclasses.dataclass
+class SolutionPoint:
+    config: EngineConfig
+    ratio: float
+    nrmse: float
+    throughput_mbps: float
+    latency_s: float
+    energy_j_per_mb: float
+
+    def feasible(self, c: Constraints) -> bool:
+        return (
+            self.ratio >= c.min_ratio
+            and self.nrmse <= c.max_nrmse
+            and self.energy_j_per_mb <= c.max_energy_j_per_mb
+        )
+
+
+DEFAULT_CANDIDATES: List[Dict] = [
+    {"codec": "pla", "codec_kwargs": {"window": 16}},
+    {"codec": "pla", "codec_kwargs": {"window": 8}},
+    {"codec": "uanuq", "codec_kwargs": {"qbits": 12}},
+    {"codec": "uaadpcm", "codec_kwargs": {"qbits": 8}},
+    {"codec": "adpcm"},
+    {"codec": "leb128_nuq"},
+    {"codec": "delta_leb128"},
+    {"codec": "tcomp32"},
+    {"codec": "tdic32"},
+    {"codec": "leb128"},
+    {"codec": "rle"},
+]
+
+
+def evaluate(
+    cfg: EngineConfig, stream: np.ndarray, arrival_rate_tps: float, max_blocks: int = 16
+) -> SolutionPoint:
+    engine = CStreamEngine(cfg, sample=stream[: 1 << 14])
+    res = engine.compress(stream, arrival_rate_tps=arrival_rate_tps, max_blocks=max_blocks)
+    err = engine.roundtrip_nrmse(stream[: engine._block_tuples() * 4]) if engine.codec.meta.lossy else 0.0
+    mb = res.stats.input_bytes / 1e6
+    return SolutionPoint(
+        config=cfg,
+        ratio=res.stats.ratio,
+        nrmse=err,
+        throughput_mbps=res.stats.input_bytes / 1e6 / max(res.makespan_s, 1e-12),
+        latency_s=res.stats.latency_s or 0.0,
+        energy_j_per_mb=(res.stats.energy_j or 0.0) / max(mb, 1e-12),
+    )
+
+
+def enumerate_solutions(
+    stream: np.ndarray,
+    arrival_rate_tps: float,
+    constraints: Constraints,
+    candidates: Sequence[Dict] = tuple(DEFAULT_CANDIDATES),
+    lanes: int = 4,
+) -> List[SolutionPoint]:
+    profile = energy_mod.PROFILES[constraints.profile]
+    points = []
+    for cand in candidates:
+        cfg = EngineConfig(
+            codec=cand["codec"],
+            codec_kwargs=cand.get("codec_kwargs", {}),
+            execution=ExecutionStrategy.LAZY,
+            micro_batch_bytes=cache_aware_batch_bytes(profile),
+            lanes=lanes,
+            state=StateStrategy.PRIVATE,
+            scheduling=SchedulingStrategy.ASYMMETRIC,
+            profile=constraints.profile,
+        )
+        try:
+            points.append(evaluate(cfg, stream, arrival_rate_tps))
+        except ValueError:
+            continue
+    return points
+
+
+def choose(
+    points: List[SolutionPoint],
+    constraints: Constraints,
+    priority: Tuple[str, ...] = ("ratio", "throughput_mbps"),
+) -> Optional[SolutionPoint]:
+    feasible = [p for p in points if p.feasible(constraints)]
+    if not feasible:
+        return None
+    return max(feasible, key=lambda p: tuple(getattr(p, k) for k in priority))

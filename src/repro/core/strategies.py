@@ -1,0 +1,96 @@
+"""Parallelization strategies (paper §3.4): execution, state management,
+scheduling — plus the cache-aware micro-batch planner."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core import energy as energy_mod
+
+
+class ExecutionStrategy(str, enum.Enum):
+    EAGER = "eager"  # per-tuple, streaming-faithful, poor HW utilization
+    LAZY = "lazy"  # micro-batched (paper default: 400B; tuned per Fig 11)
+
+
+class StateStrategy(str, enum.Enum):
+    PRIVATE = "private"  # per-worker state, zero coordination (paper pick)
+    SHARED = "shared"  # merged dictionary per micro-batch (collective cost)
+
+
+class SchedulingStrategy(str, enum.Enum):
+    UNIFORM = "uniform"  # balanced partition / equal distribution [39]
+    ASYMMETRIC = "asymmetric"  # asymmetry-aware (paper [4]): cost-model LPT
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    codec: str = "tcomp32"
+    codec_kwargs: Dict = dataclasses.field(default_factory=dict)
+    execution: ExecutionStrategy = ExecutionStrategy.LAZY
+    micro_batch_bytes: int = 8192
+    lanes: int = 4  # parallel substreams (threads -> SIMD lanes/devices)
+    state: StateStrategy = StateStrategy.PRIVATE
+    scheduling: SchedulingStrategy = SchedulingStrategy.ASYMMETRIC
+    profile: str = "rk3399_amp"
+    calibrate: bool = True
+
+    def hardware(self) -> energy_mod.HardwareProfile:
+        return energy_mod.PROFILES[self.profile]
+
+
+def cache_aware_batch_bytes(profile: energy_mod.HardwareProfile) -> int:
+    """Paper Fig 11: optimal micro-batch ~= total L1D of the active cores.
+
+    On TPU the same rule holds with VMEM as the cache level (used by the
+    Pallas kernels' BlockSpec sizing)."""
+    return profile.total_l1d_bytes
+
+
+def vmem_aware_block_tuples(chip: energy_mod.TpuChip = energy_mod.V5E, dtype_bytes: int = 4) -> int:
+    """Block size such that (input + codes + bitstream) working set fits VMEM
+    with headroom: input(4B) + codes(8B) + bitlen(4B) + out(~8B) ~= 24B/tuple."""
+    budget = chip.vmem_bytes // 4  # leave headroom for double-buffering
+    return budget // 24
+
+
+# ------------------------------------------------------------- scheduling --
+def schedule_blocks(
+    costs: Sequence[float],
+    speeds: Sequence[float],
+    policy: SchedulingStrategy,
+    stage_split: Tuple[float, float] = (0.3, 0.7),
+) -> Tuple[List[List[int]], List[float], float]:
+    """Assign micro-batch blocks to workers; return (assignment, busy_s, makespan).
+
+    Asymmetry-aware policy is LPT with a stage-aware cost model: the memory
+    bound fraction of a block (s0 load, `stage_split[0]`) gains little from a
+    faster core (paper Fig 6a: out-of-order big cores are over-provisioned for
+    s0), while transform/emit (s1+s2) scale with core speed.
+    """
+    n_workers = len(speeds)
+    assignment: List[List[int]] = [[] for _ in range(n_workers)]
+    busy = [0.0] * n_workers
+
+    def block_time(cost: float, speed: float) -> float:
+        mem_frac, cmp_frac = stage_split
+        mem_speed = min(speed, 1.2)  # memory stage barely scales
+        return cost * (mem_frac / mem_speed + cmp_frac / speed)
+
+    if policy == SchedulingStrategy.UNIFORM:
+        # balanced partition, equal distribution ratio [39]
+        for i, c in enumerate(costs):
+            w = i % n_workers
+            assignment[w].append(i)
+            busy[w] += block_time(c, speeds[w])
+    else:
+        # LPT greedy: biggest block to the worker that finishes it earliest
+        order = sorted(range(len(costs)), key=lambda i: -costs[i])
+        for i in order:
+            w = min(
+                range(n_workers), key=lambda j: busy[j] + block_time(costs[i], speeds[j])
+            )
+            assignment[w].append(i)
+            busy[w] += block_time(costs[i], speeds[w])
+    return assignment, busy, max(busy) if busy else 0.0

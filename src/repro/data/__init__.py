@@ -1,0 +1,3 @@
+"""Streaming data substrate: the paper's six workloads (Table 4), arrival
+patterns, and the host->device pipeline with CStream compression."""
+from repro.data.datasets import DATASETS, make_dataset  # noqa: F401

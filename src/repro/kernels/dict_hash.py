@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: Tdic32 hash-dictionary probe (frozen-table mode).
+
+The dictionary (4096 x 4B = 16 KiB) is VMEM-resident for every grid step —
+the paper sizes it for L1 [29]; VMEM is the TPU level with the same role.
+Lookups are fully vectorized (hash, gather, compare, symbol materialize);
+table *updates* are merged once per micro-batch outside the kernel
+(deterministic last-writer-wins, see core/algorithms/dictionary.py), which is
+what makes the probe side embarrassingly parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KNUTH = 2654435761  # Knuth multiplicative hash constant (python int: Pallas
+DEFAULT_BLOCK = 512  # kernels must not capture traced jnp constants)
+
+
+def _probe_kernel(x_ref, table_ref, valid_ref, c0_ref, c1_ref, blen_ref, *, idx_bits: int):
+    x = x_ref[...]  # (block,) uint32
+    table = table_ref[...]  # (TS,) uint32
+    valid = valid_ref[...]  # (TS,) uint8
+    h = ((x * jnp.uint32(KNUTH)) >> jnp.uint32(32 - idx_bits)).astype(jnp.int32)
+    entry = table[h]
+    vbit = valid[h] > 0
+    hit = vbit & (entry == x)
+    c0_ref[...] = jnp.where(hit, jnp.uint32(1) | (h.astype(jnp.uint32) << 1), x << 1)
+    c1_ref[...] = jnp.where(hit, jnp.uint32(0), x >> 31)
+    blen_ref[...] = jnp.where(hit, 1 + idx_bits, 33).astype(jnp.int32)
+
+
+def probe(
+    x: jax.Array,
+    table: jax.Array,
+    valid: jax.Array,
+    idx_bits: int = 12,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """Vectorized dictionary probe.
+
+    x: (N,) uint32; table: (2**idx_bits,) uint32; valid: (2**idx_bits,) uint8.
+    Returns (c0, c1, bitlen) symbol slots (see algorithms/base.py).
+    """
+    n = x.shape[0]
+    ts = 1 << idx_bits
+    assert n % block == 0 and table.shape == (ts,) and valid.shape == (ts,)
+    kernel = functools.partial(_probe_kernel, idx_bits=idx_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((ts,), lambda i: (0,)),  # whole table in VMEM each step
+            pl.BlockSpec((ts,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, table, valid)

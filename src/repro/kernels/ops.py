@@ -1,0 +1,63 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in `interpret=True` mode — the
+kernel body runs under the Pallas interpreter for correctness validation; on
+TPU the same call sites compile to Mosaic. `interpret` resolves automatically
+from the backend.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import bitpack as _bitpack
+from repro.kernels import delta_nuq as _delta_nuq
+from repro.kernels import dict_hash as _dict_hash
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("block",))
+def pack_blocks(codes, bitlen, block: int = _bitpack.DEFAULT_BLOCK):
+    return _bitpack.pack_blocks(codes, bitlen, block=block, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("qbits", "dmax", "mu", "sublanes", "t_tile"))
+def adpcm_encode(x, qbits: int = 8, dmax: float = 1.0, mu: float = 255.0,
+                 sublanes: int = _delta_nuq.DEFAULT_SUBLANES,
+                 t_tile: int = _delta_nuq.DEFAULT_T):
+    return _delta_nuq.encode(
+        x, qbits=qbits, dmax=dmax, mu=mu, sublanes=sublanes, t_tile=t_tile,
+        interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("qbits", "dmax", "mu", "sublanes", "t_tile"))
+def adpcm_decode(codes, qbits: int = 8, dmax: float = 1.0, mu: float = 255.0,
+                 sublanes: int = _delta_nuq.DEFAULT_SUBLANES,
+                 t_tile: int = _delta_nuq.DEFAULT_T):
+    return _delta_nuq.decode(
+        codes, qbits=qbits, dmax=dmax, mu=mu, sublanes=sublanes, t_tile=t_tile,
+        interpret=_interpret(),
+    )
+
+
+@partial(jax.jit, static_argnames=("idx_bits", "block"))
+def dict_probe(x, table, valid, idx_bits: int = 12, block: int = _dict_hash.DEFAULT_BLOCK):
+    return _dict_hash.probe(
+        x, table, valid, idx_bits=idx_bits, block=block, interpret=_interpret()
+    )
+
+
+@partial(jax.jit, static_argnames=("window", "causal", "bq", "bk"))
+def flash_attention_fwd(q, k, v, window=None, causal: bool = True,
+                        bq: int = 512, bk: int = 1024):
+    """Pallas flash attention (fwd): VMEM-resident scores (§Perf B4)."""
+    from repro.kernels import flash_attn as _flash
+
+    return _flash.flash_fwd(
+        q, k, v, window=window, causal=causal, bq=bq, bk=bk, interpret=_interpret()
+    )

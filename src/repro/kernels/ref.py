@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels are
+validated against, shape-for-shape and bit-for-bit where integer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits
+from repro.core.algorithms import nuq
+
+
+# ----------------------------------------------------------------- bitpack --
+def pack_blocks_ref(codes: jax.Array, bitlen: jax.Array, block: int):
+    """Block-local packing via the carry-free scatter-add formulation."""
+    n = codes.shape[0]
+    nblocks = n // block
+    wpb = 2 * block + 1
+
+    def pack_one(c, b):
+        words, total, _ = bits.pack_bits(c, b, wpb)
+        return words, total
+
+    words, totals = jax.vmap(pack_one)(
+        codes.reshape(nblocks, block, 2), bitlen.reshape(nblocks, block)
+    )
+    return words, totals.astype(jnp.int32)
+
+
+# --------------------------------------------------------------- delta_nuq --
+def delta_nuq_encode_ref(x: jax.Array, qbits: int, dmax: float, mu: float, t_tile: int):
+    """Sequential-scan oracle with the same tile-local bootstrap semantics."""
+    S, T = x.shape
+    ntiles = T // t_tile
+    xt = x.reshape(S, ntiles, t_tile).astype(jnp.float32)
+
+    def one_tile(tile):  # (S, t_tile)
+        def step(xhat, xv):
+            d = jnp.clip(xv - xhat, -dmax, dmax)
+            c = nuq.mulaw_encode_signed(d, qbits, dmax, mu)
+            # float substream semantics: no integer snapping (matches kernel)
+            xhat = xhat + nuq.mulaw_decode_signed(c, qbits, dmax, mu, round_int=False)
+            return xhat, c
+
+        _, codes = jax.lax.scan(step, tile[:, 0], tile[:, 1:].T)
+        ref = jax.lax.bitcast_convert_type(tile[:, 0], jnp.uint32)
+        return jnp.concatenate([ref[:, None], codes.T], axis=1)
+
+    out = jax.vmap(one_tile, in_axes=1, out_axes=1)(xt)
+    return out.reshape(S, T)
+
+
+def delta_nuq_decode_ref(codes: jax.Array, qbits: int, dmax: float, mu: float, t_tile: int):
+    S, T = codes.shape
+    ntiles = T // t_tile
+    ct = codes.reshape(S, ntiles, t_tile)
+
+    def one_tile(tile):
+        ref = jax.lax.bitcast_convert_type(tile[:, 0], jnp.float32)
+        dq = nuq.mulaw_decode_signed(tile[:, 1:], qbits, dmax, mu, round_int=False)
+
+        def step(xhat, d):
+            xhat = xhat + d
+            return xhat, xhat
+
+        _, xs = jax.lax.scan(step, ref, dq.T)
+        return jnp.concatenate([ref[:, None], xs.T], axis=1)
+
+    out = jax.vmap(one_tile, in_axes=1, out_axes=1)(ct)
+    return out.reshape(S, T)
+
+
+# --------------------------------------------------------------- dict_hash --
+def probe_ref(x: jax.Array, table: jax.Array, valid: jax.Array, idx_bits: int):
+    knuth = jnp.uint32(2654435761)
+    h = ((x * knuth) >> jnp.uint32(32 - idx_bits)).astype(jnp.int32)
+    entry = table[h]
+    hit = (valid[h] > 0) & (entry == x)
+    c0 = jnp.where(hit, jnp.uint32(1) | (h.astype(jnp.uint32) << 1), x << 1)
+    c1 = jnp.where(hit, jnp.uint32(0), x >> 31)
+    blen = jnp.where(hit, 1 + idx_bits, 33).astype(jnp.int32)
+    return c0, c1, blen
+
+
+def flash_reference(q, k, v, window=None, causal=True):
+    """Oracle for kernels/flash_attn.py: dense GQA attention (B,S,H,Dh)."""
+    import numpy as np
+
+    B, Sq, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(Dh)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: the dry-run builds the production meshes
+# (16x16 single-pod, 2x16x16 multi-pod) out of placeholder host devices.
+# Do NOT import this module from tests/benches — they should see 1 device.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh and the arch's sharding policy,
+  2. lowers the step function against ShapeDtypeStruct stand-ins
+     (weak-type-correct, shardable, zero allocation),
+  3. compiles — proving the distribution config is coherent (sharding
+     mismatches, compile-time OOM, unsupported collectives all fail here),
+  4. records memory_analysis / cost_analysis / parsed collective bytes and
+     the three roofline terms into experiments/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral-nemo-12b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import arch_ids, get_arch, input_specs
+from repro.launch.hlo_analysis import analyze_hlo, roofline
+from repro.launch.mesh import logical_mapping, make_production_mesh
+from repro.launch.steps import (
+    TrainStepConfig,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    pick_microbatches,
+)
+from repro.models import partition
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_decode_cache, init_params
+from repro.optim import AdamWConfig, adamw
+from repro.optim.adamw import AdamWState
+from repro.runtime import batch_specs, cache_specs, param_specs, resolve
+
+
+def _bf16_params(shapes):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if jnp.issubdtype(s.dtype, jnp.floating)
+        else s,
+        shapes,
+    )
+
+
+def _shard_tree(logical, mesh):
+    return resolve(logical, mesh)
+
+
+def _repl(mesh, tree):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+@dataclasses.dataclass
+class CellResult:
+    record: dict
+    lowered: object = None
+    compiled: object = None
+
+
+def run_cell(
+    arch_id: str,
+    shape_name: str,
+    multi_pod: bool,
+    kv_quant: bool | None = None,
+    serve_params: str = "serve",
+    microbatches: int | None = None,
+    keep_artifacts: bool = False,
+    donate: bool = True,
+) -> CellResult:
+    spec = get_arch(arch_id)
+    shape = next(s for s in spec.shapes if s.name == shape_name)
+    if spec.skips and shape_name in spec.skips:
+        return CellResult({
+            "arch": arch_id, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "skipped", "reason": spec.skips[shape_name],
+        })
+    cfg = spec.model
+    if kv_quant is not None:
+        cfg = dataclasses.replace(cfg, kv_quant=kv_quant)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mapping = logical_mapping(multi_pod)
+    chips = mesh.size
+    data_total = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    B, S = shape.global_batch, shape.seq_len
+    data_ok = B % data_total == 0
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "global_batch": B,
+        "seq_len": S,
+        "kv_quant": cfg.kv_quant,
+        "status": "ok",
+    }
+
+    with partition.logical_axes(mapping), jax.set_mesh(mesh):
+        t0 = time.perf_counter()
+        if shape.kind == "train":
+            mb = microbatches or pick_microbatches(cfg, B, S, data_total)
+            rec["microbatches"] = mb
+            pspec_l = param_specs(cfg, "train")
+            pshard = _shard_tree(pspec_l, mesh)
+            init_fn, train_step = make_train_step(
+                cfg, AdamWConfig(), TrainStepConfig(microbatches=mb)
+            )
+            params_sh = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+            opt_sh = jax.eval_shape(adamw(AdamWConfig())[0], params_sh)
+            # opt state: step replicated, m/v sharded like params (FSDP'd Adam)
+            oshard = AdamWState(step=NamedSharding(mesh, P()), m=pshard, v=pshard)
+            bspec = batch_specs(cfg, "train", data_ok)
+            batch_sh = input_specs(spec, shape)
+            if mb > 1:  # pre-microbatched feed: (mb, b, ...), batch dim -> data
+                batch_sh = jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct((mb, s.shape[0] // mb) + s.shape[1:], s.dtype),
+                    batch_sh,
+                )
+                bspec = jax.tree_util.tree_map(
+                    lambda t: (None,) + t,
+                    bspec,
+                    is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict),
+                )
+            bshard = _shard_tree(bspec, mesh)
+            metrics_shard = {k: NamedSharding(mesh, P()) for k in ("loss", "ce", "grad_norm", "lr")}
+            fn = jax.jit(
+                train_step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, metrics_shard),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = fn.lower(params_sh, opt_sh, batch_sh)
+        elif shape.kind == "prefill":
+            pspec_l = param_specs(cfg, serve_params)
+            pshard = _shard_tree(pspec_l, mesh)
+            params_sh = _bf16_params(
+                jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+            )
+            cspec_l = cache_specs(cfg, B, S)
+            cshard = _shard_tree(cspec_l, mesh)
+            bshard = _shard_tree(batch_specs(cfg, "prefill", data_ok), mesh)
+            batch_sh = input_specs(spec, shape)
+            prefill_step = make_prefill_step(cfg, cache_seq_len=S)
+            logits_shard = NamedSharding(mesh, partition.spec("data" if data_ok else None, None, "model"))
+            fn = jax.jit(
+                prefill_step,
+                in_shardings=(pshard, bshard["inputs"]),
+                out_shardings=(cshard, logits_shard),
+            )
+            lowered = fn.lower(params_sh, batch_sh["inputs"])
+        else:  # decode
+            pspec_l = param_specs(cfg, serve_params)
+            pshard = _shard_tree(pspec_l, mesh)
+            params_sh = _bf16_params(
+                jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+            )
+            cache_sh = jax.eval_shape(lambda: init_decode_cache(cfg, B, S))
+            cspec_l = cache_specs(cfg, B, S)
+            cshard = _shard_tree(cspec_l, mesh)
+            bshard = _shard_tree(batch_specs(cfg, "decode", data_ok), mesh)
+            batch_sh = input_specs(spec, shape)
+            serve_step = make_serve_step(cfg)
+            tok_shard = NamedSharding(mesh, partition.spec("data" if data_ok else None, None))
+            fn = jax.jit(
+                serve_step,
+                in_shardings=(pshard, cshard, bshard["inputs_t"]),
+                out_shardings=(cshard, tok_shard),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = fn.lower(params_sh, cache_sh, batch_sh["inputs_t"])
+
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
+
+    # ---- analyses ---------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+        if hasattr(mem, "peak_memory_in_bytes"):
+            rec["memory"]["peak_memory_in_bytes"] = int(mem.peak_memory_in_bytes)
+    except Exception as e:  # some backends don't implement it
+        rec["memory"] = {"error": repr(e)}
+    try:
+        xla_cost = compiled.cost_analysis()
+        rec["xla_cost_raw"] = {
+            "flops": float(xla_cost.get("flops", 0.0)),
+            "bytes accessed": float(xla_cost.get("bytes accessed", 0.0)),
+            "note": "XLA counts while bodies once; see hlo_analysis for trip-count-aware totals",
+        }
+    except Exception as e:
+        rec["xla_cost_raw"] = {"error": repr(e)}
+
+    hlo = compiled.as_text()
+    cost, coll = analyze_hlo(hlo)
+    rec["cost"] = {
+        "flops_per_device": cost.flops,
+        "hbm_bytes_per_device": cost.bytes,
+        "transcendentals_per_device": cost.transcendentals,
+    }
+    rec["collectives"] = coll.to_json()
+    rec["hlo_lines"] = hlo.count("\n")
+
+    terms = roofline(cost, coll, chips)
+    rec["roofline"] = terms.to_json()
+
+    # model flops (6ND train / 2ND per generated token)
+    n_params = cfg.param_count(active_only=True)
+    tokens = B * (S if shape.kind in ("train", "prefill") else 1)
+    mf = (6 if shape.kind == "train" else 2) * n_params * tokens
+    rec["model_flops"] = float(mf)
+    rec["useful_flops_frac"] = (
+        mf / terms.flops_global if terms.flops_global else None
+    )
+    return CellResult(rec, lowered if keep_artifacts else None, compiled if keep_artifacts else None)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--kv-quant", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--serve-params", default="serve", choices=["serve", "train"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.list:
+        for aid in arch_ids():
+            spec = get_arch(aid)
+            print(aid, [s.name for s in spec.shapes], "skips:", spec.skips or {})
+        return
+
+    cells = []
+    archs = arch_ids() if (args.all or not args.arch) else [args.arch]
+    for aid in archs:
+        spec = get_arch(aid)
+        shapes = [s.name for s in spec.shapes] if (args.all or not args.shape) else [args.shape]
+        for sn in shapes:
+            meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                cells.append((aid, sn, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    kvq = None if args.kv_quant is None else (args.kv_quant == "on")
+    for aid, sn, mp in cells:
+        name = f"{aid}__{sn}__{'multipod' if mp else 'pod'}{args.tag}"
+        print(f"=== {name}", flush=True)
+        try:
+            res = run_cell(aid, sn, mp, kv_quant=kvq, serve_params=args.serve_params,
+                           microbatches=args.microbatches)
+        except Exception:
+            res = CellResult({
+                "arch": aid, "shape": sn,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": "error", "traceback": traceback.format_exc(),
+            })
+        with open(os.path.join(args.out, name + ".json"), "w") as f:
+            json.dump(res.record, f, indent=1)
+        status = res.record["status"]
+        if status == "ok":
+            r = res.record["roofline"]
+            print(f"    ok lower={res.record['lower_s']}s compile={res.record['compile_s']}s "
+                  f"dominant={r['dominant']} compute={r['compute_s']:.2e}s "
+                  f"memory={r['memory_s']:.2e}s coll={r['collective_s']:.2e}s", flush=True)
+        else:
+            print(f"    {status}: {res.record.get('reason', '')[:120]}"
+                  f"{res.record.get('traceback', '')[-400:]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,404 @@
+"""Post-SPMD HLO analysis: FLOPs, HBM bytes, collective bytes (DESIGN.md §9).
+
+Why not `compiled.cost_analysis()`: XLA's HloCostAnalysis counts while-loop
+bodies ONCE, but every layer scan / microbatch scan / KV-block scan executes
+its body `trip_count` times — on a 62-layer model that under-counts ~60x.
+The compiled (is_scheduled) HLO text carries
+`backend_config={"known_trip_count":{"n":...}}` on each while, so this
+module re-derives the true totals by recursively walking computations and
+multiplying loop bodies by their static trip counts:
+
+  flops            — 2 * prod(output dims) * prod(contracting dims) per
+                     dot (incl. dots inside fused computations);
+  hbm bytes        — sum of operand+output sizes of every materializing
+                     instruction (fusions count at their boundary, exactly
+                     HloCostAnalysis's convention);
+  collective bytes — per collective op kind: operand sizes (the task's
+                     Σ-operand formula) and a ring wire-byte estimate.
+
+All quantities are PER DEVICE (the compiled module is the per-device
+program); `roofline()` rescales to the global task formula.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json as _json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.energy import TpuChip, V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# type is either a tuple "(...)" — lazily matched up to the first ") op("
+# boundary (tuple types contain /*index=k*/ comments and layout braces) —
+# or a single token like f32[4,4096]{1,0}.
+_INSTR_RE = re.compile(
+    r"^\s*(?P<root>ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*(?P<type>\(.*?\)|\S+?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>.*?)\)(?P<attrs>.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,\s]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+_NO_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _dims(dim_str: str) -> List[int]:
+    return [int(d) for d in dim_str.split(",")] if dim_str else []
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        total += math.prod(_dims(dims) or [1]) * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(attrs)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.transcendentals += mult * other.transcendentals
+        for op, d in other.collectives.items():
+            mine = self.collectives.setdefault(
+                op, {"count": 0.0, "operand_bytes": 0.0, "wire_bytes": 0.0}
+            )
+            for k in mine:
+                mine[k] += mult * d[k]
+
+
+class HloModuleCost:
+    """Parses one HLO module text and evaluates trip-count-aware totals."""
+
+    def __init__(self, text: str):
+        self.computations: Dict[str, Dict[str, Instr]] = {}
+        self.order: List[str] = []
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    # ------------------------------------------------------------ parsing --
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR_RE.match(line.strip())
+                if m and "{" in line:
+                    cur = m.group("name")
+                    self.computations[cur] = {}
+                    self.order.append(cur)
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                ins = Instr(
+                    name=m.group("name"),
+                    type_str=m.group("type"),
+                    op=m.group("op"),
+                    operands=_OPERAND_NAME_RE.findall(m.group("operands")),
+                    attrs=m.group("attrs"),
+                    is_root=bool(m.group("root")),
+                )
+                self.computations[cur][ins.name] = ins
+        if self.entry is None and self.order:
+            self.entry = self.order[-1]
+
+    # ----------------------------------------------------------- costing --
+    def _operand_bytes(self, comp: Dict[str, Instr], ins: Instr) -> float:
+        tot = 0.0
+        for op_name in ins.operands:
+            src = comp.get(op_name)
+            if src is not None:
+                tot += _shape_bytes(src.type_str)
+        return tot
+
+    def _fusion_bytes(self, comp: Dict[str, Instr], ins: Instr) -> float:
+        """HloCostAnalysis-style fusion byte accounting: a parameter consumed
+        only through dynamic-slice reads just the slice; a fusion rooted in
+        dynamic-update-slice writes just the update.  (Scan bodies read one
+        layer's weights from the stacked (L, ...) tensor and write one slot
+        of the carry — counting the full buffers would overcount ~L x.)
+
+        convert/bitcast chains between param <-> DS/DUS <-> root are looked
+        through: the CPU backend has no native bf16 dynamic-update-slice and
+        wraps it in full-buffer f32 round-trips that a TPU lowering does in
+        place — a backend artifact, not workload traffic."""
+        cm = _CALLS_RE.search(ins.attrs)
+        called = self.computations.get(cm.group(1)) if cm else None
+        if not called:
+            return _shape_bytes(ins.type_str) + self._operand_bytes(comp, ins)
+
+        def users(name):
+            return [u for u in called.values() if name in u.operands]
+
+        def effective_uses(name, depth=0):
+            """Transitive uses through convert/bitcast/copy wrappers."""
+            out = []
+            for u in users(name):
+                if u.op in ("convert", "bitcast", "copy") and depth < 4:
+                    out.extend(effective_uses(u.name, depth + 1))
+                else:
+                    out.append(u)
+            return out
+
+        reads = 0.0
+        for iname, iins in called.items():
+            if iins.op != "parameter":
+                continue
+            uses = effective_uses(iname)
+            full = _shape_bytes(iins.type_str)
+            if uses and all(u.op == "dynamic-slice" for u in uses):
+                reads += sum(_shape_bytes(u.type_str) for u in uses)
+            elif uses and all(u.op == "dynamic-update-slice" for u in uses):
+                # in-place slot write: read side is the update-sized RMW
+                for u in uses:
+                    upd = called.get(u.operands[1]) if len(u.operands) > 1 else None
+                    reads += _shape_bytes(upd.type_str) if upd else _shape_bytes(u.type_str)
+            else:
+                reads += full
+
+        # output: DUS-rooted fusions (through converts) write just the update
+        root = next((i for i in called.values() if i.is_root), None)
+        depth = 0
+        while root is not None and root.op in ("convert", "bitcast", "copy") and depth < 4:
+            root = called.get(root.operands[0]) if root.operands else None
+            depth += 1
+        out_bytes = _shape_bytes(ins.type_str)
+        if root is not None and root.op == "dynamic-update-slice" and len(root.operands) > 1:
+            upd = called.get(root.operands[1])
+            if upd is not None:
+                out_bytes = _shape_bytes(upd.type_str)
+        return reads + out_bytes
+
+    def _dot_flops(self, comp: Dict[str, Instr], ins: Instr) -> float:
+        out_elems = 0
+        for dt, dims in _SHAPE_RE.findall(ins.type_str):
+            if dt in _DTYPE_BYTES:
+                out_elems += math.prod(_dims(dims) or [1])
+        m = _CONTRACT_RE.search(ins.attrs)
+        contract = 1
+        if m and ins.operands:
+            lhs = comp.get(ins.operands[0])
+            if lhs is not None:
+                sh = _SHAPE_RE.search(lhs.type_str)
+                if sh:
+                    ld = _dims(sh.group(2))
+                    for ci in _dims(m.group(1)):
+                        if ci < len(ld):
+                            contract *= ld[ci]
+        return 2.0 * out_elems * contract
+
+    def comp_cost(self, name: str, flops_only: bool = False) -> Cost:
+        key = f"{name}|{flops_only}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.computations.get(name, {})
+        cost = Cost()
+        for ins in comp.values():
+            if ins.op == "while":
+                m = _TRIP_RE.search(ins.attrs)
+                trip = int(m.group(1)) if m else 1
+                bm = _BODY_RE.search(ins.attrs)
+                cm = _COND_RE.search(ins.attrs)
+                if bm:
+                    cost.add(self.comp_cost(bm.group(1), flops_only), trip)
+                if cm:
+                    cost.add(self.comp_cost(cm.group(1), flops_only), trip)
+                continue
+            if ins.op == "fusion":
+                # bytes at the fusion boundary (DS/DUS-aware); flops inside
+                if not flops_only:
+                    cost.bytes += self._fusion_bytes(comp, ins)
+                cm = _CALLS_RE.search(ins.attrs)
+                if cm:
+                    cost.add(self.comp_cost(cm.group(1), flops_only=True), 1.0)
+                continue
+            if ins.op in ("call", "conditional", "async-start"):
+                for target in _CALLS_RE.findall(ins.attrs) + _BODY_RE.findall(ins.attrs):
+                    cost.add(self.comp_cost(target, flops_only), 1.0)
+                if not flops_only:
+                    cost.bytes += _shape_bytes(ins.type_str) + self._operand_bytes(comp, ins)
+                continue
+            base_op = ins.op.replace("-start", "") if ins.op.endswith("-start") else ins.op
+            if base_op in COLLECTIVE_OPS:
+                out_b = _shape_bytes(ins.type_str)
+                if ins.op.endswith("-start"):
+                    out_b = out_b / 2  # start ops carry (operand, output) tuples
+                n = max(_group_size(ins.attrs), 1)
+                if base_op == "all-gather":
+                    operand, wire = out_b / n, (n - 1) / n * out_b
+                elif base_op == "all-reduce":
+                    operand, wire = out_b, 2 * (n - 1) / n * out_b
+                elif base_op == "reduce-scatter":
+                    operand, wire = out_b * n, (n - 1) * out_b
+                elif base_op == "all-to-all":
+                    operand, wire = out_b, (n - 1) / n * out_b
+                else:  # collective-permute
+                    operand, wire = out_b, out_b
+                d = cost.collectives.setdefault(
+                    base_op, {"count": 0.0, "operand_bytes": 0.0, "wire_bytes": 0.0}
+                )
+                d["count"] += 1
+                d["operand_bytes"] += operand
+                d["wire_bytes"] += wire
+                if not flops_only:
+                    cost.bytes += out_b + self._operand_bytes(comp, ins)
+                continue
+            if ins.op == "dynamic-slice":
+                cost.bytes += 2 * _shape_bytes(ins.type_str)  # slice read + write
+                continue
+            if ins.op == "dynamic-update-slice":
+                upd = comp.get(ins.operands[1]) if len(ins.operands) > 1 else None
+                cost.bytes += 2 * (_shape_bytes(upd.type_str) if upd else _shape_bytes(ins.type_str))
+                continue
+            if ins.op == "dot":
+                cost.flops += self._dot_flops(comp, ins)
+            if ins.op in ("tanh", "exponential", "log", "power", "rsqrt", "sqrt", "logistic"):
+                cost.transcendentals += _shape_bytes(ins.type_str) / max(
+                    _DTYPE_BYTES.get(_SHAPE_RE.search(ins.type_str).group(1), 4), 1
+                ) if _SHAPE_RE.search(ins.type_str) else 0.0
+            if flops_only or ins.op in _NO_BYTES_OPS or ins.op.endswith("-done"):
+                continue
+            cost.bytes += _shape_bytes(ins.type_str) + self._operand_bytes(comp, ins)
+        self._memo[key] = cost
+        return cost
+
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+# ------------------------------------------------------------- public API --
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, Dict[str, float]]
+
+    @property
+    def operand_bytes(self) -> float:
+        return sum(v["operand_bytes"] for v in self.per_op.values())
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(v["wire_bytes"] for v in self.per_op.values())
+
+    def to_json(self) -> dict:
+        return {
+            "per_op": self.per_op,
+            "operand_bytes": self.operand_bytes,
+            "wire_bytes": self.wire_bytes,
+        }
+
+
+def analyze_hlo(hlo_text: str) -> Tuple[Cost, CollectiveStats]:
+    mod = HloModuleCost(hlo_text)
+    cost = mod.total()
+    return cost, CollectiveStats(cost.collectives)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    return analyze_hlo(hlo_text)[1]
+
+
+# ----------------------------------------------------------------- terms --
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_global: float
+    hbm_bytes_global: float
+    collective_bytes_global: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline step time (no-overlap: max of the three terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_json(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_global": self.flops_global,
+            "hbm_bytes_global": self.hbm_bytes_global,
+            "collective_bytes_global": self.collective_bytes_global,
+            "chips": self.chips,
+        }
+
+
+def roofline(cost: Cost, coll: CollectiveStats, chips: int, chip: TpuChip = V5E) -> RooflineTerms:
+    """cost/coll are PER-DEVICE (trip-count-aware); the three terms follow
+    the task formula: term = global_quantity / (chips * per-chip rate)."""
+    return RooflineTerms(
+        compute_s=cost.flops / chip.peak_flops,
+        memory_s=cost.bytes / chip.hbm_bw,
+        collective_s=coll.operand_bytes / chip.ici_bw,
+        flops_global=cost.flops * chips,
+        hbm_bytes_global=cost.bytes * chips,
+        collective_bytes_global=coll.operand_bytes * chips,
+        chips=chips,
+    )

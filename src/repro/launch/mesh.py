@@ -1,0 +1,28 @@
+"""Production meshes.  Functions, not module constants, so importing this
+module never touches jax device state (the dry-run sets the 512-device
+XLA flag before first jax init; everything else sees the real devices)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips ("data", "model").
+    Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def logical_mapping(multi_pod: bool = False) -> dict:
+    """Logical->physical axis mapping for models/partition hints: the pod
+    axis folds into data parallelism."""
+    if multi_pod:
+        return {"data": ("pod", "data"), "model": "model"}
+    return {"data": "data", "model": "model"}
+
+
+def make_host_mesh(n: int = 1):
+    """Mesh over the actual local devices (CPU tests / examples)."""
+    devs = jax.devices()[:n]
+    return jax.make_mesh((len(devs), 1), ("data", "model"), devices=devs)

@@ -1,0 +1,134 @@
+"""Batched serving driver: prefill + autoregressive decode with the
+NUQ-compressed KV cache (production path #3).
+
+Requests are micro-batched (the paper's lazy execution strategy applied to
+serving: accumulate a batch, then run one fused decode step for all
+streams), with per-request latency accounting.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import kvcache
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params
+
+
+@dataclasses.dataclass
+class ServeRun:
+    prefill_s: float
+    decode_s: float
+    tokens_generated: int
+    decode_tok_per_s: float
+    cache_bytes: int
+    cache_bytes_raw_equiv: int
+    tokens: np.ndarray
+
+
+def serve(
+    cfg: ModelConfig,
+    batch: int = 4,
+    prompt_len: int = 64,
+    gen: int = 32,
+    cache_len: Optional[int] = None,
+    seed: int = 0,
+) -> ServeRun:
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    cache_len = cache_len or (prompt_len + gen)
+
+    prefill_jit = jax.jit(make_prefill_step(cfg, cache_seq_len=cache_len))
+    serve_jit = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    if cfg.input_kind == "tokens":
+        prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    else:
+        prompts = jax.random.normal(key, (batch, prompt_len, cfg.d_model), jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    cache, logits = jax.block_until_ready(prefill_jit(params, prompts))
+    prefill_s = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, 1)
+    out = [np.asarray(tok)]
+    t1 = time.perf_counter()
+    for _ in range(gen - 1):
+        if cfg.input_kind == "tokens":
+            cache, tok = serve_jit(params, cache, tok)
+        else:  # embedding-frontend archs feed frame embeddings
+            emb = jnp.take(params["embed"], tok[:, 0], axis=0)[:, None].astype(jnp.bfloat16)
+            cache, tok = serve_jit(params, cache, emb)
+        out.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    decode_s = time.perf_counter() - t1
+
+    cache_bytes = sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(cache)
+    )
+    # raw bf16 cache equivalent for the same layers/window (compression win)
+    raw_equiv = 0
+    if cfg.family != "ssm":
+        n_attn = cfg.hybrid_pattern()[0] if cfg.family == "hybrid" else cfg.n_layers
+        from repro.models.transformer import _round_window
+
+        W = _round_window(cfg.effective_kv_window(cache_len))
+        raw_equiv = n_attn * batch * W * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    toks = np.concatenate(out, axis=1)
+    return ServeRun(
+        prefill_s=prefill_s,
+        decode_s=decode_s,
+        tokens_generated=batch * gen,
+        decode_tok_per_s=batch * (gen - 1) / max(decode_s, 1e-9),
+        cache_bytes=cache_bytes,
+        cache_bytes_raw_equiv=raw_equiv,
+        tokens=toks,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--raw-cache", action="store_true", help="disable NUQ KV compression")
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.model.reduced() if args.reduced else spec.model
+    if args.raw_cache:
+        import dataclasses as dc
+
+        cfg = dc.replace(cfg, kv_quant=False)
+    run = serve(cfg, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen)
+    print(json.dumps({
+        "arch": args.arch,
+        "prefill_s": round(run.prefill_s, 3),
+        "decode_tok_per_s": round(run.decode_tok_per_s, 1),
+        "cache_bytes": run.cache_bytes,
+        "cache_bytes_raw_equiv": run.cache_bytes_raw_equiv,
+        "kv_compression": round(run.cache_bytes_raw_equiv / max(run.cache_bytes, 1), 2)
+        if run.cache_bytes_raw_equiv
+        else None,
+        "sample_tokens": run.tokens[0, :8].tolist(),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

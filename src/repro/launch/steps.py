@@ -1,0 +1,146 @@
+"""Step builders shared by the dry-run, train and serve drivers.
+
+`make_train_step` returns a pure (params, opt_state, batch) -> ... function
+with microbatched gradient accumulation (lax.scan), optional compressed
+cross-pod gradient sync, AdamW, and metrics.  `make_serve_step` /
+`make_prefill_step` wrap the decode/prefill paths.  All functions are
+mesh-agnostic: sharding comes from the jit in/out shardings plus the
+logical-axis hints inside the model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gradient as gradmod
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, loss_fn, prefill
+from repro.optim import AdamWConfig, adamw
+from repro.optim.adamw import apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    grad_compression: Optional[gradmod.GradCompressionConfig] = None
+    sync_axis: str = "pod"  # compressed sync crosses this axis (multi-pod DP)
+    aux_weight: float = 0.01
+
+
+def pick_microbatches(cfg: ModelConfig, global_batch: int, seq: int, data_size: int, budget_bytes: float = None) -> int:
+    """Smallest grad-accumulation factor whose activation working set fits.
+
+    With full remat the live set per microbatch is ~1 layer-input carry per
+    layer plus the (model-sharded) fp32 logits; MoE archs get a tighter
+    budget for their (E, C, F) expert buffers (§Perf A6 measured the fit).
+    See DESIGN.md §9."""
+    if budget_bytes is None:
+        budget_bytes = 2e9 if cfg.n_experts else 6e9
+    model_shard = 16
+    for mb in (1, 2, 4, 8, 16, 32, 64):
+        if global_batch % mb or (global_batch // mb) < data_size:
+            continue
+        b_local = global_batch // mb // data_size
+        carries = cfg.n_layers * b_local * seq * cfg.d_model * 2
+        logits = b_local * seq * max(cfg.vocab_size // model_shard, 1) * 8
+        if carries + logits <= budget_bytes:
+            return mb
+    return max(1, global_batch // data_size)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    step_cfg: TrainStepConfig = TrainStepConfig(),
+    mesh=None,
+    param_pspecs=None,
+) -> Tuple[Callable, Callable]:
+    """Returns (init_fn, train_step).
+
+    init_fn(key) -> (params, opt_state)
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    batch = {inputs (B,S)|(B,S,D), labels (B,S)} with B = MB * b."""
+    from repro.models.transformer import init_params
+
+    opt_init, opt_update = adamw(opt_cfg)
+
+    def init_fn(key):
+        params = init_params(cfg, key)
+        return params, opt_init(params)
+
+    def train_step(params, opt_state, batch):
+        """batch leaves are PRE-SPLIT to (mb, b, ...) when microbatches > 1
+        (microbatch_split does it host-side): reshaping a data-sharded batch
+        inside the step forces SPMD to rematerialize the full global batch —
+        23.6 GB/device for pixtral's (256, 4096, 5120) embeddings."""
+        mb = step_cfg.microbatches
+        mbatch = batch
+        zero_grads = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def micro(carry, mbatch_i):
+            grads_acc, loss_acc, ce_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, cfg, mbatch_i, step_cfg.aux_weight
+            )
+            grads_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32) / mb, grads_acc, grads
+            )
+            return (grads_acc, loss_acc + loss / mb, ce_acc + metrics["ce"] / mb), None
+
+        if mb > 1:
+            (grads, loss, ce), _ = jax.lax.scan(
+                micro, (zero_grads, jnp.zeros(()), jnp.zeros(())), mbatch
+            )
+        else:
+            (grads, loss, ce), _ = micro(
+                (zero_grads, jnp.zeros(()), jnp.zeros(())), mbatch
+            )
+
+        if step_cfg.grad_compression is not None and mesh is not None and step_cfg.sync_axis in mesh.axis_names:
+            # cross-pod sync carries NUQ codes; within-pod reduction already
+            # happened implicitly via the data-axis sharding of the loss.
+            grads = gradmod.compressed_grad_sync(
+                grads, mesh, step_cfg.sync_axis, step_cfg.grad_compression, param_pspecs
+            )
+
+        updates, opt_state, om = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "ce": ce, "grad_norm": om["grad_norm"], "lr": om["lr"]}
+        return params, opt_state, metrics
+
+    return init_fn, train_step
+
+
+def microbatch_split(batch: Dict[str, Any], mb: int) -> Dict[str, Any]:
+    """Host-side (or feed-side) split of a flat batch into (mb, b, ...)."""
+    if mb <= 1:
+        return batch
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch
+    )
+
+
+def make_serve_step(cfg: ModelConfig, greedy: bool = True) -> Callable:
+    """serve_step(params, cache, inputs_t) -> (cache, next_token (B,1))."""
+
+    def serve_step(params, cache, inputs_t):
+        cache, logits = decode_step(params, cfg, cache, inputs_t)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = logits  # caller samples
+        return cache, nxt
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_seq_len: Optional[int] = None) -> Callable:
+    def prefill_step(params, inputs):
+        return prefill(params, cfg, inputs, cache_seq_len)
+
+    return prefill_step

@@ -1,0 +1,9 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)

@@ -1,0 +1,309 @@
+"""Shared transformer layers: RMSNorm, RoPE, SwiGLU, GQA attention.
+
+All functions are pure (params, x) -> y, shape-stable, and written so the
+SPMD partitioner can shard them on the production mesh (no Python-level
+data-dependent control flow).  Attention is *blocked* (flash-style running
+softmax over KV chunks) so the 32k-prefill and 4k-train shapes never
+materialize an (S, S) score tensor — the VMEM-aware block size is the
+TPU analogue of the paper's L1D-cache-aware micro-batching (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default KV block for flash attention: 1024 keys x 128 head_dim in bf16 is
+# 256 KiB/ head — comfortably double-bufferable in 128 MiB VMEM next to the
+# query tile, mirroring cache_aware_batch_bytes() at the engine level.
+KV_BLOCK = 1024
+
+
+def init_dense(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE --
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions int32[...]-> (cos, sin) float32[..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, Dh); cos/sin: (..., S, Dh//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # add head axis
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- SwiGLU --
+def swiglu(params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d_model, d_ff, dtype),
+        "w_up": init_dense(k2, d_model, d_ff, dtype),
+        "w_down": init_dense(k3, d_ff, d_model, dtype),
+    }
+
+
+# ----------------------------------------------------- blocked attention --
+def _chunk_attn_update(q, k_blk, v_blk, mask_blk, m, l, acc, softcap=None):
+    """One flash step: q (B,H,Sq,Dh), k/v_blk (B,K,C,Dh) grouped to H.
+
+    Numerics: scores and the running (m, l, acc) stay f32; the probability
+    block is cast to the value dtype at its fusion boundary (mask folded
+    into the same fusion) — halving the dominant score-sized HBM tensors
+    (§Perf B3) exactly as TPU flash kernels keep p in bf16 for the PV
+    matmul."""
+    B, H, Sq, Dh = q.shape
+    K = k_blk.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, Sq, Dh)
+    s = jnp.einsum("bkgsd,bkcd->bkgsc", qg, k_blk).astype(jnp.float32)
+    s = s / jnp.sqrt(Dh).astype(jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask_blk[:, None, None, :, :], s, -1e30)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bkgsc,bkcd->bkgsd", p.astype(v_blk.dtype), v_blk
+    ).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _block_mask(q_positions, p_blk, o_blk, causal, window):
+    """(B, Sq, C) bool mask for one KV block."""
+    mask = o_blk[:, None, :]
+    if causal:
+        mask = mask & (p_blk[:, None, :] <= q_positions[:, :, None])
+    if window is not None:
+        mask = mask & (p_blk[:, None, :] > q_positions[:, :, None] - window)
+    return mask
+
+
+def _flash_scan(q, k, v, q_positions, kv_positions, kv_valid, window, causal, C):
+    """Forward flash recurrence. Inputs pre-padded to a multiple of C.
+    Returns out f32 (B,K,G,Sq,Dh) and lse f32 (B,K,G,Sq)."""
+    B, Sq, H, Dh = q.shape
+    Skp, K = k.shape[1], k.shape[2]
+    G = H // K
+    n = Skp // C
+    q_ = jnp.moveaxis(q, 2, 1)  # (B,H,Sq,Dh)
+    kb = jnp.moveaxis(jnp.moveaxis(k.reshape(B, n, C, K, Dh), 3, 2), 1, 0)
+    vb = jnp.moveaxis(jnp.moveaxis(v.reshape(B, n, C, K, Dh), 3, 2), 1, 0)
+    pb = jnp.moveaxis(kv_positions.reshape(B, n, C), 1, 0)
+    ob = jnp.moveaxis(kv_valid.reshape(B, n, C), 1, 0)
+
+    m0 = jnp.full((B, K, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, Dh), jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_blk, v_blk, p_blk, o_blk = blk
+        mask = _block_mask(q_positions, p_blk, o_blk, causal, window)
+        m, l, acc = _chunk_attn_update(q_, k_blk, v_blk, mask, m, l, acc, None)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb, ob))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _flash_core(q, k, v, q_positions, kv_positions, kv_valid, window, causal, C):
+    out, _ = _flash_scan(q, k, v, q_positions, kv_positions, kv_valid, window, causal, C)
+    B, Sq, H, Dh = q.shape
+    return jnp.moveaxis(out.reshape(B, H, Sq, Dh), 1, 2).astype(q.dtype)
+
+
+def _flash_core_fwd(q, k, v, q_positions, kv_positions, kv_valid, window, causal, C):
+    out, lse = _flash_scan(q, k, v, q_positions, kv_positions, kv_valid, window, causal, C)
+    B, Sq, H, Dh = q.shape
+    out_t = jnp.moveaxis(out.reshape(B, H, Sq, Dh), 1, 2).astype(q.dtype)
+    return out_t, (q, k, v, q_positions, kv_positions, kv_valid, out, lse)
+
+
+def _flash_core_bwd(window, causal, C, res, dout):
+    """Hand-derived flash backward: per block, recompute p from (q,k,lse)
+    ONCE and form ds = p * (dp - D) directly — ~4 score-sized tensors per
+    block instead of the ~8 autodiff-through-remat materializes, with the
+    block matmuls in the input dtype (§Perf B2)."""
+    q, k, v, q_positions, kv_positions, kv_valid, out, lse = res
+    B, Sq, H, Dh = q.shape
+    Skp, K = k.shape[1], k.shape[2]
+    G = H // K
+    n = Skp // C
+    scale = 1.0 / np.sqrt(Dh).astype(np.float32)
+
+    do = jnp.moveaxis(dout, 2, 1).reshape(B, K, G, Sq, Dh)  # (B,K,G,Sq,Dh)
+    # D_i = rowsum(do * out) (f32) — out saved normalized in f32
+    Dsum = jnp.sum(do.astype(jnp.float32) * out, axis=-1)  # (B,K,G,Sq)
+    q_ = jnp.moveaxis(q, 2, 1).reshape(B, K, G, Sq, Dh)
+    do_c = do.astype(q.dtype)
+
+    kb = jnp.moveaxis(jnp.moveaxis(k.reshape(B, n, C, K, Dh), 3, 2), 1, 0)
+    vb = jnp.moveaxis(jnp.moveaxis(v.reshape(B, n, C, K, Dh), 3, 2), 1, 0)
+    pb = jnp.moveaxis(kv_positions.reshape(B, n, C), 1, 0)
+    ob = jnp.moveaxis(kv_valid.reshape(B, n, C), 1, 0)
+
+    def body(dq_acc, blk):
+        k_blk, v_blk, p_blk, o_blk = blk  # (B,K,C,Dh), (B,C)
+        mask = _block_mask(q_positions, p_blk, o_blk, causal, window)
+        s = jnp.einsum("bkgsd,bkcd->bkgsc", q_, k_blk).astype(jnp.float32) * scale
+        s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+        p = jnp.exp(s - lse[..., None])  # masked -> exp(-inf)=0
+        p_c = p.astype(v_blk.dtype)
+        dv_blk = jnp.einsum("bkgsc,bkgsd->bkcd", p_c, do_c)
+        dp = jnp.einsum("bkgsd,bkcd->bkgsc", do_c, v_blk).astype(jnp.float32)
+        ds = p * (dp - Dsum[..., None]) * scale
+        ds_c = ds.astype(q.dtype)
+        dq_acc = dq_acc + jnp.einsum("bkgsc,bkcd->bkgsd", ds_c, k_blk).astype(jnp.float32)
+        dk_blk = jnp.einsum("bkgsc,bkgsd->bkcd", ds_c, q_)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, K, G, Sq, Dh), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(body, dq0, (kb, vb, pb, ob))
+    dq = jnp.moveaxis(dq.reshape(B, H, Sq, Dh), 1, 2).astype(q.dtype)
+    # (n,B,K,C,Dh) -> (B, n*C, K, Dh)
+    dk = jnp.moveaxis(jnp.moveaxis(dk_b, 0, 1), 2, 3).reshape(B, Skp, K, Dh).astype(k.dtype)
+    dv = jnp.moveaxis(jnp.moveaxis(dv_b, 0, 1), 2, 3).reshape(B, Skp, K, Dh).astype(v.dtype)
+    zero = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return dq, dk, dv, zero(q_positions), zero(kv_positions), zero(kv_valid)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Sk, K, Dh)
+    v: jax.Array,  # (B, Sk, K, Dh)
+    q_positions: jax.Array,  # int32 (B, Sq) absolute positions of queries
+    kv_positions: jax.Array,  # int32 (B, Sk) absolute positions of keys
+    kv_valid: Optional[jax.Array] = None,  # bool (B, Sk)
+    window: Optional[int] = None,  # sliding window (keys >= qpos-window+1)
+    causal: bool = True,
+    kv_block: int = KV_BLOCK,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Blocked causal (optionally sliding-window) attention, O(Sq*block)
+    memory, with a custom flash VJP (recompute-per-block backward).
+
+    Returns (B, Sq, H, Dh) in q.dtype.  The KV sequence is scanned in
+    blocks with a running (max, sum, acc) softmax, so prefill_32k never
+    materializes 32k x 32k scores — forward or backward.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    C = min(kv_block, Sk)
+    n_blocks = (Sk + C - 1) // C
+    pad = n_blocks * C - Sk
+    valid = kv_valid if kv_valid is not None else jnp.ones((B, Sk), bool)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)), constant_values=-1)
+        valid = jnp.pad(valid, ((0, 0), (0, pad)), constant_values=False)
+
+    if softcap is not None:
+        # softcap path (no assigned arch uses it in training): autodiff
+        # through the remat'd scan body instead of the custom VJP
+        return _flash_ad(q, k, v, q_positions, kv_positions, valid, window, causal, C, softcap)
+    return _flash_core(q, k, v, q_positions, kv_positions, valid, window, causal, C)
+
+
+def _flash_ad(q, k, v, q_positions, kv_positions, kv_valid, window, causal, C, softcap):
+    B, Sq, H, Dh = q.shape
+    Skp, K = k.shape[1], k.shape[2]
+    G = H // K
+    n = Skp // C
+    q_ = jnp.moveaxis(q, 2, 1)
+    kb = jnp.moveaxis(jnp.moveaxis(k.reshape(B, n, C, K, Dh), 3, 2), 1, 0)
+    vb = jnp.moveaxis(jnp.moveaxis(v.reshape(B, n, C, K, Dh), 3, 2), 1, 0)
+    pb = jnp.moveaxis(kv_positions.reshape(B, n, C), 1, 0)
+    ob = jnp.moveaxis(kv_valid.reshape(B, n, C), 1, 0)
+    m0 = jnp.full((B, K, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, Dh), jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, blk):
+        m, l, acc = carry
+        k_blk, v_blk, p_blk, o_blk = blk
+        mask = _block_mask(q_positions, p_blk, o_blk, causal, window)
+        m, l, acc = _chunk_attn_update(q_, k_blk, v_blk, mask, m, l, acc, softcap)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb, ob))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out.reshape(B, H, Sq, Dh), 1, 2).astype(q.dtype)
+
+
+# ------------------------------------------------------------- GQA block --
+def init_attention(key, cfg, dtype, lru_width: Optional[int] = None):
+    D, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], D, H * Dh, dtype),
+        "wk": init_dense(ks[1], D, K * Dh, dtype),
+        "wv": init_dense(ks[2], D, K * Dh, dtype),
+        "wo": init_dense(ks[3], H * Dh, D, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,), dtype)
+        p["k_norm"] = jnp.zeros((Dh,), dtype)
+    return p
+
+
+def attention_qkv(params, cfg, x: jax.Array, positions: jax.Array):
+    """Project + per-head norm + RoPE. x: (B, S, D) -> q (B,S,H,Dh), k/v (B,S,K,Dh)."""
+    B, S, _ = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, Dh)
+    k = (x @ params["wk"]).reshape(B, S, K, Dh)
+    v = (x @ params["wv"]).reshape(B, S, K, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    cos, sin = rope_angles(positions, Dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention_train(
+    params, cfg, x: jax.Array, positions: jax.Array, window: Optional[int] = None
+) -> jax.Array:
+    """Self-attention over a full (causal) sequence — train / prefill path."""
+    q, k, v = attention_qkv(params, cfg, x, positions)
+    out = flash_attention(
+        q, k, v, positions, positions, window=window, softcap=cfg.attn_logit_softcap
+    )
+    B, S = x.shape[:2]
+    return out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ params["wo"]

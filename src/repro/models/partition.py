@@ -1,0 +1,49 @@
+"""Logical->physical sharding hints for model internals.
+
+Model code annotates internal activations with *logical* axes ("data",
+"model", None).  The launcher maps logical axes onto the physical mesh —
+single-pod ("data", "model") or multi-pod (("pod", "data"), "model") — by
+calling `set_logical_axes`.  Outside a mesh context (CPU smoke tests) hints
+are identity, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[str, Sequence[str], None]
+
+_AXES: Optional[dict] = None
+
+
+def set_logical_axes(mapping: Optional[dict]) -> None:
+    """mapping e.g. {'data': ('pod', 'data'), 'model': 'model'} or None to disable."""
+    global _AXES
+    _AXES = mapping
+
+
+@contextlib.contextmanager
+def logical_axes(mapping: Optional[dict]):
+    global _AXES
+    prev = _AXES
+    _AXES = mapping
+    try:
+        yield
+    finally:
+        _AXES = prev
+
+
+def spec(*logical: Axis) -> P:
+    assert _AXES is not None
+    phys = tuple(_AXES.get(a, a) if isinstance(a, str) else a for a in logical)
+    return P(*phys)
+
+
+def hint(x: jax.Array, *logical: Axis) -> jax.Array:
+    """with_sharding_constraint on logical axes; identity when no mesh is set."""
+    if _AXES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*logical))

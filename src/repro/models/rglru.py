@@ -1,0 +1,88 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) + causal depthwise conv.
+
+The linear recurrence h_t = a_t * h_{t-1} + b_t is evaluated with
+`jax.lax.associative_scan` over the sequence axis — O(log S) depth, fully
+parallel across batch/width, so 32k prefill needs no sequential loop.
+Decode carries (h, conv tail) as O(1) state — this is why the hybrid arch
+runs `long_500k` (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+C_SCALE = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def init_rglru(key, d_model: int, lru_width: int, conv_width: int, dtype):
+    ks = jax.random.split(key, 7)
+    R = lru_width
+    # Lambda init so a = sigmoid(lam)^c spreads over (0.9, 0.999) roughly
+    u = jax.random.uniform(ks[0], (R,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / C_SCALE) / (1 - u ** (1.0 / C_SCALE)))
+    return {
+        "w_in_x": init_dense(ks[1], d_model, R, dtype),
+        "w_in_gate": init_dense(ks[2], d_model, R, dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, R)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((R,), dtype),
+        "w_a": init_dense(ks[4], R, R, dtype),
+        "b_a": jnp.zeros((R,), dtype),
+        "w_x": init_dense(ks[5], R, R, dtype),
+        "b_x": jnp.zeros((R,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": init_dense(ks[6], R, d_model, dtype),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array = None):
+    """Depthwise causal conv. x (B, S, R), w (W, R). tail (B, W-1, R) carries
+    state across calls (decode); returns (y, new_tail)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W)) + b
+    return y.astype(x.dtype), xp[:, -(W - 1) :]
+
+
+def _lru_scan(a: jax.Array, bx: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + bx_t over axis 1, given h0 (B, R). Returns h (B,S,R)."""
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h + a_cum * h0[:, None, :]
+
+
+def rglru_apply(
+    params, x: jax.Array, h0: jax.Array, conv_tail: jax.Array = None
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B, S, D) -> (y (B, S, D), h_last (B, R), conv_tail).
+
+    Full Griffin recurrent block: in-proj -> causal conv -> RG-LRU -> gated
+    out-proj.  Works for S=1 decode (same code path, O(1) state)."""
+    gate = jax.nn.gelu((x @ params["w_in_gate"]).astype(jnp.float32)).astype(x.dtype)
+    xb = x @ params["w_in_x"]
+    xb, new_tail = causal_conv1d(xb, params["conv_w"], params["conv_b"], conv_tail)
+
+    r = jax.nn.sigmoid((xb @ params["w_a"] + params["b_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xb @ params["w_x"] + params["b_x"]).astype(jnp.float32))
+    log_a = -C_SCALE * r * jax.nn.softplus(params["lam"])  # log a_t  (B,S,R)
+    a = jnp.exp(log_a)
+    gated_x = i * xb.astype(jnp.float32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+
+    h = _lru_scan(a, bx, h0.astype(jnp.float32))
+    y = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return y, h[:, -1, :], new_tail
+
+
+def init_rglru_state(batch: int, lru_width: int) -> jax.Array:
+    return jnp.zeros((batch, lru_width), jnp.float32)

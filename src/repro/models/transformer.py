@@ -1,0 +1,567 @@
+"""Decoder backbone for all ten assigned architectures.
+
+One `init_params` / `forward` / `loss_fn` / `prefill` / `decode_step` API
+covering four families (ModelConfig.family):
+
+  dense   — GQA + RoPE + SwiGLU (mistral-nemo, phi4, qwen3, deepseek,
+            musicgen, pixtral backbones; optional qk-norm / SWA / softcap)
+  moe     — dense attention + top-k expert FFN (mixtral, qwen3-moe)
+  hybrid  — RecurrentGemma: [RG-LRU, RG-LRU, local-attn] groups, MLP after
+            each mixer
+  ssm     — Mamba2 SSD stack (attention-free)
+
+Homogeneous layer stacks are `lax.scan`ned over stacked parameters
+(HLO stays O(1) in depth — what keeps the 62-layer deepseek dry-run
+compilable at 512 devices) with optional per-layer remat.  The decode path
+carries a ring KV cache, quantized by default with CStream's NUQ codec
+(core/kvcache.py) — the paper's lossy-compression trade applied to the
+serving memory bottleneck.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache
+from repro.models import moe as moe_mod
+from repro.models import partition
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    attention_qkv,
+    attention_train,
+    flash_attention,
+    init_attention,
+    init_dense,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# =============================================================== init =====
+def _init_dense_layer(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ffn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_moe_layer(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ffn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "moe": moe_mod.init_moe(k2, cfg, dtype),
+    }
+
+
+def _init_ssm_layer(cfg, key, dtype):
+    return {
+        "norm": jnp.zeros((cfg.d_model,), dtype),
+        "mixer": ssd_mod.init_mamba2(key, cfg, dtype),
+    }
+
+
+def _init_rec_sublayer(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "mix_norm": jnp.zeros((cfg.d_model,), dtype),
+        "rglru": rglru_mod.init_rglru(k1, cfg.d_model, cfg.lru_width, cfg.conv_width, dtype),
+        "ffn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_hybrid_group(cfg, key, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "rec1": _init_rec_sublayer(cfg, k1, dtype),
+        "rec2": _init_rec_sublayer(cfg, k2, dtype),
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attention(k3, cfg, dtype),
+        "attn_ffn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn_ffn": init_swiglu(k4, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dtype = _pdtype(cfg)
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model)) / jnp.sqrt(cfg.d_model)).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(k_head, cfg.d_model, cfg.padded_vocab, dtype)
+
+    if cfg.family == "hybrid":
+        groups, rem = cfg.hybrid_pattern()
+        gk = jax.random.split(k_layers, groups + max(rem, 1))
+        params["groups"] = jax.vmap(lambda k: _init_hybrid_group(cfg, k, dtype))(gk[:groups])
+        if rem:
+            params["tail"] = jax.vmap(lambda k: _init_rec_sublayer(cfg, k, dtype))(gk[groups : groups + rem])
+        return params
+
+    init_layer = {
+        "dense": _init_dense_layer,
+        "moe": _init_moe_layer,
+        "ssm": _init_ssm_layer,
+    }[cfg.family]
+    lk = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: init_layer(cfg, k, dtype))(lk)
+    return params
+
+
+# ============================================================ forward =====
+def _cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def _dense_block(p, cfg, x, positions):
+    h = attention_train(p["attn"], cfg, rms_norm(x, p["attn_norm"]), positions, window=cfg.swa_window)
+    x = x + h
+    x = partition.hint(x, "data", None, None)
+    x = x + swiglu(p["ffn"], rms_norm(x, p["ffn_norm"]))
+    return partition.hint(x, "data", None, None)
+
+
+def _moe_block(p, cfg, x, positions):
+    h = attention_train(p["attn"], cfg, rms_norm(x, p["attn_norm"]), positions, window=cfg.swa_window)
+    x = x + h
+    x = partition.hint(x, "data", None, None)
+    y, aux = moe_mod.moe_ffn(p["moe"], cfg, rms_norm(x, p["ffn_norm"]))
+    return partition.hint(x + y, "data", None, None), aux
+
+
+def _ssm_block(p, cfg, x):
+    B = x.shape[0]
+    h0 = ssd_mod.init_ssm_state(B, cfg)
+    y, _, _ = ssd_mod.mamba2_apply(p["mixer"], cfg, rms_norm(x, p["norm"]), h0)
+    return partition.hint(x + y, "data", None, None)
+
+
+def _rec_sublayer(p, cfg, x, h0=None, conv_tail=None):
+    B = x.shape[0]
+    if h0 is None:
+        h0 = rglru_mod.init_rglru_state(B, cfg.lru_width)
+    y, h_last, tail = rglru_mod.rglru_apply(p["rglru"], rms_norm(x, p["mix_norm"]), h0, conv_tail)
+    x = x + y
+    x = x + swiglu(p["ffn"], rms_norm(x, p["ffn_norm"]))
+    return partition.hint(x, "data", None, None), h_last, tail
+
+
+def _hybrid_group(p, cfg, x, positions):
+    x, _, _ = _rec_sublayer(p["rec1"], cfg, x)
+    x, _, _ = _rec_sublayer(p["rec2"], cfg, x)
+    h = attention_train(p["attn"], cfg, rms_norm(x, p["attn_norm"]), positions, window=cfg.local_window)
+    x = x + h
+    x = x + swiglu(p["attn_ffn"], rms_norm(x, p["attn_ffn_norm"]))
+    return partition.hint(x, "data", None, None)
+
+
+def forward(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    inputs: jax.Array,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """inputs: int tokens (B, S) or embeddings (B, S, D) per cfg.input_kind.
+    Returns (logits (B, S, V), aux_loss scalar)."""
+    dtype = _dtype(cfg)
+    if cfg.input_kind == "tokens":
+        x = jnp.take(params["embed"], inputs, axis=0).astype(dtype)
+        B, S = inputs.shape
+    else:
+        x = inputs.astype(dtype)
+        B, S = inputs.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = partition.hint(x, "data", None, None)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        groups, rem = cfg.hybrid_pattern()
+        gparams = _cast(params["groups"], dtype)
+
+        def gbody(carry, gp):
+            return _hybrid_group(gp, cfg, carry, positions), None
+
+        if cfg.remat == "full":
+            gbody = jax.checkpoint(gbody)
+        x, _ = jax.lax.scan(gbody, x, gparams)
+        if rem:
+            tp = _cast(params["tail"], dtype)
+
+            def tbody(carry, p):
+                y, _, _ = _rec_sublayer(p, cfg, carry)
+                return y, None
+
+            if cfg.remat == "full":
+                tbody = jax.checkpoint(tbody)
+            x, _ = jax.lax.scan(tbody, x, tp)
+    else:
+        lparams = _cast(params["layers"], dtype)
+
+        if cfg.family == "dense":
+            def body(carry, lp):
+                return _dense_block(lp, cfg, carry, positions), jnp.zeros((), jnp.float32)
+        elif cfg.family == "moe":
+            def body(carry, lp):
+                return _moe_block(lp, cfg, carry, positions)
+        else:  # ssm
+            def body(carry, lp):
+                return _ssm_block(lp, cfg, carry), jnp.zeros((), jnp.float32)
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, lparams)
+        aux = jnp.sum(auxs)
+
+    x = rms_norm(x, params["final_norm"].astype(dtype))
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(dtype)
+    return partition.hint(logits, "data", None, "model"), aux
+
+
+# =============================================================== loss =====
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array], aux_weight: float = 0.01):
+    logits, aux = forward(params, cfg, batch["inputs"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ============================================================= decode =====
+def _round_window(w: int) -> int:
+    """Ring size: multiple of the NUQ scale group, and of the 2048-key decode
+    block when larger — keeps every blocked scan evenly divisible."""
+    g = min(kvcache.SCALE_GROUP, w)
+    w = -(-w // g) * g
+    if w > 2048:
+        w = -(-w // 2048) * 2048
+    return w
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    """Shape-stable decode state for `decode_step` (the serve_step operand).
+
+    Attention caches are ring buffers of size effective_kv_window(seq_len);
+    quantized (uint8 NUQ codes + group scales) when cfg.kv_quant."""
+    K, Dh = cfg.n_kv_heads, cfg.head_dim
+
+    def attn_cache(n: int, window: int):
+        window = _round_window(window)
+        if cfg.kv_quant:
+            G = min(kvcache.SCALE_GROUP, window)
+            return {
+                "k_codes": jnp.zeros((n, batch, window, K, Dh), jnp.uint8),
+                "v_codes": jnp.zeros((n, batch, window, K, Dh), jnp.uint8),
+                "k_scale": jnp.ones((n, batch, window // G, K), jnp.float32),
+                "v_scale": jnp.ones((n, batch, window // G, K), jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((n, batch, window, K, Dh), _dtype(cfg)),
+            "v": jnp.zeros((n, batch, window, K, Dh), _dtype(cfg)),
+        }
+
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        cache["layers"] = {
+            "ssm_state": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_groups, cfg.ssm_heads // cfg.ssm_groups, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32,
+            ),
+            "conv_tail": jnp.zeros(
+                (cfg.n_layers, batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+                _dtype(cfg),
+            ),
+        }
+    elif cfg.family == "hybrid":
+        groups, rem = cfg.hybrid_pattern()
+        W = cfg.effective_kv_window(seq_len)
+
+        def rec_state(n):
+            return {
+                "h": jnp.zeros((n, batch, cfg.lru_width), jnp.float32),
+                "conv_tail": jnp.zeros((n, batch, cfg.conv_width - 1, cfg.lru_width), _dtype(cfg)),
+            }
+
+        cache["groups"] = {
+            "rec1": rec_state(groups),
+            "rec2": rec_state(groups),
+            "attn": attn_cache(groups, W),
+        }
+        if rem:
+            cache["tail"] = rec_state(rem)
+    else:
+        W = cfg.effective_kv_window(seq_len)
+        cache["layers"] = attn_cache(cfg.n_layers, W)
+    return cache
+
+
+def _decode_attend(p, cfg, x_t, cache_l, pos, window):
+    """One layer's decode attention: write token into ring cache, attend."""
+    B = x_t.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_t, v_t = attention_qkv(p, cfg, x_t, positions)
+    W = next(iter(cache_l.values())).shape[1]
+    slot = pos % W
+    if cfg.kv_quant:
+        # distributed-LSE path: ring seq dim shard-local under shard_map
+        # when a mesh is active; single-view fallback otherwise (§Perf C1)
+        out, cache_l = kvcache.decode_attend_dlse(
+            q, cache_l, k_t, v_t, pos, window, softcap=cfg.attn_logit_softcap
+        )
+    else:
+        z = jnp.zeros((), jnp.int32)
+        cache_l = {
+            "k": jax.lax.dynamic_update_slice(cache_l["k"], k_t.astype(cache_l["k"].dtype), (z, slot, z, z)),
+            "v": jax.lax.dynamic_update_slice(cache_l["v"], v_t.astype(cache_l["v"].dtype), (z, slot, z, z)),
+        }
+        slots = jnp.arange(W)
+        abs_pos = jnp.where(pos >= W, pos - ((pos - slots) % W), slots)
+        valid = abs_pos <= pos
+        if window is not None:
+            valid = valid & (abs_pos > pos - window)
+        out = flash_attention(
+            q,
+            cache_l["k"],
+            cache_l["v"],
+            positions,
+            jnp.broadcast_to(abs_pos[None], (B, W)),
+            kv_valid=jnp.broadcast_to(valid[None], (B, W)),
+            causal=True,
+            softcap=cfg.attn_logit_softcap,
+        )
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, cache_l
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    cache: Dict[str, Any],
+    inputs_t: jax.Array,  # int tokens (B, 1) or embeddings (B, 1, D)
+) -> Tuple[Dict[str, Any], jax.Array]:
+    """One autoregressive step. Returns (new_cache, logits (B, 1, V))."""
+    dtype = _dtype(cfg)
+    pos = cache["pos"]
+    if cfg.input_kind == "tokens":
+        x = jnp.take(params["embed"], inputs_t, axis=0).astype(dtype)
+    else:
+        x = inputs_t.astype(dtype)
+    B = x.shape[0]
+    x = partition.hint(x, "data", None, None)
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+    if cfg.family == "ssm":
+        lparams = _cast(params["layers"], dtype)
+
+        def body(carry, scanned):
+            lp, cl = scanned
+            h = rms_norm(carry, lp["norm"])
+            y, new_state, new_tail = ssd_mod.mamba2_decode(
+                lp["mixer"], cfg, h, cl["ssm_state"], cl["conv_tail"].astype(dtype)
+            )
+            return carry + y, {"ssm_state": new_state, "conv_tail": new_tail.astype(dtype)}
+
+        x, new_layers = jax.lax.scan(body, x, (lparams, cache["layers"]))
+        new_cache["layers"] = new_layers
+    elif cfg.family == "hybrid":
+        gparams = _cast(params["groups"], dtype)
+        W = cfg.effective_kv_window(10**9)
+
+        def gbody(carry, scanned):
+            gp, gc = scanned
+            h, h1, t1 = _rec_sublayer(gp["rec1"], cfg, carry, gc["rec1"]["h"], gc["rec1"]["conv_tail"].astype(dtype))
+            h, h2, t2 = _rec_sublayer(gp["rec2"], cfg, h, gc["rec2"]["h"], gc["rec2"]["conv_tail"].astype(dtype))
+            a, new_ac = _decode_attend(gp["attn"], cfg, rms_norm(h, gp["attn_norm"]), gc["attn"], pos, cfg.local_window)
+            h = h + a
+            h = h + swiglu(gp["attn_ffn"], rms_norm(h, gp["attn_ffn_norm"]))
+            nc = {
+                "rec1": {"h": h1, "conv_tail": t1.astype(dtype)},
+                "rec2": {"h": h2, "conv_tail": t2.astype(dtype)},
+                "attn": new_ac,
+            }
+            return h, nc
+
+        x, new_groups = jax.lax.scan(gbody, x, (gparams, cache["groups"]))
+        new_cache["groups"] = new_groups
+        if "tail" in cache:
+            tp = _cast(params["tail"], dtype)
+
+            def tbody(carry, scanned):
+                p, tc = scanned
+                y, h_last, tail = _rec_sublayer(p, cfg, carry, tc["h"], tc["conv_tail"].astype(dtype))
+                return y, {"h": h_last, "conv_tail": tail.astype(dtype)}
+
+            x, new_tail = jax.lax.scan(tbody, x, (tp, cache["tail"]))
+            new_cache["tail"] = new_tail
+    else:
+        lparams = _cast(params["layers"], dtype)
+
+        def body(carry, scanned):
+            lp, cl = scanned
+            a, new_cl = _decode_attend(lp["attn"], cfg, rms_norm(carry, lp["attn_norm"]), cl, pos, cfg.swa_window)
+            h = carry + a
+            if cfg.family == "moe":
+                y, _ = moe_mod.moe_ffn(lp["moe"], cfg, rms_norm(h, lp["ffn_norm"]))
+            else:
+                y = swiglu(lp["ffn"], rms_norm(h, lp["ffn_norm"]))
+            return partition.hint(h + y, "data", None, None), new_cl
+
+        x, new_layers = jax.lax.scan(body, x, (lparams, cache["layers"]))
+        new_cache["layers"] = new_layers
+
+    x = rms_norm(x, params["final_norm"].astype(dtype))
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(dtype)
+    return new_cache, partition.hint(logits, "data", None, "model")
+
+
+def prefill(
+    params: Dict[str, Any], cfg: ModelConfig, inputs: jax.Array, cache_seq_len: Optional[int] = None
+) -> Tuple[Dict[str, Any], jax.Array]:
+    """Process a prompt, fill the decode cache, return (cache, last logits).
+
+    For attention families the per-layer K/V computed during the forward pass
+    are re-derived layer-by-layer and written (quantized) into the ring; for
+    recurrent families the final states are produced by the same apply fns."""
+    dtype = _dtype(cfg)
+    if cfg.input_kind == "tokens":
+        B, S = inputs.shape
+        x = jnp.take(params["embed"], inputs, axis=0).astype(dtype)
+    else:
+        B, S = inputs.shape[:2]
+        x = inputs.astype(dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache = init_decode_cache(cfg, B, max(cache_seq_len or S, S))
+
+    def empty_attn_layer(W):
+        W = _round_window(W)
+        K, Dh = cfg.n_kv_heads, cfg.head_dim
+        if cfg.kv_quant:
+            G = min(kvcache.SCALE_GROUP, W)
+            return {
+                "k_codes": jnp.zeros((B, W, K, Dh), jnp.uint8),
+                "v_codes": jnp.zeros((B, W, K, Dh), jnp.uint8),
+                "k_scale": jnp.ones((B, W // G, K), jnp.float32),
+                "v_scale": jnp.ones((B, W // G, K), jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((B, W, K, Dh), dtype),
+            "v": jnp.zeros((B, W, K, Dh), dtype),
+        }
+
+    def store_kv(cache_l, k, v):
+        """Write prefill K/V (B, S, K, Dh) at positions [0, S)."""
+        W = next(iter(cache_l.values())).shape[1]
+        Sw = min(S, W)
+        k_w, v_w = k[:, -Sw:], v[:, -Sw:]
+        # ring: absolute position p lives at slot p % W
+        start = (S - Sw) % W
+        idx = (start + jnp.arange(Sw)) % W
+        if cfg.kv_quant:
+            pad = (-Sw) % min(kvcache.SCALE_GROUP, W)
+            kq, ks = kvcache.quantize_block(jnp.pad(k_w, ((0, 0), (0, pad), (0, 0), (0, 0))))
+            vq, vs = kvcache.quantize_block(jnp.pad(v_w, ((0, 0), (0, pad), (0, 0), (0, 0))))
+            G = min(kvcache.SCALE_GROUP, W)
+            gidx = (start // G + jnp.arange(ks.shape[1])) % max(W // G, 1)
+            return {
+                "k_codes": cache_l["k_codes"].at[:, idx].set(kq[:, :Sw]),
+                "v_codes": cache_l["v_codes"].at[:, idx].set(vq[:, :Sw]),
+                "k_scale": cache_l["k_scale"].at[:, gidx].set(ks),
+                "v_scale": cache_l["v_scale"].at[:, gidx].set(vs),
+            }
+        return {
+            "k": cache_l["k"].at[:, idx].set(k_w.astype(cache_l["k"].dtype)),
+            "v": cache_l["v"].at[:, idx].set(v_w.astype(cache_l["v"].dtype)),
+        }
+
+    if cfg.family == "ssm":
+        lparams = _cast(params["layers"], dtype)
+
+        def body(carry, lp):
+            h0 = ssd_mod.init_ssm_state(B, cfg)
+            tail0 = jnp.zeros((B, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state), dtype)
+            y, h_last, tail = ssd_mod.mamba2_apply(lp["mixer"], cfg, rms_norm(carry, lp["norm"]), h0, tail0)
+            return carry + y, {"ssm_state": h_last, "conv_tail": tail.astype(dtype)}
+
+        x, new_layers = jax.lax.scan(body, x, lparams)
+        cache["layers"] = new_layers
+    elif cfg.family == "hybrid":
+        gparams = _cast(params["groups"], dtype)
+
+        def gbody(carry, gp):
+            tail0 = jnp.zeros((B, cfg.conv_width - 1, cfg.lru_width), dtype)
+            h, h1, t1 = _rec_sublayer(gp["rec1"], cfg, carry, None, tail0)
+            h, h2, t2 = _rec_sublayer(gp["rec2"], cfg, h, None, tail0)
+            hn = rms_norm(h, gp["attn_norm"])
+            q, k, v = attention_qkv(gp["attn"], cfg, hn, positions)
+            a = flash_attention(q, k, v, positions, positions, window=cfg.local_window, softcap=cfg.attn_logit_softcap)
+            h = h + a.reshape(B, S, cfg.n_heads * cfg.head_dim) @ gp["attn"]["wo"]
+            h = h + swiglu(gp["attn_ffn"], rms_norm(h, gp["attn_ffn_norm"]))
+            W = cfg.effective_kv_window(max(cache_seq_len or S, S))
+            new_ac = store_kv(empty_attn_layer(W), k, v)
+            return h, {
+                "rec1": {"h": h1, "conv_tail": t1.astype(dtype)},
+                "rec2": {"h": h2, "conv_tail": t2.astype(dtype)},
+                "attn": new_ac,
+            }
+
+        x, new_groups = jax.lax.scan(gbody, x, gparams)
+        cache["groups"] = new_groups
+        if "tail" in cache:
+            tp = _cast(params["tail"], dtype)
+
+            def tbody(carry, p):
+                tail0 = jnp.zeros((B, cfg.conv_width - 1, cfg.lru_width), dtype)
+                y, h_last, tail = _rec_sublayer(p, cfg, carry, None, tail0)
+                return y, {"h": h_last, "conv_tail": tail.astype(dtype)}
+
+            x, new_tail = jax.lax.scan(tbody, x, tp)
+            cache["tail"] = new_tail
+    else:
+        lparams = _cast(params["layers"], dtype)
+
+        def body(carry, scanned):
+            lp, cl = scanned
+            hn = rms_norm(carry, lp["attn_norm"])
+            q, k, v = attention_qkv(lp["attn"], cfg, hn, positions)
+            a = flash_attention(q, k, v, positions, positions, window=cfg.swa_window, softcap=cfg.attn_logit_softcap)
+            h = carry + a.reshape(B, S, cfg.n_heads * cfg.head_dim) @ lp["attn"]["wo"]
+            if cfg.family == "moe":
+                y, _ = moe_mod.moe_ffn(lp["moe"], cfg, rms_norm(h, lp["ffn_norm"]))
+            else:
+                y = swiglu(lp["ffn"], rms_norm(h, lp["ffn_norm"]))
+            return h + y, store_kv(cl, k, v)
+
+        x, new_layers = jax.lax.scan(body, x, (lparams, cache["layers"]))
+        cache["layers"] = new_layers
+
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    x = rms_norm(x, params["final_norm"].astype(dtype))
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x[:, -1:] @ head.astype(dtype)
+    return cache, logits

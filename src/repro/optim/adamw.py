@@ -1,0 +1,97 @@
+"""AdamW from scratch: decoupled weight decay, global-norm clipping,
+schedule-driven LR.  Optimizer state is a pytree mirroring the params
+(so the sharding policy shards m/v exactly like the weights — FSDP'd
+Adam states, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # int32 []
+    m: Any  # pytree like params
+    v: Any  # pytree like params
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+def adamw(cfg: AdamWConfig):
+    """Returns (init_fn, update_fn).
+
+    update_fn(grads, state, params) -> (updates, new_state); `updates` are
+    the deltas to ADD to params (already scaled by -lr), matching the optax
+    convention so the train loop is a plain tree_map add."""
+
+    def init_fn(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update_fn(grads, state: AdamWState, params) -> Tuple[Any, AdamWState, dict]:
+        step = state.step + 1
+        if cfg.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = cfg.lr * (cfg.schedule(step) if cfg.schedule is not None else 1.0)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+            v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+            mhat = m_new / (1 - cfg.b1 ** step.astype(jnp.float32))
+            vhat = v_new / (1 - cfg.b2 ** step.astype(jnp.float32))
+            delta = -lr * (
+                mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            )
+            return delta.astype(p.dtype), m_new, v_new
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return (
+            updates,
+            AdamWState(step=step, m=new_m, v=new_v),
+            {"grad_norm": gnorm, "lr": lr},
+        )
+
+    return init_fn, update_fn
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)

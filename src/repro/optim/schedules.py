@@ -1,0 +1,27 @@
+"""LR schedules (pure functions of the int step, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    """Linear warmup -> cosine decay to `final_frac` of peak. Returns a
+    multiplier on the configured peak LR."""
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def constant():
+    def sched(step):
+        return jnp.ones_like(step, jnp.float32)
+
+    return sched

@@ -1,0 +1,7 @@
+from repro.runtime.sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    param_specs,
+    physical_specs,
+    resolve,
+)

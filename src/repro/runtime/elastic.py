@@ -1,0 +1,83 @@
+"""Elastic scaling: remesh a running job to a different device count.
+
+Checkpoints are mesh-independent (checkpoint/manager.py stores global
+arrays in chunked slabs), so elasticity is a *policy* layer:
+
+  plan_mesh(n_devices)       — pick (data, model) [(pod, data, model)]
+                               factors for the devices that are actually
+                               healthy, preferring the model axis at 16
+                               (the TP degree every arch was validated at)
+                               and folding the remainder into data/pod;
+  reshard(tree, old->new)    — device_put onto the new mesh's shardings
+                               (load_checkpoint does the same from disk);
+  ElasticSession             — drives shrink/grow across segment restarts:
+                               on failure of K nodes, re-plan with N-K,
+                               restore, continue — tested on CPU meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.models import partition
+from repro.runtime import sharding as shpol
+
+
+def plan_mesh(n_devices: int, prefer_model: int = 16, multi_pod_at: int = 512) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Factor the healthy device count into a mesh shape.
+
+    Keeps the model axis at the largest power-of-two divisor <= prefer_model
+    (TP degree changes force a different expert/head partition; we avoid
+    exceeding the validated 16), splits off a pod axis for very large jobs."""
+    model = 1
+    for cand in (prefer_model, 8, 4, 2, 1):
+        if n_devices % cand == 0:
+            model = cand
+            break
+    rest = n_devices // model
+    if n_devices >= multi_pod_at and rest % 2 == 0:
+        return (2, rest // 2, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def logical_mapping(axis_names: Tuple[str, ...]) -> dict:
+    if "pod" in axis_names:
+        return {"data": ("pod", "data"), "model": "model"}
+    return {"data": "data", "model": "model"}
+
+
+def make_mesh_for(n_devices: int, devices=None):
+    shape, names = plan_mesh(n_devices)
+    return jax.make_mesh(shape, names, devices=devices), logical_mapping(names)
+
+
+def reshard(tree: Any, logical_specs: Any, mesh, mapping: dict) -> Any:
+    """device_put a live pytree onto a (new) mesh per its logical specs."""
+    with partition.logical_axes(mapping):
+        shardings = shpol.resolve(logical_specs, mesh)
+    return jax.tree_util.tree_map(jax.device_put, tree, shardings)
+
+
+@dataclasses.dataclass
+class ElasticSession:
+    """Tracks the current mesh and re-plans when the healthy set changes."""
+
+    n_devices: int
+    mesh: Any = None
+    mapping: Optional[dict] = None
+
+    def __post_init__(self):
+        if self.mesh is None:
+            self.mesh, self.mapping = make_mesh_for(self.n_devices)
+
+    def resize(self, new_n: int):
+        """Shrink (node loss) or grow (nodes returned). Returns self."""
+        self.n_devices = new_n
+        self.mesh, self.mapping = make_mesh_for(new_n)
+        return self
+
+    def shardings_for(self, logical_specs: Any) -> Any:
+        with partition.logical_axes(self.mapping):
+            return shpol.resolve(logical_specs, self.mesh)

@@ -1,0 +1,155 @@
+"""Fault tolerance for long-running multi-pod jobs (DESIGN.md §8).
+
+Three cooperating pieces, all host-side (no device state):
+
+  HeartbeatMonitor — the train loop beats once per step; a watchdog thread
+      flags a STALL if no beat lands within `timeout_s` (hung collective,
+      dead host).  At 1000+ nodes this is the per-host agent the cluster
+      scheduler scrapes; here the same object drives the in-process restart
+      policy and is unit-tested directly.
+
+  StragglerDetector — keeps a rolling window of step times and flags steps
+      slower than `threshold` x the rolling median: the TPU-pod analogue of
+      the paper's asymmetry problem (one slow worker drags the makespan —
+      exactly Fig 13b's "big cores waiting for little cores").  The driver
+      responds by logging + optionally re-balancing grad-accumulation
+      micro-batches (the asymmetry-aware knob) rather than blocking.
+
+  run_with_restarts — supervisor loop: run the step function; on failure
+      (or injected fault) restore the latest COMMITTED checkpoint and
+      resume.  Resume-exactness is tested in tests/test_fault.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, Deque, List, Optional
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    timeout_s: float = 300.0
+    on_stall: Optional[Callable[[float], None]] = None
+    _last_beat: float = dataclasses.field(default_factory=time.monotonic)
+    _stalled: bool = False
+    _stop: threading.Event = dataclasses.field(default_factory=threading.Event)
+    _thread: Optional[threading.Thread] = None
+
+    def beat(self):
+        self._last_beat = time.monotonic()
+        self._stalled = False
+
+    @property
+    def stalled(self) -> bool:
+        return self._stalled
+
+    def start(self, poll_s: float = 1.0):
+        def watch():
+            while not self._stop.wait(poll_s):
+                silent = time.monotonic() - self._last_beat
+                if silent > self.timeout_s and not self._stalled:
+                    self._stalled = True
+                    if self.on_stall:
+                        self.on_stall(silent)
+
+        self._thread = threading.Thread(target=watch, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join()
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    window: int = 32
+    threshold: float = 2.0
+    _times: Deque[float] = dataclasses.field(default_factory=deque)
+    events: List[dict] = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, step_time_s: float) -> bool:
+        """Returns True if this step is a straggler vs the rolling median."""
+        med = self.median()
+        self._times.append(step_time_s)
+        if len(self._times) > self.window:
+            self._times.popleft()
+        if med is not None and step_time_s > self.threshold * med:
+            self.events.append({"step": step, "time_s": step_time_s, "median_s": med})
+            return True
+        return False
+
+    def median(self) -> Optional[float]:
+        if len(self._times) < 4:
+            return None
+        s = sorted(self._times)
+        return s[len(s) // 2]
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic fault schedule for tests/drills: raises at given steps."""
+
+    fail_at_steps: tuple = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+def run_with_restarts(
+    step_fn: Callable[[int, object], object],
+    init_state: object,
+    n_steps: int,
+    manager,  # CheckpointManager
+    checkpoint_every: int = 10,
+    max_restarts: int = 3,
+    shardings=None,
+    injector: Optional[FaultInjector] = None,
+    straggler: Optional[StragglerDetector] = None,
+    heartbeat: Optional[HeartbeatMonitor] = None,
+):
+    """Supervised training segment: checkpoint/restart on failure.
+
+    step_fn(step, state) -> state.  Returns (final_state, log) where log
+    records restarts and straggler events.  State must be a pytree (it is
+    checkpointed as-is)."""
+    log = {"restarts": 0, "resumed_from": [], "stragglers": 0}
+    state = init_state
+    step = 0
+    restarts = 0
+    while step < n_steps:
+        try:
+            while step < n_steps:
+                if injector is not None:
+                    injector.maybe_fail(step)
+                t0 = time.perf_counter()
+                state = step_fn(step, state)
+                dt = time.perf_counter() - t0
+                if heartbeat is not None:
+                    heartbeat.beat()
+                if straggler is not None and straggler.record(step, dt):
+                    log["stragglers"] += 1
+                step += 1
+                if step % checkpoint_every == 0:
+                    manager.save_async(step, state)
+            break
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            manager.wait()
+            got_step, got = manager.restore_latest(shardings)
+            if got is None:
+                state, step = init_state, 0
+            else:
+                state, step = got, got_step
+            log["restarts"] += 1
+            log["resumed_from"].append(step)
+    manager.wait()
+    return state, log

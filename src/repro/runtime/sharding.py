@@ -1,0 +1,166 @@
+"""Per-architecture sharding policy (DESIGN.md §8).
+
+Logical axes:  "data"  = DP + FSDP (and, multi-pod, ("pod","data"))
+               "model" = TP / EP / sequence-parallel KV
+
+Rules (resolved per param-tree path):
+  * embeddings vocab-sharded over model + FSDP over d_model;
+  * attention q/o projections head-sharded over model, FSDP over d_model;
+  * k/v projections FSDP-only when n_kv_heads < model axis (GQA heads
+    don't split), else head-sharded;
+  * dense FFN: d_ff over model, FSDP over d_model;
+  * MoE: experts over model when E % model_axis == 0 (qwen3-moe), else TP
+    inside each expert (mixtral);
+  * KV cache (batch -> data, seq -> model): the sequence-parallel layout
+    whose distributed-LSE decode makes 32k/500k caches shardable;
+  * optimizer m/v mirror the parameter specs (FSDP'd Adam).
+
+All specs here are LOGICAL; `partition.spec` maps them onto the physical
+mesh (single-pod or multi-pod) at lowering time.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import partition
+from repro.models.config import ModelConfig
+
+MODEL_AXIS_SIZE = 16  # production meshes put 16 chips on the model axis
+
+
+def _rule(cfg: ModelConfig, path: str, ndim: int, mode: str) -> tuple:
+    """Logical axes for one param leaf; `path` is '/'-joined tree keys.
+    Leading stacked-layer dims (layers/groups/tail) already accounted for."""
+    kv_shardable = (cfg.n_kv_heads * cfg.head_dim) % MODEL_AXIS_SIZE == 0 and cfg.n_kv_heads >= MODEL_AXIS_SIZE
+    ep = cfg.n_experts % MODEL_AXIS_SIZE == 0 and cfg.n_experts > 0
+    # train: FSDP over data.  serve: weights replicated over data (latency)
+    # EXCEPT >20B models, whose bf16 weights + cache would blow the 16 GB
+    # HBM at TP-16 — those keep FSDP (weight-gathered serving).
+    fsdp = "data" if (mode == "train" or cfg.param_count() > 2e10) else None
+
+    def base():
+        # MoE expert tensors first (they share leaf names with dense FFN).
+        # STORAGE is FSDP'd over data (a 46B MoE's fp32 master + Adam states
+        # must spread over all 256 chips); moe_ffn re-hints the bf16 slice
+        # to model-only before the einsums — a ZeRO-style per-layer weight
+        # all-gather (~59 MB/matrix) — because contracting a data-sharded
+        # dim makes SPMD partial-sum every expert matmul into per-layer
+        # activation all-reduces (§Perf A1/A5).
+        if path.endswith(("moe/w_gate", "moe/w_up")):
+            return ("model", fsdp, None) if ep else (None, fsdp, "model")
+        if path.endswith("moe/w_down"):
+            return ("model", None, fsdp) if ep else (None, "model", fsdp)
+        if path.endswith("embed"):
+            return ("model", fsdp)
+        if path.endswith("head"):
+            return (fsdp, "model")
+        if path.endswith(("wq", "w_gate", "w_up", "w_in_x", "w_in_gate", "w_a", "w_x", "in_proj")):
+            return (fsdp, "model")
+        if path.endswith(("wk", "wv")):
+            return (fsdp, "model") if kv_shardable else (fsdp, None)
+        if path.endswith(("wo", "w_down", "w_out", "out_proj")):
+            return ("model", fsdp)
+        if path.endswith("router"):
+            return (fsdp, None)
+        if path.endswith("conv_w"):
+            return (None, "model")
+        return None  # norms, biases, lam, A_log, ... replicated
+
+    # MoE expert tensors carry an extra leading E dim — handled above with
+    # 3-tuples; everything else is 1- or 2-D past the layer stack.
+    spec = base()
+    if spec is None:
+        return ()
+    return spec
+
+
+def param_specs(cfg: ModelConfig, mode: str = "train") -> Any:
+    """Pytree of LOGICAL PartitionSpecs matching init_params(cfg) exactly.
+
+    mode='train': FSDP over data;  mode='serve': weights replicated over
+    data (decode is latency-bound; the all-gather-per-layer of FSDP serving
+    is the §Perf baseline-vs-optimized knob)."""
+    from repro.models.transformer import init_params
+
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+    def one(path_keys, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path_keys]
+        path = "/".join(str(k) for k in keys)
+        stacked = keys[0] in ("layers", "groups", "tail")  # leading L/G dim
+        logical = _rule(cfg, path, leaf.ndim, mode)
+        pad = leaf.ndim - len(logical) - (1 if stacked else 0)
+        spec = ((None,) if stacked else ()) + (None,) * pad + tuple(logical)
+        return spec[: leaf.ndim]
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def batch_specs(cfg: ModelConfig, kind: str, data_ok: bool = True) -> Dict[str, tuple]:
+    """Logical specs for the input feeds.  data_ok=False replicates the batch
+    dim (long_500k's global_batch=1 cannot shard over the data axis)."""
+    d = "data" if data_ok else None
+    if cfg.input_kind == "embeddings":
+        ins = (d, None, None)
+    else:
+        ins = (d, None)
+    if kind == "train":
+        return {"inputs": ins, "labels": (d, None)}
+    if kind == "prefill":
+        return {"inputs": ins}
+    return {"inputs_t": ins}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Any:
+    """Logical specs for the decode cache: (batch->data, seq->model).
+
+    batch==1 (long_500k) leaves batch unsharded and keeps seq->model."""
+    from repro.models.transformer import init_decode_cache
+
+    shapes = jax.eval_shape(lambda: init_decode_cache(cfg, batch, seq_len))
+    data = "data" if batch > 1 else None
+
+    def one(path_keys, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", None))) for k in path_keys]
+        name = keys[-1]
+        if name == "pos":
+            return ()
+        if name in ("k_codes", "v_codes", "k", "v"):
+            return (None, data, "model", None, None)  # (L, B, W, K, Dh)
+        if name in ("k_scale", "v_scale"):
+            return (None, data, "model", None)  # (L, B, W//G, K)
+        if name == "ssm_state":
+            return (None, data, None, "model", None, None)  # (L,B,G,E,P,N)
+        if name == "conv_tail":
+            return (None, data, None, "model")  # (L,B,W-1,C)
+        if name == "h":
+            return (None, data, "model")  # (G,B,R)
+        return (None,) * leaf.ndim
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+# --------------------------------------------------------------- resolve --
+def resolve(logical_tree: Any, mesh) -> Any:
+    """Logical spec pytree -> NamedSharding pytree on `mesh` (uses the
+    active partition.logical_axes mapping)."""
+
+    def one(t):
+        return NamedSharding(mesh, partition.spec(*t))
+
+    return jax.tree_util.tree_map(
+        one, logical_tree, is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, list)
+    )
+
+
+def physical_specs(logical_tree: Any) -> Any:
+    """Logical spec pytree -> PartitionSpec pytree (for in_shardings=)."""
+    return jax.tree_util.tree_map(
+        lambda t: partition.spec(*t),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, list),
+    )

@@ -1,0 +1,151 @@
+"""Unit + property tests for the ten CStream codecs (paper Table 1)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.algorithms import PAPER_TABLE1, codec_names, make_codec
+from repro.core.calibration import calibrated_kwargs
+from repro.core import metrics
+
+LANES, B = 4, 256
+RNG = np.random.default_rng(42)
+
+
+def _make(name, sample=None, **extra):
+    kw = calibrated_kwargs(name, np.asarray(sample)) if sample is not None else {}
+    kw.update(extra)
+    return make_codec(name, **kw)
+
+
+def _streams():
+    return {
+        "uniform16": RNG.integers(0, 65536, size=(LANES, B)).astype(np.uint32),
+        "smooth": np.clip(
+            np.cumsum(RNG.integers(-8, 9, size=(LANES, B)), axis=1) + 4096, 0, 65535
+        ).astype(np.uint32),
+        "runs": np.repeat(
+            RNG.integers(0, 64, size=(LANES, B // 16)).astype(np.uint32), 16, axis=1
+        ),
+        "zeros": np.zeros((LANES, B), np.uint32),
+    }
+
+
+def test_all_paper_algorithms_registered():
+    assert set(PAPER_TABLE1.values()) <= set(codec_names())
+    assert len(PAPER_TABLE1) == 10
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_TABLE1.values()))
+@pytest.mark.parametrize("sname", sorted(_streams()))
+def test_roundtrip(name, sname):
+    codec = _make(name, sample=_streams()[sname])
+    x = jnp.asarray(_streams()[sname])
+    xhat = codec.roundtrip(x)
+    assert xhat.shape == x.shape
+    assert not np.any(np.isnan(np.asarray(xhat, np.float64)))
+    if not codec.meta.lossy:
+        np.testing.assert_array_equal(np.asarray(xhat), np.asarray(x))
+    else:
+        err = metrics.nrmse(x, xhat)
+        assert err < 0.05, f"{name}/{sname}: NRMSE {err} exceeds paper bound 5%"
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_TABLE1.values()))
+def test_multibatch_state_continuity(name):
+    """Stateful codecs must decode correctly across micro-batch boundaries."""
+    x = jnp.asarray(
+        np.clip(
+            np.cumsum(RNG.integers(-8, 9, size=(LANES, 4 * B)), axis=1) + 4096,
+            0,
+            65535,
+        ).astype(np.uint32)
+    )
+    codec = _make(name, sample=np.asarray(x))
+    st_e, st_d = codec.init_state(LANES), codec.init_state(LANES)
+    outs = []
+    for k in range(4):
+        chunk = x[:, k * B : (k + 1) * B]
+        st_e, enc = codec.encode(st_e, chunk)
+        st_d, xhat = codec.decode(st_d, enc)
+        outs.append(np.asarray(xhat))
+    xhat_all = np.concatenate(outs, axis=1)
+    if not codec.meta.lossy:
+        np.testing.assert_array_equal(xhat_all, np.asarray(x))
+    else:
+        assert metrics.nrmse(x, xhat_all) < 0.05
+
+
+def test_lossy_ratio_in_paper_band():
+    """Paper claim: lossy algorithms reach ratios 2.0–8.5 at <5% information loss."""
+    smooth = jnp.asarray(_streams()["smooth"])
+    seen = []
+    for name, kw in [
+        ("uanuq", {"qbits": 12, "vmax": 65535.0}),
+        ("uaadpcm", {"qbits": 6, "vmax": 65535.0}),
+        ("pla", {"window": 16, "eps": 24.0}),
+    ]:
+        codec = make_codec(name, **kw)
+        st = codec.init_state(LANES)
+        _, enc = codec.encode(st, smooth)
+        ratio = metrics.compression_ratio(32 * smooth.size, float(enc.total_bits))
+        _, xhat = codec.decode(codec.init_state(LANES), enc)
+        assert metrics.nrmse(smooth, xhat) < 0.05
+        seen.append(ratio)
+    assert max(seen) > 4.0 and min(seen) >= 2.0, seen
+
+
+def test_tdic32_exact_beats_frozen_on_duplicates():
+    x = jnp.asarray((RNG.integers(0, 16, size=(LANES, 4, B)) * 977).astype(np.uint32))
+    ratios = {}
+    for mode in ("frozen", "exact"):
+        codec = make_codec("tdic32", mode=mode)
+        st = codec.init_state(LANES)
+        bits = 0.0
+        for k in range(4):
+            st, enc = codec.encode(st, x[:, k])
+            bits += float(enc.total_bits)
+        ratios[mode] = metrics.compression_ratio(32 * LANES * 4 * B, bits)
+    assert ratios["exact"] > ratios["frozen"] > 1.0
+
+
+@given(
+    data=st.lists(st.integers(0, 2**32 - 1), min_size=8, max_size=64),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_lossless_roundtrip_arbitrary_u32(data):
+    """Property: lossless codecs are exact on arbitrary uint32 streams."""
+    n = (len(data) // 8) * 8
+    x = jnp.asarray(np.array(data[:n], np.uint32).reshape(1, n))
+    for name in ("leb128", "delta_leb128", "tcomp32", "rle", "tdic32"):
+        codec = _make(name)
+        xhat = codec.roundtrip(x)
+        np.testing.assert_array_equal(np.asarray(xhat), np.asarray(x), err_msg=name)
+
+
+@given(
+    vals=st.lists(st.integers(0, 65535), min_size=16, max_size=48),
+    qbits=st.integers(6, 14),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_lossy_monotone_ratio_vs_qbits(vals, qbits):
+    """Property: UANUQ output size is exactly qbits/tuple; ratio = 32/qbits."""
+    n = (len(vals) // 16) * 16
+    x = jnp.asarray(np.array(vals[:n], np.uint32).reshape(1, n))
+    codec = make_codec("uanuq", qbits=qbits, vmax=65535.0)
+    _, enc = codec.encode(None, x)
+    assert float(enc.total_bits) == qbits * n
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_rle_expansion_conserves_counts(seed):
+    """Property: RLE emitted counts sum exactly to the tuple count."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        np.repeat(rng.integers(0, 8, size=(2, 32)).astype(np.uint32), 8, axis=1)
+    )
+    codec = make_codec("rle")
+    _, enc = codec.encode(None, x)
+    counts = np.where(np.asarray(enc.bitlen) > 0, np.asarray(enc.codes[..., 1]), 0)
+    np.testing.assert_array_equal(counts.sum(axis=1), [x.shape[1]] * 2)

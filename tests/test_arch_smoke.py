@@ -1,0 +1,128 @@
+"""Per-assigned-architecture smoke tests (task deliverable f).
+
+Each arch instantiates a REDUCED same-family config and runs one forward +
+one train step + one decode step on CPU, asserting output shapes and no
+NaNs.  The FULL configs are exercised only via the dry-run."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import arch_ids, get_arch
+from repro.launch.steps import TrainStepConfig, make_train_step
+from repro.models import decode_step, forward, init_params, prefill
+from repro.optim import AdamWConfig
+
+KEY = jax.random.PRNGKey(1)
+ALL_ARCHS = arch_ids()
+
+
+def reduced_cfg(arch_id):
+    return get_arch(arch_id).model.reduced()
+
+
+def make_inputs(cfg, B=2, S=16):
+    if cfg.input_kind == "embeddings":
+        return jax.random.normal(KEY, (B, S, cfg.d_model), jnp.bfloat16)
+    return jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+
+
+def test_all_ten_archs_registered():
+    assert len(ALL_ARCHS) == 10
+    for aid in (
+        "musicgen-large", "mistral-nemo-12b", "phi4-mini-3.8b", "qwen3-1.7b",
+        "deepseek-coder-33b", "mixtral-8x7b", "qwen3-moe-30b-a3b",
+        "recurrentgemma-9b", "pixtral-12b", "mamba2-1.3b",
+    ):
+        assert aid in ALL_ARCHS
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_smoke_forward(arch_id):
+    cfg = reduced_cfg(arch_id)
+    params = init_params(cfg, KEY)
+    B, S = 2, 16
+    x = make_inputs(cfg, B, S)
+    logits, aux = forward(params, cfg, x)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_smoke_train_step(arch_id):
+    cfg = reduced_cfg(arch_id)
+    init_fn, step = make_train_step(cfg, AdamWConfig(lr=1e-3), TrainStepConfig(microbatches=1))
+    params, opt = init_fn(KEY)
+    B, S = 2, 16
+    batch = {
+        "inputs": make_inputs(cfg, B, S),
+        "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+    }
+    params2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(opt2.step) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(params2))
+        if jnp.issubdtype(a.dtype, jnp.floating)
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_smoke_decode(arch_id):
+    cfg = reduced_cfg(arch_id)
+    params = init_params(cfg, KEY)
+    B, S = 2, 8
+    prompt = make_inputs(cfg, B, S)
+    cache, logits = prefill(params, cfg, prompt, cache_seq_len=24)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    if cfg.input_kind == "embeddings":
+        nxt = jax.random.normal(KEY, (B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    cache, logits2 = decode_step(params, cfg, cache, nxt)
+    assert logits2.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+    assert int(cache["pos"]) == S + 1
+
+
+@pytest.mark.parametrize("arch_id", ["mixtral-8x7b", "recurrentgemma-9b", "mamba2-1.3b"])
+def test_long_context_archs_have_bounded_window(arch_id):
+    """The three long_500k-runnable archs keep O(window) decode state."""
+    cfg = get_arch(arch_id).model
+    w = cfg.effective_kv_window(524_288)
+    assert w is None or w <= 4096
+
+
+def test_full_attention_archs_skip_long500k():
+    for aid in ALL_ARCHS:
+        spec = get_arch(aid)
+        names = [s.name for s in spec.runnable_shapes()]
+        if aid in ("mixtral-8x7b", "recurrentgemma-9b", "mamba2-1.3b"):
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+
+
+def test_param_counts_match_published_sizes():
+    """Sanity: each arch's parameter count is within 12% of its nameplate."""
+    expect = {
+        "mistral-nemo-12b": 12.2e9,
+        "phi4-mini-3.8b": 3.8e9,
+        "qwen3-1.7b": 1.7e9,
+        "deepseek-coder-33b": 33e9,
+        "mixtral-8x7b": 46.7e9,
+        "qwen3-moe-30b-a3b": 30.5e9,
+        "recurrentgemma-9b": 9.2e9,
+        "mamba2-1.3b": 1.3e9,
+        "pixtral-12b": 12.2e9,
+        "musicgen-large": 3.3e9,
+    }
+    for aid, n in expect.items():
+        got = get_arch(aid).model.param_count()
+        assert abs(got - n) / n < 0.12, (aid, got, n)

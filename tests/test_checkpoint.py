@@ -1,0 +1,112 @@
+"""Checkpointing: atomicity, corruption fallback, async, retention, elastic."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, load_checkpoint, save_checkpoint
+from repro.checkpoint.manager import _COMMIT_SUFFIX, committed_steps
+
+
+def tree():
+    return {
+        "w": jnp.arange(24.0).reshape(4, 6),
+        "nested": {"b": jnp.ones((7,), jnp.int32), "scalar": jnp.asarray(2.5)},
+    }
+
+
+def assert_tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 3, tree())
+    assert latest_step(d) == 3
+    assert_tree_equal(load_checkpoint(d, 3), tree())
+
+
+def test_roundtrip_compressed(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, tree(), codec="zlib")
+    assert_tree_equal(load_checkpoint(d, 1), tree())
+
+
+def test_atomic_no_commit_marker_means_invisible(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 5, tree())
+    os.remove(os.path.join(d, f"step_{5:09d}" + _COMMIT_SUFFIX))
+    assert latest_step(d) is None
+
+
+def test_corruption_detected_and_fallback(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, tree())
+    save_checkpoint(d, 2, tree())
+    # corrupt newest
+    step_dir = os.path.join(d, f"step_{2:09d}")
+    target = next(f for f in os.listdir(step_dir) if f.endswith(".bin"))
+    p = os.path.join(step_dir, target)
+    raw = open(p, "rb").read()
+    open(p, "wb").write(raw[:-1] + bytes([raw[-1] ^ 0xFF]))
+    with pytest.raises(ValueError):
+        load_checkpoint(d, 2)
+    mgr = CheckpointManager(d)
+    step, got = mgr.restore_latest()
+    assert step == 1
+    assert_tree_equal(got, tree())
+
+
+def test_async_manager_and_retention(tmp_path):
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, tree())
+    mgr.wait()
+    assert committed_steps(d) == [3, 4]
+
+
+def test_namedtuple_state_needs_like(tmp_path):
+    from repro.optim import AdamWConfig, adamw
+
+    init, _ = adamw(AdamWConfig())
+    params = {"w": jnp.ones((3,))}
+    st = init(params)
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"opt": st})
+    with pytest.raises(ValueError):
+        load_checkpoint(d, 1)  # no treedef, no like
+    got = load_checkpoint(d, 1, like={"opt": st})
+    assert int(got["opt"].step) == 0
+    assert_tree_equal(got["opt"].m, st.m)
+
+
+def test_chunked_large_leaf(tmp_path, monkeypatch):
+    import repro.checkpoint.manager as M
+
+    monkeypatch.setattr(M, "_CHUNK_BYTES", 64)  # force chunking
+    d = str(tmp_path)
+    big = {"x": jnp.arange(1000, dtype=jnp.float32).reshape(100, 10)}
+    M.save_checkpoint(d, 1, big)
+    manifest = json.load(open(os.path.join(d, "step_000000001", "manifest.json")))
+    assert len(manifest["leaves"][0]["chunks"]) > 1
+    assert_tree_equal(M.load_checkpoint(d, 1), big)
+
+
+def test_elastic_reshard_on_load(tmp_path):
+    """Saved on one 'mesh', loaded onto a different sharding layout."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    d = str(tmp_path)
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(d, 1, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    got = load_checkpoint(d, 1, shardings=sh)
+    assert got["w"].sharding.spec == P("data")
+    assert_tree_equal(got, t)

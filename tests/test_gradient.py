@@ -1,0 +1,97 @@
+"""Gradient compression: codec bounds, error feedback, packing — with
+hypothesis property tests on the quantizer invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gradient import (
+    GradCompressionConfig,
+    dequantize_tensor,
+    ef_init,
+    ef_step,
+    quantize_tensor,
+    roundtrip,
+    wire_bytes,
+)
+
+
+@pytest.mark.parametrize("qbits,max_rel", [(8, 0.05), (4, 0.5)])
+def test_roundtrip_relative_error_bounded(qbits, max_rel):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 0.02, (513, 37)).astype(np.float32))
+    cfg = GradCompressionConfig(qbits=qbits)
+    xh = roundtrip(x, cfg)
+    rel = float(jnp.linalg.norm(x - xh) / jnp.linalg.norm(x))
+    assert rel < max_rel
+
+
+def test_wire_bytes_ratio():
+    x = jnp.zeros((4096, 256), jnp.float32)
+    assert wire_bytes(x, GradCompressionConfig(qbits=8)) < x.size * 4 / 3.9
+    assert wire_bytes(x, GradCompressionConfig(qbits=4)) < x.size * 4 / 7.8
+
+
+def test_4bit_packing_exact():
+    """Packing/unpacking must be lossless on the code level."""
+    cfg = GradCompressionConfig(qbits=4, chunk=16)
+    x = jnp.asarray(np.linspace(-1, 1, 64, dtype=np.float32))
+    packed, scale, n = quantize_tensor(x, cfg)
+    assert packed.dtype == jnp.uint8 and packed.size == 32
+    xh = dequantize_tensor(packed, scale, n, x.shape, cfg)
+    xh2 = roundtrip(x, cfg)
+    np.testing.assert_array_equal(np.asarray(xh), np.asarray(xh2))
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 0.01, (2048,)).astype(np.float32))
+    cfg = GradCompressionConfig(qbits=4)
+    one_step = float(jnp.linalg.norm(roundtrip(x, cfg) - x) / jnp.linalg.norm(x))
+    res = ef_init({"g": x})
+    acc = jnp.zeros_like(x)
+    n = 24
+    for _ in range(n):
+        ghat, res = ef_step({"g": x}, res, cfg)
+        acc = acc + ghat["g"]
+    bias = float(jnp.linalg.norm(acc / n - x) / jnp.linalg.norm(x))
+    assert bias < one_step / 3, (bias, one_step)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    scale=st.floats(1e-6, 1e4),
+    n=st.integers(1, 400),
+    seed=st.integers(0, 2**16),
+)
+def test_property_quantizer_scale_equivariant(scale, n, seed):
+    """quant(s*x)/s ~= quant(x): per-chunk absmax makes the codec
+    scale-equivariant (up to float rounding)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, n).astype(np.float32)
+    cfg = GradCompressionConfig(qbits=8, chunk=64)
+    a = np.asarray(roundtrip(jnp.asarray(x), cfg))
+    b = np.asarray(roundtrip(jnp.asarray(x * scale), cfg)) / scale
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 300), seed=st.integers(0, 2**16))
+def test_property_roundtrip_never_overshoots_absmax(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, n).astype(np.float32)
+    cfg = GradCompressionConfig(qbits=8, chunk=32)
+    xh = np.asarray(roundtrip(jnp.asarray(x), cfg))
+    assert np.all(np.abs(xh) <= np.abs(x).max() * (1 + 1e-5))
+
+
+def test_compressed_sync_single_axis_mesh():
+    """On the 1-device CPU mesh the sync must be an exact identity mean."""
+    from repro.core.gradient import compressed_grad_sync
+
+    mesh = jax.make_mesh((1,), ("pod",))
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 0.01, (64,)).astype(np.float32))}
+    out = compressed_grad_sync(g, mesh, axis="pod", cfg=GradCompressionConfig(qbits=8))
+    rel = float(jnp.linalg.norm(out["w"] - g["w"]) / jnp.linalg.norm(g["w"]))
+    assert rel < 0.05

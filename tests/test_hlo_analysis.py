@@ -1,0 +1,118 @@
+"""The roofline analyzer itself: trip-count-aware FLOPs/bytes on known
+programs (this is measurement infrastructure — it must be exact)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import HloModuleCost, analyze_hlo, roofline
+
+
+def compile_text(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_scaling():
+    A = jnp.ones((64, 64), jnp.float32)
+
+    def scanned(x):
+        def body(c, _):
+            return c @ A, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    cost, _ = analyze_hlo(compile_text(scanned, (64, 64)))
+    assert cost.flops == 7 * 2 * 64 ** 3
+
+
+def test_nested_scan_trip_counts_multiply():
+    A = jnp.ones((32, 32), jnp.float32)
+
+    def nested(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ A, None
+            d, _ = jax.lax.scan(inner, c, None, length=4)
+            return d, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    cost, _ = analyze_hlo(compile_text(nested, (32, 32)))
+    assert cost.flops == 12 * 2 * 32 ** 3
+
+
+def test_batched_dot_flops():
+    def f(x, y):
+        return jnp.einsum("bij,bjk->bik", x, y)
+
+    cost, _ = analyze_hlo(compile_text(f, (4, 16, 32), (4, 32, 8)))
+    assert cost.flops == 2 * 4 * 16 * 32 * 8
+
+
+def test_bytes_scale_with_trip_count():
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c) * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=50)
+        return y
+
+    c1, _ = analyze_hlo(compile_text(f, (256, 256)))
+
+    def f1(x):
+        return jnp.tanh(x) * 2.0
+
+    c2, _ = analyze_hlo(compile_text(f1, (256, 256)))
+    assert c1.bytes > 20 * c2.bytes  # ~50x modulo loop plumbing
+
+
+def test_dus_counted_as_slice_not_buffer():
+    """Scan carrying a big stacked buffer must not charge the full buffer
+    per iteration."""
+
+    def f(x):
+        buf = jnp.zeros((100,) + x.shape)
+
+        def body(carry, i):
+            buf = carry
+            buf = jax.lax.dynamic_update_slice(buf, (x * 1.0)[None], (i, 0, 0))
+            return buf, None
+
+        buf, _ = jax.lax.scan(body, buf, jnp.arange(100))
+        return buf
+
+    cost, _ = analyze_hlo(compile_text(f, (64, 64)))
+    slice_bytes = 64 * 64 * 4
+    # 100 iterations x O(slice) traffic, NOT 100 x full 100-slot buffer
+    assert cost.bytes < 100 * slice_bytes * 20
+    assert cost.bytes >= 100 * slice_bytes
+
+
+def test_collectives_counted_with_group_size(monkeypatch):
+    hlo = """
+HloModule test
+
+ENTRY %main (p: f32[16,1024]) -> f32[16,1024] {
+  %p = f32[16,1024]{1,0} parameter(0)
+  %ag = f32[64,1024]{1,0} all-gather(%p), replica_groups=[4,4]<=[16], dimensions={0}
+  %ar = f32[16,1024]{1,0} all-reduce(%p), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  ROOT %out = f32[16,1024]{1,0} copy(%p)
+}
+"""
+    _, coll = analyze_hlo(hlo)
+    ag = coll.per_op["all-gather"]
+    ar = coll.per_op["all-reduce"]
+    assert ag["operand_bytes"] == 64 * 1024 * 4 / 4  # output/n
+    assert ar["operand_bytes"] == 16 * 1024 * 4
+    assert ar["wire_bytes"] == 2 * 3 / 4 * 16 * 1024 * 4
+
+
+def test_roofline_terms_and_dominance():
+    from repro.launch.hlo_analysis import Cost, CollectiveStats
+
+    cost = Cost(flops=197e12, bytes=819e9 * 2)  # 1s compute, 2s memory
+    coll = CollectiveStats({})
+    t = roofline(cost, coll, chips=4)
+    assert abs(t.compute_s - 1.0) < 1e-6
+    assert abs(t.memory_s - 2.0) < 1e-6
+    assert t.dominant == "memory"
+    assert t.flops_global == 197e12 * 4

@@ -1,0 +1,149 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle, with
+shape/dtype sweeps, plus property tests on the bitstream invariants."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bits
+from repro.kernels import ops, ref
+from repro.kernels import bitpack, delta_nuq, dict_hash
+
+RNG = np.random.default_rng(11)
+
+
+# ------------------------------------------------------------------ bitpack --
+@pytest.mark.parametrize("n,block", [(256, 64), (512, 128), (1024, 256), (2048, 512)])
+def test_bitpack_matches_ref(n, block):
+    codes = RNG.integers(0, 2**32, size=(n, 2), dtype=np.uint64).astype(np.uint32)
+    blen = RNG.integers(0, 65, size=(n,)).astype(np.int32)
+    w_k, b_k = ops.pack_blocks(jnp.asarray(codes), jnp.asarray(blen), block=block)
+    w_r, b_r = ref.pack_blocks_ref(jnp.asarray(codes), jnp.asarray(blen), block=block)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    np.testing.assert_array_equal(np.asarray(b_k), np.asarray(b_r))
+
+
+def test_bitpack_bit_conservation():
+    n, block = 512, 128
+    blen = RNG.integers(0, 65, size=(n,)).astype(np.int32)
+    codes = np.ones((n, 2), np.uint32)
+    _, b_k = ops.pack_blocks(jnp.asarray(codes), jnp.asarray(blen), block=block)
+    np.testing.assert_array_equal(
+        np.asarray(b_k), blen.reshape(-1, block).sum(axis=1)
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_pack_extract_roundtrip(seed):
+    """Packing then extracting at the scan offsets recovers every code."""
+    rng = np.random.default_rng(seed)
+    n = 128
+    blen = rng.integers(1, 65, size=(n,)).astype(np.int32)
+    codes = rng.integers(0, 2**32, size=(n, 2), dtype=np.uint64).astype(np.uint32)
+    # mask codes to their bitlen (the packer drops bits beyond bitlen)
+    c = jnp.asarray(codes)
+    b = jnp.asarray(blen)
+    masked = jnp.stack(
+        [
+            c[:, 0] & bits.mask_bits(jnp.minimum(b, 32)),
+            c[:, 1] & bits.mask_bits(jnp.maximum(b - 32, 0)),
+        ],
+        axis=1,
+    )
+    words, total, offsets = bits.pack_bits(masked, b, 2 * n + 2)
+    got = bits.extract_bits(words, offsets, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(masked))
+    assert int(total) == int(blen.sum())
+
+
+# ---------------------------------------------------------------- delta_nuq --
+@pytest.mark.parametrize("s,t,sublanes,t_tile", [(8, 128, 8, 128), (16, 256, 8, 128), (32, 512, 16, 256)])
+@pytest.mark.parametrize("qbits", [4, 8])
+def test_delta_nuq_encode_matches_ref(s, t, sublanes, t_tile, qbits):
+    x = jnp.asarray(RNG.normal(0, 0.3, size=(s, t)).astype(np.float32))
+    k = ops.adpcm_encode(x, qbits=qbits, dmax=1.0, sublanes=sublanes, t_tile=t_tile)
+    r = ref.delta_nuq_encode_ref(x, qbits=qbits, dmax=1.0, mu=255.0, t_tile=t_tile)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+@pytest.mark.parametrize("qbits", [6, 8])
+def test_delta_nuq_roundtrip_error_bounded(qbits):
+    x = jnp.asarray(np.cumsum(RNG.normal(0, 0.01, size=(8, 256)), axis=1).astype(np.float32))
+    codes = ops.adpcm_encode(x, qbits=qbits, dmax=0.1, t_tile=128)
+    xhat = ops.adpcm_decode(codes, qbits=qbits, dmax=0.1, t_tile=128)
+    r = ref.delta_nuq_decode_ref(codes, qbits=qbits, dmax=0.1, mu=255.0, t_tile=128)
+    np.testing.assert_allclose(np.asarray(xhat), np.asarray(r), rtol=1e-6, atol=1e-6)
+    err = np.abs(np.asarray(xhat) - np.asarray(x)).max()
+    assert err < 0.05, err
+
+
+# ---------------------------------------------------------------- dict_hash --
+@pytest.mark.parametrize("n,block,idx_bits", [(512, 128, 12), (1024, 512, 12), (512, 256, 10)])
+def test_dict_probe_matches_ref(n, block, idx_bits):
+    ts = 1 << idx_bits
+    x = jnp.asarray(RNG.integers(0, 5000, size=(n,), dtype=np.int64).astype(np.uint32))
+    table = jnp.asarray(RNG.integers(0, 5000, size=(ts,), dtype=np.int64).astype(np.uint32))
+    valid = jnp.asarray((RNG.random(ts) < 0.7).astype(np.uint8))
+    got = ops.dict_probe(x, table, valid, idx_bits=idx_bits, block=block)
+    want = ref.probe_ref(x, table, valid, idx_bits=idx_bits)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_dict_probe_hits_after_insert():
+    """Values that survive in the table produce (1+idx_bits)-bit hit symbols;
+    values evicted by a hash collision (last-writer-wins) must miss (33 bits)."""
+    idx_bits, ts = 12, 4096
+    vals = RNG.integers(0, 2**31, size=(256,), dtype=np.int64).astype(np.uint32)
+    knuth = np.uint32(2654435761)
+    h = ((vals * knuth) >> np.uint32(32 - idx_bits)).astype(np.int32)
+    table = np.zeros(ts, np.uint32)
+    valid = np.zeros(ts, np.uint8)
+    table[h] = vals
+    valid[h] = 1
+    c0, c1, blen = ops.dict_probe(
+        jnp.asarray(vals), jnp.asarray(table), jnp.asarray(valid), idx_bits=idx_bits, block=256
+    )
+    survives = table[h] == vals  # false for collision-evicted values
+    want = np.where(survives, 1 + idx_bits, 33)
+    np.testing.assert_array_equal(np.asarray(blen), want)
+    assert survives.sum() > 200  # most values survive at this load factor
+
+
+@pytest.mark.parametrize(
+    "B,S,H,K,Dh,window,bq,bk",
+    [
+        (2, 64, 4, 2, 32, None, 16, 32),
+        (1, 128, 8, 8, 16, 48, 32, 64),
+        (2, 96, 6, 2, 64, None, 32, 32),
+        (1, 64, 4, 1, 128, None, 64, 64),  # MQA, full-Dh MXU tile
+    ],
+)
+def test_flash_kernel_matches_ref(B, S, H, K, Dh, window, bq, bk):
+    """Pallas flash fwd (interpret mode) vs the dense oracle, across GQA
+    group counts, head dims and window settings."""
+    from repro.kernels import ops
+    from repro.kernels.ref import flash_reference
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, K, Dh))
+    v = jax.random.normal(ks[2], (B, S, K, Dh))
+    got = ops.flash_attention_fwd(q, k, v, window=window, bq=bq, bk=bk)
+    want = flash_reference(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_kernel_bf16():
+    from repro.kernels import ops
+    from repro.kernels.ref import flash_reference
+
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.bfloat16)
+    got = ops.flash_attention_fwd(q, k, v, bq=32, bk=32).astype(jnp.float32)
+    want = flash_reference(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0.05, atol=0.05)

@@ -1,0 +1,112 @@
+"""NUQ KV-cache compression: quantizer bounds (hypothesis), ring-buffer
+semantics, quant-vs-raw decode attention agreement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kvcache
+
+KEY = jax.random.PRNGKey(3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s_groups=st.integers(1, 3),
+    k=st.integers(1, 4),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_property_quant_roundtrip_bounded(b, s_groups, k, dh, seed):
+    rng = np.random.default_rng(seed)
+    S = s_groups * kvcache.SCALE_GROUP
+    x = jnp.asarray(rng.normal(0, 1.5, (b, S, k, dh)).astype(np.float32))
+    codes, scale = kvcache.quantize_block(x)
+    xh = kvcache.dequantize_block(codes, scale, dtype=jnp.float32)
+    # mu-law 8-bit: coarse far from 0 but bounded relative to the group absmax
+    err = np.abs(np.asarray(x) - np.asarray(xh))
+    gmax = np.asarray(scale)[:, :, None, :, None] * np.ones((1, 1, kvcache.SCALE_GROUP, 1, 1))
+    gmax = gmax.reshape(b, S, k, 1)
+    assert np.all(err <= 0.05 * gmax + 1e-6)
+
+
+def test_quant_never_flips_sign_materially():
+    x = jnp.asarray(np.linspace(-2, 2, 256, dtype=np.float32).reshape(1, 128, 2, 1))
+    codes, scale = kvcache.quantize_block(x)
+    xh = np.asarray(kvcache.dequantize_block(codes, scale, dtype=jnp.float32))
+    xs = np.asarray(x)
+    disagree = (np.sign(xh) != np.sign(xs)) & (np.abs(xs) > 0.05)
+    assert not disagree.any()
+
+
+def attn_setup(W=128, K=2, H=4, Dh=16, B=2):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, Dh))
+    k = jax.random.normal(ks[1], (B, W, K, Dh))
+    v = jax.random.normal(ks[2], (B, W, K, Dh))
+    return q, k, v
+
+
+def naive_decode_attention(q, k, v, pos, window=None):
+    B, _, H, Dh = q.shape
+    W, K = k.shape[1], k.shape[2]
+    G = H // K
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(Dh)
+    slots = np.arange(W)
+    abs_pos = np.where(pos >= W, pos - ((pos - slots) % W), slots)
+    valid = abs_pos <= pos
+    if window is not None:
+        valid &= abs_pos > pos - window
+    s = jnp.where(jnp.asarray(valid)[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("pos,window", [(63, None), (127, None), (200, None), (100, 48)])
+def test_decode_attention_quant_close_to_raw(pos, window):
+    q, k, v = attn_setup()
+    kc, ks_ = kvcache.quantize_block(k)
+    vc, vs_ = kvcache.quantize_block(v)
+    layer = {"k_codes": kc, "v_codes": vc, "k_scale": ks_, "v_scale": vs_}
+    got = kvcache.decode_attention_quant(q, layer, jnp.asarray(pos), window, kv_block=64)
+    want = naive_decode_attention(q, k, v, pos, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.12, rtol=0.12)
+
+
+def test_append_token_then_attend():
+    """A token appended at `pos` must dominate attention for a matching query."""
+    B, W, K, H, Dh = 1, 128, 1, 1, 16
+    k = jnp.zeros((B, W, K, Dh))
+    v = jnp.zeros((B, W, K, Dh))
+    kc, ks_ = kvcache.quantize_block(k)
+    vc, vs_ = kvcache.quantize_block(v)
+    layer = {"k_codes": kc, "v_codes": vc, "k_scale": ks_ + 1.0, "v_scale": vs_ + 1.0}
+    key_vec = jnp.ones((B, 1, K, Dh)) * 0.9
+    val_vec = jnp.ones((B, 1, K, Dh)) * 0.7
+    pos = jnp.asarray(5)
+    layer = kvcache.append_token_layer(layer, key_vec, val_vec, pos)
+    q = jnp.ones((B, 1, H, Dh)) * 3.0  # aligned with the appended key
+    out = kvcache.decode_attention_quant(q, layer, pos, None, kv_block=64)
+    assert float(jnp.mean(out)) > 0.4  # appended value dominates zeros
+
+
+def test_ring_wraparound_positions():
+    """After wrapping, only the last W positions are attendable."""
+    q, k, v = attn_setup(W=64)
+    kc, ks_ = kvcache.quantize_block(k)
+    vc, vs_ = kvcache.quantize_block(v)
+    layer = {"k_codes": kc, "v_codes": vc, "k_scale": ks_, "v_scale": vs_}
+    out_wrapped = kvcache.decode_attention_quant(q, layer, jnp.asarray(1000), None, kv_block=64)
+    want = naive_decode_attention(q, k, v, 1000)
+    np.testing.assert_allclose(np.asarray(out_wrapped), np.asarray(want), atol=0.12, rtol=0.12)
+
+
+def test_cache_memory_is_quarter_of_bf16():
+    cache = kvcache.init_cache(n_layers=4, batch=2, window=256, kv_heads=2, head_dim=32)
+    quant_bytes = kvcache.cache_bytes(cache)
+    raw = 4 * 2 * 256 * 2 * 32 * 2 * 2  # k+v bf16
+    assert quant_bytes < raw * 0.55  # uint8 codes + scales ~ 0.5x bf16

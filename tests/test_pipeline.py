@@ -1,0 +1,45 @@
+"""Host->device compressed feed: lossless roundtrip, compression ratio,
+prefetch lifecycle."""
+import numpy as np
+
+from repro.data.pipeline import CompressedFeed, zipf_token_stream
+
+
+def test_feed_roundtrip_exact():
+    src = zipf_token_stream(vocab_size=1000, batch=4, seq=63, seed=0)
+    ref_src = zipf_token_stream(vocab_size=1000, batch=4, seq=63, seed=0)
+    feed = CompressedFeed(src, codec="delta_leb128", lanes=8).start()
+    try:
+        for _ in range(3):
+            batch = feed.next_batch()
+            want = next(ref_src)
+            got = np.concatenate(
+                [np.asarray(batch["inputs"]), np.asarray(batch["labels"])[:, -1:]], axis=1
+            )
+            np.testing.assert_array_equal(got, want)
+    finally:
+        feed.stop()
+
+
+def test_feed_compresses_zipf_tokens():
+    feed = CompressedFeed(
+        zipf_token_stream(vocab_size=50000, batch=8, seq=127, seed=1),
+        codec="delta_leb128",
+    ).start()
+    try:
+        for _ in range(3):
+            feed.next_batch()
+        assert feed.stats.ratio > 1.3, feed.stats
+    finally:
+        feed.stop()
+
+
+def test_feed_labels_shifted_by_one():
+    feed = CompressedFeed(zipf_token_stream(301, 2, 15, seed=2)).start()
+    try:
+        b = feed.next_batch()
+        np.testing.assert_array_equal(
+            np.asarray(b["inputs"])[:, 1:], np.asarray(b["labels"])[:, :-1]
+        )
+    finally:
+        feed.stop()

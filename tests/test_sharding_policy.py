@@ -1,0 +1,79 @@
+"""Sharding policy coherence for every assigned architecture: each param
+leaf gets a spec of matching rank, and every sharded dim is divisible by
+its production-mesh axis size (the static version of what the dry-run
+proves by compiling)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import arch_ids, get_arch
+from repro.models import partition
+from repro.models.transformer import init_decode_cache, init_params
+from repro.runtime.sharding import batch_specs, cache_specs, param_specs
+
+MESH_AXES = {"data": 16, "model": 16, "pod": 2}
+MAPPING = {"data": "data", "model": "model"}
+
+
+def axis_size(entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        out = 1
+        for e in entry:
+            out *= MESH_AXES[e]
+        return out
+    return MESH_AXES[entry]
+
+
+@pytest.mark.parametrize("arch_id", arch_ids())
+@pytest.mark.parametrize("mode", ["train", "serve"])
+def test_param_specs_cover_and_divide(arch_id, mode):
+    cfg = get_arch(arch_id).model
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    specs = param_specs(cfg, mode)
+    flat_s = jax.tree_util.tree_leaves(shapes)
+    flat_p = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_s) == len(flat_p)
+    for sh, spec in zip(flat_s, flat_p):
+        assert len(spec) <= len(sh.shape), (sh.shape, spec)
+        for dim, entry in zip(sh.shape, spec):
+            assert dim % axis_size(entry) == 0, (arch_id, sh.shape, spec)
+
+
+@pytest.mark.parametrize("arch_id", arch_ids())
+def test_cache_specs_cover_and_divide(arch_id):
+    spec = get_arch(arch_id).model
+    for shape in get_arch(arch_id).runnable_shapes():
+        if shape.kind != "decode":
+            continue
+        B, S = shape.global_batch, shape.seq_len
+        shapes = jax.eval_shape(lambda: init_decode_cache(spec, B, S))
+        cspecs = cache_specs(spec, B, S)
+        flat_s = jax.tree_util.tree_leaves(shapes)
+        flat_c = jax.tree_util.tree_leaves(cspecs, is_leaf=lambda x: isinstance(x, tuple))
+        assert len(flat_s) == len(flat_c)
+        for sh, cs in zip(flat_s, flat_c):
+            for dim, entry in zip(sh.shape, cs):
+                assert dim % axis_size(entry) == 0, (arch_id, shape.name, sh.shape, cs)
+
+
+def test_batch_specs_modes():
+    cfg = get_arch("qwen3-1.7b").model
+    assert batch_specs(cfg, "train")["inputs"] == ("data", None)
+    assert batch_specs(cfg, "decode", data_ok=False)["inputs_t"] == (None, None)
+    emb_cfg = get_arch("pixtral-12b").model
+    assert batch_specs(emb_cfg, "train")["inputs"] == ("data", None, None)
+
+
+def test_partition_hint_noop_without_mapping():
+    import jax.numpy as jnp
+
+    partition.set_logical_axes(None)
+    x = jnp.ones((4,))
+    assert partition.hint(x, "data") is x
+
+
+def test_logical_spec_resolution_multipod():
+    with partition.logical_axes({"data": ("pod", "data"), "model": "model"}):
+        assert partition.spec("data", None, "model") == P(("pod", "data"), None, "model")
