@@ -7,10 +7,12 @@ from benchmarks.common import engine_cfg, fmt_table, stream_for
 
 
 def run(quick: bool = True) -> dict:
-    from repro.core.engine import CStreamEngine
+    from repro.core.engine import CStreamEngine, queueing_delay_s
 
     stream = stream_for("rovio", quick)
-    cfg = engine_cfg("tcomp32", quick)
+    # scan_chunk=1: arrival-driven latency — a micro-batch dispatches when it
+    # fills; batches that haven't arrived can't be fused into the same scan
+    cfg = engine_cfg("tcomp32", quick, scan_chunk=1)
     eng = CStreamEngine(cfg, sample=stream[: 1 << 14])
 
     rate_rows = []
@@ -25,16 +27,20 @@ def run(quick: bool = True) -> dict:
     from repro.data.stream import zipf_timestamps
     import numpy as np
 
+    # one best-of-2 cost measurement shared by every skew level: the sweep
+    # isolates the arrival-pattern effect, not run-to-run host noise
+    base = min(
+        (eng.compress(stream, arrival_rate_tps=1e6, max_blocks=16) for _ in range(2)),
+        key=lambda r: r.stats.wall_s,
+    )
+    proc = base.stats.wall_s / 16
     skew_rows = []
     for z in (0.0, 0.25, 0.5, 0.75, 1.0):
         ts = zipf_timestamps(1 << 14, 1e6, z)
         gaps = np.diff(ts)
         block = eng._block_tuples()
         fill = np.add.reduceat(gaps, np.arange(0, gaps.size, block))
-        base = eng.compress(stream, arrival_rate_tps=1e6, max_blocks=16)
-        proc = base.stats.wall_s / 16
-        rho = proc / np.maximum(fill, 1e-12)
-        queue = np.where(rho < 1, 0.5 * proc * rho / np.maximum(1 - rho, 1e-2), 10 * proc)
+        queue = np.array([queueing_delay_s(proc, float(f)) for f in fill])
         latency = float(np.mean(fill / 2 + proc + queue))
         skew_rows.append({"zipf_factor": z, "latency_ms": 1e3 * latency})
 

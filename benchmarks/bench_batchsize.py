@@ -17,12 +17,15 @@ def run(quick: bool = True) -> dict:
     sizes = [400, 2048, 8192, 32768, 131072, 524288, 2097152]
     rows = []
     for mb_bytes in sizes:
-        cfg = engine_cfg("tcomp32", quick, micro_batch_bytes=mb_bytes)
+        # scan_chunk=1: Fig 11 is a STREAMING trade-off — a micro-batch is
+        # dispatched when it fills and cannot fuse with batches that haven't
+        # arrived yet, so the per-dispatch cost is part of the measurement
+        cfg = engine_cfg("tcomp32", quick, micro_batch_bytes=mb_bytes, scan_chunk=1)
         eng = CStreamEngine(cfg, sample=stream[: 1 << 14])
-        try:
-            res = eng.compress(stream, arrival_rate_tps=rate, max_blocks=64)
-        except ValueError:  # stream shorter than one batch
-            continue
+        if eng._block_tuples() > len(stream):
+            continue  # batch larger than the stream: the row would silently
+            # re-measure the whole stream under a mislabeled batch size
+        res = eng.compress(stream, arrival_rate_tps=rate, max_blocks=64)
         mb = res.n_tuples * 4 / 1e6
         rows.append({
             "batch_bytes": mb_bytes,

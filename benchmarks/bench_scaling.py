@@ -18,7 +18,8 @@ def run(quick: bool = True) -> dict:
             name,
             [CoreSpec("big", 2.0, 1.5, 0.15)] * nb + [CoreSpec("little", 1.0, 0.5, 0.08)] * nl,
         )
-        cfg = engine_cfg("tcomp32", quick, profile=name, lanes=max(nb + nl, 1))
+        # scan_chunk=1: per-block dispatch costs feed the per-core schedule
+        cfg = engine_cfg("tcomp32", quick, profile=name, lanes=max(nb + nl, 1), scan_chunk=1)
         eng = CStreamEngine(cfg, sample=stream[: 1 << 14])
         res = eng.compress(stream, max_blocks=32)
         mb = res.n_tuples * 4 / 1e6

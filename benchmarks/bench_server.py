@@ -1,0 +1,137 @@
+"""Beyond-paper: layered runtime — fused-scan executor + multi-stream server.
+
+Two claims the refactor must earn:
+  * the fused `lax.scan` executor beats the per-block dispatch loop by >= 2x
+    on the SAME blocks (paper Fig 10b: dispatch overhead is 'blocked time';
+    fusing removes it from the hot path);
+  * `StreamServer` sustains many concurrent sessions (mixed codecs, bursty
+    zipf arrivals) with per-session ratio/throughput/latency/energy, and
+    aggregate throughput scales with the session count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import engine_cfg, fmt_table, stream_for
+
+
+#: per-session codec + dataset mix (codec chosen per paper Fig 5: no codec
+#: wins everywhere, so the server mixes suitable pairs)
+SESSION_MIX = [
+    ("tcomp32", "micro"),
+    ("tdic32", "rovio"),
+    ("tcomp32", "stock"),
+    ("tdic32", "sensor"),
+]
+
+
+def _fused_vs_dispatch(quick: bool) -> dict:
+    from repro.core.pipeline import CompressionPipeline
+    from repro.core import metrics
+
+    stream = stream_for("rovio", quick)
+    cfg = engine_cfg("tcomp32", quick, micro_batch_bytes=1024)
+    pipe = CompressionPipeline(cfg, sample=stream[: 1 << 14])
+    shaped = pipe.shape_blocks(stream, max_blocks=256 if quick else 1024)
+
+    # best-of-2 each way: host timer noise must not decide the claim
+    fused = min(
+        pipe.execute(shaped, fused=True).wall_s for _ in range(2)
+    )
+    dispatch = min(
+        pipe.execute(shaped, fused=False).wall_s for _ in range(2)
+    )
+    mb = shaped.n_valid * 4 / 1e6
+    return {
+        "n_blocks": shaped.n_blocks,
+        "block_bytes": pipe.block_tuples * 4,
+        "dispatch_s": dispatch,
+        "fused_s": fused,
+        "dispatch_mbps": mb / dispatch,
+        "fused_mbps": mb / fused,
+        "fused_speedup": dispatch / fused,
+    }
+
+
+def _multi_stream(quick: bool, n_sessions: int) -> dict:
+    from repro.core.strategies import EngineConfig
+    from repro.data.stream import rate_for_dataset, zipf_timestamps
+    from repro.runtime.server import StreamServer
+
+    n_tuples = (1 << 12) if quick else (1 << 14)
+    rate = rate_for_dataset(1)
+    server = StreamServer(max_sessions=max(16, n_sessions))
+    feeds = {}
+    for i in range(n_sessions):
+        codec, dataset = SESSION_MIX[i % len(SESSION_MIX)]
+        vals = stream_for(dataset, quick=True)[:n_tuples]
+        topic = f"{dataset}-{i}"
+        server.admit(
+            topic,
+            EngineConfig(codec=codec, micro_batch_bytes=2048, lanes=4),
+            sample=vals,
+        )
+        feeds[topic] = (vals, zipf_timestamps(len(vals), rate, zipf_factor=0.6, seed=i))
+    rep = server.run(feeds)
+    return {
+        "sessions": n_sessions,
+        "tuples": rep.total_tuples,
+        "ratio": rep.ratio,
+        "makespan_s": rep.makespan_s,
+        "agg_mbps": rep.aggregate_mbps,
+        "parallel_speedup": rep.compute_s / max(rep.makespan_s, 1e-12),
+        "energy_j": rep.energy_j,
+        "mean_lat_ms": 1e3
+        * float(np.mean([r.mean_latency_s for r in rep.sessions.values()])),
+        "_report": rep,
+    }
+
+
+def run(quick: bool = True) -> dict:
+    speed = _fused_vs_dispatch(quick)
+    print(fmt_table([speed], list(k for k in speed), "fused scan vs per-block dispatch"))
+
+    scale_results = [_multi_stream(quick, n) for n in (1, 4, 8)]
+    scale_rows = [
+        {k: v for k, v in r.items() if k != "_report"} for r in scale_results
+    ]
+    print(fmt_table(
+        scale_rows,
+        ["sessions", "tuples", "ratio", "agg_mbps", "parallel_speedup", "mean_lat_ms", "energy_j"],
+        "multi-stream scaling (mixed codecs, zipf arrivals)",
+    ))
+
+    eight = scale_results[-1]  # per-session detail comes from the same run
+    per_sess = [
+        {
+            "topic": r.topic, "codec": r.codec, "tuples": r.n_tuples,
+            "flushes": r.n_flushes, "ratio": r.ratio,
+            "mbps": r.throughput_mbps, "lat_ms": 1e3 * r.mean_latency_s,
+            "energy_j": r.energy_j,
+        }
+        for r in sorted(eight["_report"].sessions.values(), key=lambda r: r.topic)
+    ]
+    print(fmt_table(
+        per_sess,
+        ["topic", "codec", "tuples", "flushes", "ratio", "mbps", "lat_ms", "energy_j"],
+        "8 concurrent sessions: per-session metrics",
+    ))
+
+    claims = {
+        "fused_2x_over_dispatch": speed["fused_speedup"] >= 2.0,
+        "server_sustains_8_sessions": (
+            eight["_report"].n_sessions >= 8
+            and all(r.n_tuples > 0 for r in eight["_report"].sessions.values())
+        ),
+        "all_sessions_compress": all(r["ratio"] > 1.0 for r in per_sess),
+        # with 8 sessions' flushes in flight the schedule layer must keep the
+        # profile's cores busy: modeled makespan well under serial compute
+        "scheduler_parallelizes_8_sessions": eight["parallel_speedup"] >= 2.0,
+    }
+    print("   claims:", claims)
+    rows = [speed] + scale_rows + per_sess
+    return {"rows": rows, "claims": claims}
+
+
+if __name__ == "__main__":
+    run()

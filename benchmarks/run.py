@@ -4,6 +4,7 @@ production paths and the dry-run roofline aggregation.
   PYTHONPATH=src python -m benchmarks.run            # quick mode
   PYTHONPATH=src python -m benchmarks.run --full
   PYTHONPATH=src python -m benchmarks.run --only bench_case_study
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: fast subset
 """
 from __future__ import annotations
 
@@ -28,18 +29,26 @@ MODULES = [
     "bench_arrival",           # Fig 14
     "bench_compressibility",   # Figs 15/16
     "bench_production_paths",  # beyond-paper
+    "bench_server",            # beyond-paper: fused executor + StreamServer
     "bench_roofline",          # dry-run aggregation
+]
+
+#: --smoke: the fast subset CI runs on CPU — executor + runtime claims only
+SMOKE_MODULES = [
+    "bench_execution",
+    "bench_server",
 ]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true", help="fast CI subset")
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "results.json"))
     args = ap.parse_args()
 
-    mods = [args.only] if args.only else MODULES
+    mods = [args.only] if args.only else (SMOKE_MODULES if args.smoke else MODULES)
     results, failures = {}, []
     t_all = time.perf_counter()
     for name in mods:
@@ -68,6 +77,8 @@ def main():
     with open(args.out, "w") as f:
         json.dump({"results": results, "failures": failures}, f, indent=1, default=str)
     print(f"  wrote {args.out}")
+    if failures:  # claim WARNs are tolerated; module crashes are not
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

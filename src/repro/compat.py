@@ -1,0 +1,52 @@
+"""Version compatibility shims for the pinned container toolchain.
+
+`jax.shard_map` graduated from `jax.experimental.shard_map` only in newer
+jax releases, and its keyword surface changed (`check_rep`/`auto` became
+`check_vma`/`axis_names`). Import `shard_map` from here — call sites use
+the NEW spelling and this module translates for the old one.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def shard_map(
+        f,
+        *,
+        mesh=None,
+        in_specs,
+        out_specs,
+        check_vma=None,
+        axis_names=None,
+        **kwargs,
+    ):
+        if mesh is None:
+            # new-API callers rely on the ambient mesh; resolve it for the
+            # old API, which requires an explicit mesh argument. Old jax may
+            # predate get_abstract_mesh, so fall back to the `with mesh:`
+            # context mesh.
+            get_ambient = getattr(jax.sharding, "get_abstract_mesh", None)
+            if get_ambient is not None:
+                ambient = get_ambient()
+                if ambient.axis_names:
+                    mesh = ambient
+            if mesh is None:
+                from jax._src.mesh import thread_resources
+
+                physical = thread_resources.env.physical_mesh
+                if physical.axis_names:
+                    mesh = physical
+        # new API: axis_names = the MANUAL axes; old API: auto = the rest
+        if axis_names is not None and mesh is not None:
+            kwargs.setdefault(
+                "auto", frozenset(mesh.axis_names) - frozenset(axis_names)
+            )
+        if check_vma is not None:
+            kwargs.setdefault("check_rep", check_vma)
+        return _experimental_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )

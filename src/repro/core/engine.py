@@ -2,37 +2,55 @@
 state-management and scheduling strategies (paper §3.3–3.4).
 
 Layering (DESIGN.md §2):
-  * the *vectorized execution layer* runs the codec over `lanes` private
-    substreams and bit-packs symbols — measured wall-clock throughput;
+  * the *executor layer* (core/pipeline.py) runs the codec over `lanes`
+    private substreams and bit-packs symbols — measured wall-clock
+    throughput. Lazy execution fuses whole chunks of micro-batch blocks into
+    single `lax.scan` dispatches; the per-block dispatch loop survives only
+    as the `eager` strategy (the paper's per-tuple baseline, Fig 10b);
+  * the *policy layer* (core/strategies.py `plan_execution`) decides batch
+    sizing, scan fusion granularity and scheduling in one place;
   * the *worker schedule layer* maps micro-batch blocks onto a hardware
     profile's cores (uniform vs asymmetry-aware) and yields modeled makespan,
     per-tuple latency and energy — the paper's evaluation axes. On real
     asymmetric silicon the same assignment drives thread placement; on this
     CPU-only container the speeds come from the hardware profile (documented
     simulation, constants from paper Fig 6a).
+
+`CStreamEngine` is the stable facade over those layers: `compress` keeps its
+public signature and `CompressResult` its fields across the refactor. The
+multi-stream serving runtime (runtime/server.py) drives the same pipeline
+per session.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import bits, metrics
-from repro.core.algorithms import Encoded, make_codec
-from repro.core.calibration import calibrated_kwargs
-from repro.core.energy import edge_energy_j
-from repro.core.strategies import (
+from repro.core.algorithms import make_codec
+from repro.core.pipeline import (
+    CompressionPipeline,
+    lww_select,
+    merge_shared_dictionary,
+)
+from repro.core.strategies import (  # noqa: F401  (re-exported for callers)
     EngineConfig,
     ExecutionStrategy,
     SchedulingStrategy,
     StateStrategy,
+    block_costs,
     schedule_blocks,
 )
+from repro.core.energy import edge_energy_j
+
+# Backward-compatible alias: the merge predates the pipeline extraction and
+# is referenced by tests/callers under its old private name.
+_merge_shared_dictionary = merge_shared_dictionary
 
 
 @dataclasses.dataclass
@@ -47,75 +65,34 @@ class CompressResult:
     running_s: float  # pure compression time
 
 
-def _merge_shared_dictionary(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    """Deterministic cross-lane dictionary merge (shared-state strategy).
+def queueing_delay_s(proc_s: float, batch_fill_s: float, max_factor: float = 20.0) -> float:
+    """Smoothed M/D/1-style queueing term for the latency model (paper §4.1).
 
-    All lanes converge to the same table after every micro-batch with true
-    last-writer-wins semantics (per-slot write timestamps) — the batched
-    equivalent of the paper's lock-guarded shared table. Decoder-replayable;
-    the paper's lock contention becomes this all-lane reduction (and an
-    all-gather across devices in the sharded engine)."""
-    lanes, ts_size = state["table"].shape
-    key = jnp.where(state["valid"], state["ts"], -1)  # (L, TS)
-    best_lane = jnp.argmax(key, axis=0)  # (TS,)
-    slot = jnp.arange(ts_size)
-    table = state["table"][best_lane, slot]
-    valid = jnp.any(state["valid"], axis=0)
-    ts = key[best_lane, slot]
-    clock = jnp.broadcast_to(jnp.max(state["clock"]), (lanes,))
-    return {
-        "table": jnp.broadcast_to(table, (lanes, ts_size)),
-        "valid": jnp.broadcast_to(valid, (lanes, ts_size)),
-        "ts": jnp.broadcast_to(ts, (lanes, ts_size)),
-        "clock": clock,
-    }
+    `rho` is server utilization (processing time over the batch fill window).
+    The raw `rho / (1 - rho)` growth is clamped to `max_factor`, which makes
+    the model continuous through saturation (the old form jumped from
+    ~50x·proc to a flat 10x·proc exactly at rho = 1) while keeping the same
+    saturated value: 0.5 · proc · max_factor = 10 · proc."""
+    rho = proc_s / max(batch_fill_s, 1e-12)
+    growth = rho / (1.0 - rho) if rho < 1.0 else float("inf")
+    return 0.5 * proc_s * min(growth, max_factor)
 
 
 class CStreamEngine:
     def __init__(self, config: EngineConfig, sample: Optional[np.ndarray] = None):
         self.config = config
-        kwargs = dict(config.codec_kwargs)
-        if config.calibrate and sample is not None:
-            auto = calibrated_kwargs(config.codec, sample)
-            for k, v in auto.items():
-                kwargs.setdefault(k, v)
-        self.codec = make_codec(config.codec, **kwargs)
-        self._step = jax.jit(self._step_impl)
-
-    # ------------------------------------------------------------ core step
-    def _step_impl(self, state: Any, block: jax.Array):
-        """Encode one micro-batch block (lanes, B) and pack its bitstream."""
-        state, enc = self.codec.encode(state, block)
-        if (
-            self.config.state == StateStrategy.SHARED
-            and self.codec.meta.state_kind == "dictionary"
-        ):
-            state = _merge_shared_dictionary(state)
-        lanes, B = block.shape
-        flat_codes = enc.codes.reshape(lanes * B, 2)
-        flat_blen = enc.bitlen.reshape(lanes * B)
-        out_words = lanes * B * 2 + 2
-        words, total_bits, _ = bits.pack_bits(flat_codes, flat_blen, out_words)
-        return state, words, total_bits
+        self.pipeline = CompressionPipeline(config, sample=sample)
+        self.codec = self.pipeline.codec
+        self._step = self.pipeline._step
 
     # ------------------------------------------------------------- shaping
     def _block_tuples(self) -> int:
-        cfg = self.config
-        if cfg.execution == ExecutionStrategy.EAGER:
-            return cfg.lanes  # one tuple per lane per dispatch
-        per_lane = max(1, cfg.micro_batch_bytes // 4 // cfg.lanes)
-        if self.codec.name == "pla":
-            w = self.codec.window
-            per_lane = max(w, (per_lane // w) * w)
-        return per_lane * cfg.lanes
+        return self.pipeline.block_tuples
 
     def _blocks(self, values: np.ndarray) -> np.ndarray:
-        bt = self._block_tuples()
-        n = (len(values) // bt) * bt
-        if n == 0:
-            raise ValueError(f"stream shorter than one micro-batch ({bt} tuples)")
-        lanes = self.config.lanes
-        return values[:n].reshape(-1, lanes, bt // lanes)
+        """Full blocks of the stream (legacy view; tail handling lives in
+        `pipeline.shape_blocks`)."""
+        return self.pipeline.shape_blocks(values).blocks
 
     # ------------------------------------------------------------- compress
     def compress(
@@ -126,35 +103,22 @@ class CStreamEngine:
         breakdown: bool = False,
     ) -> CompressResult:
         cfg = self.config
-        blocks = self._blocks(np.asarray(values, np.uint32))
-        if max_blocks is not None:
-            blocks = blocks[:max_blocks]
-        blocks_dev = jnp.asarray(blocks)
-        n_blocks, lanes, B = blocks.shape
-        n_tuples = n_blocks * lanes * B
+        pipe = self.pipeline
+        shaped = pipe.shape_blocks(np.asarray(values, np.uint32), max_blocks=max_blocks)
 
-        state = self.codec.init_state(lanes)
-        # warm-up (compile) outside the timed region
-        w_state, _, _ = jax.block_until_ready(self._step(state, blocks_dev[0]))
-
-        state = self.codec.init_state(lanes)
-        bits_acc = []
-        t0 = time.perf_counter()
-        for i in range(n_blocks):
-            state, words, total_bits = self._step(state, blocks_dev[i])
-            bits_acc.append(total_bits)
-        jax.block_until_ready(bits_acc)
-        wall = time.perf_counter() - t0
-
-        per_block_bits = np.array([float(b) for b in bits_acc])
+        res = pipe.execute(shaped)
+        wall = res.wall_s
+        per_block_bits = res.per_block_bits
         total_bits = float(per_block_bits.sum())
+        n_tuples = res.n_tuples
+        n_blocks = shaped.n_blocks
 
         # ---- schedule layer: map blocks onto the hardware profile ---------
         profile = cfg.hardware()
         per_block_cost = wall / n_blocks  # measured mean cost at speed 1.0
-        costs = per_block_cost * per_block_bits / max(per_block_bits.mean(), 1.0)
+        costs = block_costs(wall, per_block_bits)
         speeds = profile.speeds
-        _, busy, makespan = schedule_blocks(list(costs), speeds, cfg.scheduling)
+        _, busy, makespan = schedule_blocks(costs, speeds, cfg.scheduling)
         # uniform scheduling implies barrier spin-wait (paper Fig 13b)
         energy = edge_energy_j(
             profile, busy, makespan,
@@ -164,13 +128,11 @@ class CStreamEngine:
         # ---- latency model (paper §4.1 end-to-end latency) -----------------
         latency = None
         if arrival_rate_tps:
-            batch_fill_s = (lanes * B) / arrival_rate_tps
+            batch_fill_s = self._block_tuples() / arrival_rate_tps
             proc = per_block_cost
             # tuples wait on average half the fill window + processing, plus
             # queueing if the server is slower than the arrival rate
-            rho = proc / max(batch_fill_s, 1e-12)
-            queue = 0.5 * proc * rho / max(1.0 - rho, 1e-2) if rho < 1 else 10 * proc
-            latency = batch_fill_s / 2.0 + proc + queue
+            latency = batch_fill_s / 2.0 + proc + queueing_delay_s(proc, batch_fill_s)
 
         input_bytes = n_tuples * 4
         stats = metrics.RunStats(
@@ -183,22 +145,17 @@ class CStreamEngine:
             energy_j=energy,
         )
         # Fig 10b breakdown: 'running' = pure compression compute, measured by
-        # replaying all blocks under a single dispatch (lax.scan); 'blocked' =
-        # per-block dispatch/synchronization overhead — the cost eager
-        # execution pays per tuple (paper: partitioning/sync/cache thrashing).
-        if breakdown:
-            def scan_all(st, blks):
-                def body(s, blk):
-                    s, _, tb = self._step_impl(s, blk)
-                    return s, tb
-                _, tbs = jax.lax.scan(body, st, blks)
-                return tbs
-            scan_jit = jax.jit(scan_all)
-            st0 = self.codec.init_state(lanes)
-            jax.block_until_ready(scan_jit(st0, blocks_dev))  # compile
-            t1 = time.perf_counter()
-            jax.block_until_ready(scan_jit(st0, blocks_dev))
-            running = min(time.perf_counter() - t1, wall)
+        # replaying all blocks under fused scan dispatch; 'blocked' = per-block
+        # dispatch/synchronization overhead — the cost eager execution pays per
+        # tuple (paper: partitioning/sync/cache thrashing). Under the default
+        # fused lazy path the timed run IS the fused replay, so blocked ~ 0.
+        if breakdown and pipe.plan.scan_chunk <= 1:
+            # per-block-dispatch timed run (eager, or chunk pinned to 1):
+            # measure 'running' by force-fusing the same blocks
+            fused = pipe.execute(shaped, fused=True)
+            running = min(fused.wall_s, wall)
+        elif breakdown:
+            running = wall  # the timed run already WAS the fused replay
         else:
             running = min(per_block_cost * n_blocks, wall)
         return CompressResult(
@@ -214,16 +171,9 @@ class CStreamEngine:
 
     # -------------------------------------------------- lossy fidelity check
     def roundtrip_nrmse(self, values: np.ndarray) -> float:
-        blocks = self._blocks(np.asarray(values, np.uint32))
-        st_e = self.codec.init_state(self.config.lanes)
-        st_d = self.codec.init_state(self.config.lanes)
-        outs = []
-        for i in range(blocks.shape[0]):
-            st_e, enc = self.codec.encode(st_e, jnp.asarray(blocks[i]))
-            st_d, xhat = self.codec.decode(st_d, enc)
-            outs.append(np.asarray(xhat))
-        xhat = np.stack(outs)
-        return metrics.nrmse(blocks, xhat)
+        values = np.asarray(values, np.uint32)
+        xhat = self.pipeline.roundtrip_values(values)
+        return metrics.nrmse(values[: len(xhat)], xhat)
 
 
 # ----------------------------------------------------------- sharded engine --
@@ -239,7 +189,8 @@ def sharded_compress_fn(
     Private mode (default): each device owns its lane group and codec state —
     the paper's private-state strategy at pod scale, zero per-batch
     collectives beyond the bit-count psum. Shared mode (dictionary codecs):
-    tables are merged across devices every micro-batch via pmax — the
+    tables are merged across devices every micro-batch via the same
+    last-writer-wins `lww_select` the local engine uses — the
     collective-latency analogue of the paper's lock contention, visible in
     the dry-run roofline. Used by launch/dryrun.py and the gradient path.
     """
@@ -250,20 +201,19 @@ def sharded_compress_fn(
     def shard_step(state, block):  # per-device view: (lanes_local, B)
         state, enc = codec.encode(state, block)
         if shared_state and codec.meta.state_kind == "dictionary":
-            state = _merge_shared_dictionary(state)  # lanes within the device
+            state = merge_shared_dictionary(state)  # lanes within the device
             # cross-device last-writer-wins: the collective analogue of the
-            # paper's lock-guarded shared table
+            # paper's lock-guarded shared table — same merge, gathered rows
             tables = jax.lax.all_gather(state["table"][0], axis)  # (ndev, TS)
             valids = jax.lax.all_gather(state["valid"][0], axis)
             tss = jax.lax.all_gather(state["ts"][0], axis)
-            key = jnp.where(valids, tss, -1)
-            best = jnp.argmax(key, axis=0)
-            slot = jnp.arange(key.shape[-1])
+            table, valid, ts = lww_select(tables, valids, tss)
             lanes = state["table"].shape[0]
+            ts_size = table.shape[-1]
             state = {
-                "table": jnp.broadcast_to(tables[best, slot], (lanes, key.shape[-1])),
-                "valid": jnp.broadcast_to(jnp.any(valids, 0), (lanes, key.shape[-1])),
-                "ts": jnp.broadcast_to(key[best, slot], (lanes, key.shape[-1])),
+                "table": jnp.broadcast_to(table, (lanes, ts_size)),
+                "valid": jnp.broadcast_to(valid, (lanes, ts_size)),
+                "ts": jnp.broadcast_to(ts, (lanes, ts_size)),
                 "clock": jnp.broadcast_to(jax.lax.pmax(state["clock"][0], axis), (lanes,)),
             }
         lanes, B = block.shape
@@ -276,7 +226,7 @@ def sharded_compress_fn(
         return state, words, total_bits
 
     return jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             shard_step,
             mesh=mesh,
             in_specs=(P(axis), P(axis, None)),

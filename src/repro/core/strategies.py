@@ -35,9 +35,82 @@ class EngineConfig:
     scheduling: SchedulingStrategy = SchedulingStrategy.ASYMMETRIC
     profile: str = "rk3399_amp"
     calibrate: bool = True
+    #: lazy-path scan fusion override: 0 = auto (plan_execution decides);
+    #: 1 = one dispatch per micro-batch (streaming-faithful, a batch can't
+    #: fuse with batches that haven't arrived yet); >1 = fixed fusion length
+    scan_chunk: int = 0
 
     def hardware(self) -> energy_mod.HardwareProfile:
         return energy_mod.PROFILES[self.profile]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Resolved execution decisions for one stream/config (policy layer).
+
+    `plan_execution` is the single place where batch sizing, scan fusion
+    granularity and scheduling policy are decided; the executor
+    (core/pipeline.py) and the serving runtime (runtime/server.py) both
+    consume the plan instead of re-deriving these numbers locally
+    (DESIGN.md §3)."""
+
+    execution: ExecutionStrategy
+    scheduling: SchedulingStrategy
+    micro_batch_bytes: int  # resolved (cache-aware when the config says auto)
+    per_lane: int  # tuples per lane per micro-batch block
+    lanes: int
+    scan_chunk: int  # blocks fused per lax.scan dispatch (1 = eager)
+
+    @property
+    def block_tuples(self) -> int:
+        return self.per_lane * self.lanes
+
+
+#: bytes of blocks one fused scan dispatch should cover — enough to amortize
+#: a dispatch over many blocks without unbounded trace length
+_SCAN_TARGET_BYTES = 4 << 20
+_SCAN_CHUNK_MAX = 128
+
+
+def plan_execution(
+    config: "EngineConfig",
+    profile: energy_mod.HardwareProfile = None,
+    codec_align: int = 1,
+) -> ExecutionPlan:
+    """Decide block shaping, scan fusion and scheduling for a config.
+
+    * micro-batch bytes: the config value, or the cache-aware optimum
+      (paper Fig 11) when the config asks for auto (<= 0);
+    * block tuples: micro-batch split over `lanes` substreams, aligned to
+      `codec_align` (e.g. PLA superwindows need per-lane multiples of 2W);
+    * scan chunk: how many blocks one fused `lax.scan` dispatch covers —
+      eager keeps chunk 1 (per-block dispatch, the paper's per-tuple
+      baseline), lazy amortizes dispatch over ~_SCAN_TARGET_BYTES.
+    """
+    profile = profile or config.hardware()
+    mbb = config.micro_batch_bytes
+    if mbb <= 0:
+        mbb = cache_aware_batch_bytes(profile)
+    if config.execution == ExecutionStrategy.EAGER:
+        per_lane = 1  # one tuple per lane per dispatch
+    else:
+        per_lane = max(1, mbb // 4 // config.lanes)
+        per_lane = max(codec_align, (per_lane // codec_align) * codec_align)
+    block_bytes = per_lane * config.lanes * 4
+    if config.execution == ExecutionStrategy.EAGER:
+        scan_chunk = 1
+    elif config.scan_chunk > 0:
+        scan_chunk = config.scan_chunk
+    else:
+        scan_chunk = max(1, min(_SCAN_CHUNK_MAX, _SCAN_TARGET_BYTES // max(block_bytes, 1)))
+    return ExecutionPlan(
+        execution=config.execution,
+        scheduling=config.scheduling,
+        micro_batch_bytes=mbb,
+        per_lane=per_lane,
+        lanes=config.lanes,
+        scan_chunk=scan_chunk,
+    )
 
 
 def cache_aware_batch_bytes(profile: energy_mod.HardwareProfile) -> int:
@@ -56,6 +129,16 @@ def vmem_aware_block_tuples(chip: energy_mod.TpuChip = energy_mod.V5E, dtype_byt
 
 
 # ------------------------------------------------------------- scheduling --
+def block_costs(wall_s: float, per_block_bits) -> List[float]:
+    """Per-block schedule costs from a measured run: mean per-block cost at
+    speed 1.0, scaled by each block's share of emitted bits. The one cost
+    model both the engine's schedule layer and the Fig 13 bench use."""
+    n_blocks = len(per_block_bits)
+    per_block_cost = wall_s / max(n_blocks, 1)
+    mean = sum(per_block_bits) / max(n_blocks, 1)
+    return [per_block_cost * b / max(mean, 1.0) for b in per_block_bits]
+
+
 def schedule_blocks(
     costs: Sequence[float],
     speeds: Sequence[float],

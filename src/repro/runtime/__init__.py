@@ -1,3 +1,9 @@
+from repro.runtime.server import (  # noqa: F401
+    ServerReport,
+    SessionReport,
+    StreamServer,
+    StreamSession,
+)
 from repro.runtime.sharding import (  # noqa: F401
     batch_specs,
     cache_specs,

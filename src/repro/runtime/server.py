@@ -1,0 +1,367 @@
+"""Multi-stream serving runtime: StreamSession + StreamServer (DESIGN.md §3).
+
+The session/server layer sits on top of the executor (core/pipeline.py) and
+policy (core/strategies.py `plan_execution`) layers:
+
+  * `StreamSession` — one per topic: private codec state that persists across
+    micro-batches, plus an arrival-timestamp-driven accumulator. A batch is
+    flushed when it reaches the planned micro-batch size OR when its oldest
+    tuple has waited `flush_timeout_s` (the size-or-timeout batcher of edge
+    telemetry collectors; bursty `zipf_timestamps` streams hit both paths).
+    Partial (timeout) flushes are edge-padded and mask out pad slots, so the
+    bitstream and the ratio/latency accounting stay exact.
+  * `StreamServer` — admits up to `max_sessions` concurrent sessions and
+    replays their merged arrival order. Flushed blocks carry measured
+    compression costs; the server maps them onto the hardware profile's
+    cores via `schedule_blocks` (worker schedule layer) and reports modeled
+    makespan + energy next to per-session ratio / throughput / latency.
+
+Arrival replay is a simulation driven by `data/stream.py` timestamps — the
+wall clock measures only compression compute, never the synthetic waiting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.energy import PROFILES, edge_energy_j
+from repro.core.pipeline import CompressionPipeline
+from repro.core.strategies import EngineConfig, SchedulingStrategy, schedule_blocks
+
+
+@dataclasses.dataclass
+class FlushRecord:
+    """One flushed micro-batch: what it cost and how long its tuples waited."""
+
+    n_tuples: int
+    bits: float
+    cost_s: float  # measured compression wall time for this block
+    mean_wait_s: float  # arrival -> flush wait, averaged over the batch
+    max_wait_s: float
+    timeout: bool  # flushed by timeout (partial) rather than by size
+
+
+@dataclasses.dataclass
+class SessionReport:
+    topic: str
+    codec: str
+    n_tuples: int
+    n_flushes: int
+    n_timeout_flushes: int
+    input_bytes: int
+    output_bytes: float
+    ratio: float
+    compute_s: float  # sum of per-flush compression costs
+    throughput_mbps: float  # input bytes over compute time
+    mean_latency_s: float  # per-tuple wait + processing, flush-weighted
+    p95_latency_s: float
+    energy_j: float  # session's share of the scheduled profile energy
+
+
+@dataclasses.dataclass
+class ServerReport:
+    sessions: Dict[str, SessionReport]
+    n_sessions: int
+    total_tuples: int
+    total_input_bytes: int
+    total_output_bytes: float
+    ratio: float
+    compute_s: float
+    makespan_s: float  # modeled: flushes scheduled across the profile cores
+    busy_s: List[float]
+    energy_j: float
+    aggregate_mbps: float  # input bytes over modeled makespan
+
+
+class StreamSession:
+    """Per-topic codec state + size-or-timeout micro-batch accumulator."""
+
+    def __init__(
+        self,
+        topic: str,
+        config: EngineConfig,
+        sample: Optional[np.ndarray] = None,
+        flush_tuples: int = 0,
+        flush_timeout_s: float = 0.25,
+    ):
+        self.topic = topic
+        self.pipeline = CompressionPipeline(config, sample=sample)
+        plan = self.pipeline.plan
+        unit = config.lanes * self.pipeline.align
+        cap = flush_tuples if flush_tuples > 0 else plan.block_tuples
+        self.capacity = max(unit, ((cap + unit - 1) // unit) * unit)
+        self.flush_timeout_s = flush_timeout_s
+        self.lanes = config.lanes
+        self.state = self.pipeline.init_state()
+        self._values = np.zeros(self.capacity, np.uint32)
+        self._arrivals = np.zeros(self.capacity, np.float64)
+        self._count = 0
+        self.flushes: List[FlushRecord] = []
+        # compile the flush kernel up front so per-flush timings are compute,
+        # not compilation (throwaway state: warmup must not advance the codec)
+        zeros = jnp.zeros((self.lanes, self.capacity // self.lanes), jnp.uint32)
+        mask = jnp.ones(zeros.shape, bool)
+        jax.block_until_ready(
+            self.pipeline._masked_step(self.pipeline.init_state(), zeros, mask)
+        )
+
+    # ------------------------------------------------------------- ingest
+    @property
+    def buffered(self) -> int:
+        return self._count
+
+    @property
+    def oldest_arrival(self) -> Optional[float]:
+        return float(self._arrivals[0]) if self._count else None
+
+    def due(self, now: float) -> bool:
+        """Size reached, or the oldest buffered tuple timed out."""
+        if self._count >= self.capacity:
+            return True
+        return self._count > 0 and (now - self._arrivals[0]) >= self.flush_timeout_s
+
+    def poll(self, now: float) -> Optional[FlushRecord]:
+        """Fire the flush timer if it is due by `now`. The flush is stamped
+        at the DEADLINE (oldest arrival + timeout), not at `now` — the clock
+        may have advanced well past the deadline before the server polled
+        (e.g. another topic's long arrival run), and the batch's tuples
+        stopped waiting when the timer fired."""
+        if not self.due(now):
+            return None
+        deadline = float(self._arrivals[0]) + self.flush_timeout_s
+        return self.flush(now=min(now, deadline))
+
+    def offer(self, value: int, ts: float) -> Optional[FlushRecord]:
+        """Buffer one tuple; flush (and return the record) when full."""
+        self._values[self._count] = value
+        self._arrivals[self._count] = ts
+        self._count += 1
+        if self._count >= self.capacity:
+            return self.flush(now=ts)
+        return None
+
+    def offer_many(self, values: np.ndarray, tss: np.ndarray) -> List[FlushRecord]:
+        """Buffer a run of tuples (same topic, ascending timestamps),
+        flushing whenever a batch fills OR a batch's deadline (oldest
+        arrival + timeout) passes before the next tuple arrives."""
+        out: List[FlushRecord] = []
+        i, n = 0, len(values)
+        while i < n:
+            if self._count == 0:
+                deadline = float(tss[i]) + self.flush_timeout_s
+            else:
+                deadline = float(self._arrivals[0]) + self.flush_timeout_s
+                if float(tss[i]) > deadline:  # timer fired before this tuple
+                    out.append(self.flush(now=deadline))
+                    continue
+            space = self.capacity - self._count
+            # tuples that arrive before the current batch's deadline join it
+            take = int(np.searchsorted(tss[i : i + space], deadline, side="right"))
+            take = max(take, 1)  # tss[i] <= deadline by construction
+            self._values[self._count : self._count + take] = values[i : i + take]
+            self._arrivals[self._count : self._count + take] = tss[i : i + take]
+            self._count += take
+            i += take
+            if self._count >= self.capacity:
+                out.append(self.flush(now=float(tss[i - 1])))
+        return out
+
+    # -------------------------------------------------------------- flush
+    def flush(self, now: float) -> Optional[FlushRecord]:
+        """Compress the buffered batch (padded + masked if partial).
+
+        Partial batches are edge-padded (repeats of the batch's last value)
+        and the pad symbols are masked out of the bitstream. The codec state
+        still advances over the pads, which stays decoder-replayable: a
+        frame header carries the real tuple count, padding is defined as
+        repeat-of-last-value, so by the time a decoder reaches the pad
+        positions it has already reconstructed that value and can replay
+        the identical state evolution."""
+        n = self._count
+        if n == 0:
+            return None
+        vals = np.full(self.capacity, self._values[max(n - 1, 0)], np.uint32)
+        vals[:n] = self._values[:n]
+        mask = np.zeros(self.capacity, bool)
+        mask[:n] = True
+        block = jnp.asarray(vals.reshape(self.lanes, -1))
+        mask_dev = jnp.asarray(mask.reshape(self.lanes, -1))
+        t0 = time.perf_counter()
+        self.state, _, total_bits = jax.block_until_ready(
+            self.pipeline._masked_step(self.state, block, mask_dev)
+        )
+        cost = time.perf_counter() - t0
+        waits = np.maximum(now - self._arrivals[:n], 0.0)
+        rec = FlushRecord(
+            n_tuples=n,
+            bits=float(total_bits),
+            cost_s=cost,
+            mean_wait_s=float(waits.mean()),
+            max_wait_s=float(waits.max()),
+            timeout=n < self.capacity,
+        )
+        self.flushes.append(rec)
+        self._count = 0
+        return rec
+
+    # ------------------------------------------------------------- report
+    def report(self, energy_j: float = 0.0) -> SessionReport:
+        n_tuples = sum(f.n_tuples for f in self.flushes)
+        bits = sum(f.bits for f in self.flushes)
+        compute = sum(f.cost_s for f in self.flushes)
+        input_bytes = n_tuples * 4
+        lat = [f.mean_wait_s + f.cost_s for f in self.flushes]
+        weights = np.array([f.n_tuples for f in self.flushes], np.float64)
+        lat_arr = np.array(lat, np.float64)
+        mean_lat = float((lat_arr * weights).sum() / max(weights.sum(), 1.0))
+        p95 = float(np.percentile(lat_arr, 95)) if len(lat_arr) else 0.0
+        return SessionReport(
+            topic=self.topic,
+            codec=self.pipeline.codec.name,
+            n_tuples=n_tuples,
+            n_flushes=len(self.flushes),
+            n_timeout_flushes=sum(f.timeout for f in self.flushes),
+            input_bytes=input_bytes,
+            output_bytes=bits / 8.0,
+            ratio=(input_bytes * 8.0) / max(bits, 1.0),
+            compute_s=compute,
+            throughput_mbps=input_bytes / 1e6 / max(compute, 1e-12),
+            mean_latency_s=mean_lat,
+            p95_latency_s=p95,
+            energy_j=energy_j,
+        )
+
+
+class StreamServer:
+    """Admits N concurrent sessions; flushes size-or-timeout; schedules
+    flushed blocks across the hardware profile."""
+
+    def __init__(
+        self,
+        profile: str = "rk3399_amp",
+        scheduling: SchedulingStrategy = SchedulingStrategy.ASYMMETRIC,
+        max_sessions: int = 16,
+        flush_timeout_s: float = 0.25,
+    ):
+        self.profile = PROFILES[profile]
+        self.scheduling = scheduling
+        self.max_sessions = max_sessions
+        self.flush_timeout_s = flush_timeout_s
+        self.sessions: Dict[str, StreamSession] = {}
+
+    # -------------------------------------------------------------- admit
+    def admit(
+        self,
+        topic: str,
+        config: EngineConfig,
+        sample: Optional[np.ndarray] = None,
+        flush_tuples: int = 0,
+        flush_timeout_s: Optional[float] = None,
+    ) -> StreamSession:
+        if topic in self.sessions:
+            raise ValueError(f"session {topic!r} already admitted")
+        if len(self.sessions) >= self.max_sessions:
+            raise RuntimeError(
+                f"server full: {len(self.sessions)}/{self.max_sessions} sessions"
+            )
+        session = StreamSession(
+            topic,
+            config,
+            sample=sample,
+            flush_tuples=flush_tuples,
+            flush_timeout_s=(
+                self.flush_timeout_s if flush_timeout_s is None else flush_timeout_s
+            ),
+        )
+        self.sessions[topic] = session
+        return session
+
+    def session(self, topic: str) -> StreamSession:
+        return self.sessions[topic]
+
+    # ---------------------------------------------------------------- run
+    def run(self, feeds: Dict[str, Tuple[np.ndarray, np.ndarray]]) -> ServerReport:
+        """Replay per-topic (values, arrival_timestamps) in merged time order.
+
+        Tuples are offered to their session as their timestamps fire; any
+        session whose oldest buffered tuple exceeds its flush timeout is
+        flushed as the simulated clock passes the deadline."""
+        unknown = set(feeds) - set(self.sessions)
+        if unknown:
+            raise KeyError(f"feeds for unadmitted topics: {sorted(unknown)}")
+        topics = sorted(feeds)
+        values = [np.ascontiguousarray(feeds[t][0], np.uint32).ravel() for t in topics]
+        tss = [np.asarray(feeds[t][1], np.float64).ravel() for t in topics]
+        for t, v, ts in zip(topics, values, tss):
+            if len(v) != len(ts):
+                raise ValueError(f"{t}: {len(v)} values vs {len(ts)} timestamps")
+
+        # merged arrival order (stable: ties keep topic order)
+        all_ts = np.concatenate(tss) if tss else np.zeros(0)
+        topic_idx = np.concatenate(
+            [np.full(len(ts), i, np.int32) for i, ts in enumerate(tss)]
+        ) if tss else np.zeros(0, np.int32)
+        within = np.concatenate(
+            [np.arange(len(ts), dtype=np.int64) for ts in tss]
+        ) if tss else np.zeros(0, np.int64)
+        order = np.argsort(all_ts, kind="stable")
+
+        sess = [self.sessions[t] for t in topics]
+        # walk the merged order in runs of equal topic so full batches move
+        # through offer_many; timeout flushes fire as the clock advances
+        i, n = 0, len(order)
+        while i < n:
+            j = i
+            tpi = topic_idx[order[i]]
+            while j < n and topic_idx[order[j]] == tpi:
+                j += 1
+            run_idx = within[order[i:j]]
+            now = float(all_ts[order[j - 1]])
+            sess[tpi].offer_many(values[tpi][run_idx], tss[tpi][run_idx])
+            for s in sess:
+                s.poll(now)
+            i = j
+        # drain: every residual batch's timer fires after its oldest arrival
+        for s in sess:
+            if s.buffered:
+                s.flush(float(s._arrivals[0]) + s.flush_timeout_s)
+
+        return self.report(topics)
+
+    # ------------------------------------------------------------- report
+    def report(self, topics: Optional[List[str]] = None) -> ServerReport:
+        topics = sorted(self.sessions) if topics is None else topics
+        sess = [self.sessions[t] for t in topics]
+        records = [f for s in sess for f in s.flushes]
+        costs = [f.cost_s for f in records]
+        _, busy, makespan = schedule_blocks(costs, self.profile.speeds, self.scheduling)
+        energy = edge_energy_j(
+            self.profile, busy, makespan,
+            spin_wait=self.scheduling == SchedulingStrategy.UNIFORM,
+        )
+        total_cost = sum(costs)
+        reports = {}
+        for s in sess:
+            share = sum(f.cost_s for f in s.flushes) / max(total_cost, 1e-12)
+            reports[s.topic] = s.report(energy_j=energy * share)
+        total_tuples = sum(r.n_tuples for r in reports.values())
+        input_bytes = sum(r.input_bytes for r in reports.values())
+        output_bytes = sum(r.output_bytes for r in reports.values())
+        return ServerReport(
+            sessions=reports,
+            n_sessions=len(sess),
+            total_tuples=total_tuples,
+            total_input_bytes=input_bytes,
+            total_output_bytes=output_bytes,
+            ratio=(input_bytes * 8.0) / max(output_bytes * 8.0, 1.0),
+            compute_s=total_cost,
+            makespan_s=makespan,
+            busy_s=busy,
+            energy_j=energy,
+            aggregate_mbps=input_bytes / 1e6 / max(makespan, 1e-12),
+        )

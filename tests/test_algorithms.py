@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips when absent
 
 from repro.core.algorithms import PAPER_TABLE1, codec_names, make_codec
 from repro.core.calibration import calibrated_kwargs

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips when absent
 
 from repro.core import bits
 from repro.kernels import ops, ref

@@ -1,0 +1,129 @@
+"""Multi-stream serving runtime: session batching, timeout flushes, admission
+control, scheduling/energy integration, state continuity across flushes."""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import CompressionPipeline
+from repro.core.strategies import EngineConfig
+from repro.data import make_dataset
+from repro.data.stream import rate_for_dataset, uniform_timestamps, zipf_timestamps
+from repro.runtime.server import StreamServer, StreamSession
+
+#: codec chosen per dataset (paper Fig 5: no codec wins everywhere)
+MIX = [
+    ("tcomp32", "micro"),
+    ("tdic32", "rovio"),
+    ("tcomp32", "stock"),
+    ("tdic32", "sensor"),
+]
+
+
+def _cfg(codec):
+    return EngineConfig(codec=codec, micro_batch_bytes=2048, lanes=4)
+
+
+def test_server_sustains_8_sessions_mixed_codecs_bursty():
+    """>= 8 concurrent sessions, mixed codecs, zipf (bursty) arrivals,
+    per-session metrics reported for every topic."""
+    n, rate = 4096, rate_for_dataset(1)
+    server = StreamServer(max_sessions=16)
+    feeds = {}
+    for i in range(8):
+        codec, dataset = MIX[i % len(MIX)]
+        vals = make_dataset(dataset, n_tuples=n).stream()[:n]
+        topic = f"{dataset}-{i}"
+        server.admit(topic, _cfg(codec), sample=vals)
+        feeds[topic] = (vals, zipf_timestamps(n, rate, zipf_factor=0.7, seed=i))
+    rep = server.run(feeds)
+
+    assert rep.n_sessions == 8
+    assert rep.total_tuples == 8 * n
+    assert rep.makespan_s > 0 and rep.energy_j > 0
+    assert set(rep.sessions) == set(feeds)
+    for r in rep.sessions.values():
+        assert r.n_tuples == n  # every tuple flushed, none lost
+        assert r.n_flushes > 0
+        assert r.ratio > 1.0  # suitable codec per dataset => compresses
+        assert r.throughput_mbps > 0
+        assert r.mean_latency_s > 0
+        assert r.p95_latency_s >= r.mean_latency_s * 0.5
+        assert r.energy_j > 0
+    # energy shares decompose the scheduled total
+    assert sum(r.energy_j for r in rep.sessions.values()) == pytest.approx(rep.energy_j)
+
+
+def test_timeout_flushes_partial_batches():
+    """A trickle stream never fills a batch: every flush is a timeout flush
+    and still no tuple is lost."""
+    n = 100
+    vals = make_dataset("micro", n_tuples=4096, dynamic_range_bits=12).stream()[:n]
+    server = StreamServer(flush_timeout_s=0.05)
+    server.admit("trickle", _cfg("tcomp32"), sample=vals)
+    capacity = server.session("trickle").capacity
+    assert n < capacity  # the stream genuinely can't fill one batch
+    # 10 tuples/s: the 0.05s timeout fires long before the batch fills
+    rep = server.run({"trickle": (vals, uniform_timestamps(n, rate_tps=10.0))})
+    r = rep.sessions["trickle"]
+    assert r.n_tuples == n
+    assert r.n_timeout_flushes == r.n_flushes > 1
+
+
+def test_admission_control_caps_sessions():
+    server = StreamServer(max_sessions=2)
+    server.admit("a", _cfg("tcomp32"))
+    server.admit("b", _cfg("tcomp32"))
+    with pytest.raises(RuntimeError, match="server full"):
+        server.admit("c", _cfg("tcomp32"))
+    with pytest.raises(ValueError, match="already admitted"):
+        server.admit("a", _cfg("tcomp32"))
+
+
+def test_session_state_persists_across_flushes():
+    """Flush N must continue the codec state of flush N-1: the session's
+    total bits equal one engine pass over the concatenated stream."""
+    ds = make_dataset("rovio", n_tuples=4096)
+    vals = ds.stream()[:4096]
+    session = StreamSession("t", _cfg("tdic32"), sample=vals, flush_timeout_s=1e9)
+    cap = session.capacity
+    n_batches = len(vals) // cap
+    vals = vals[: n_batches * cap]
+    for i in range(n_batches):
+        session.offer_many(
+            vals[i * cap : (i + 1) * cap],
+            np.full(cap, float(i), np.float64),
+        )
+    assert len(session.flushes) == n_batches
+
+    pipe = CompressionPipeline(_cfg("tdic32"), sample=vals)
+    shaped = pipe.shape_blocks(vals)
+    res = pipe.execute(shaped, fused=True)
+    assert sum(f.bits for f in session.flushes) == pytest.approx(
+        float(res.per_block_bits.sum())
+    )
+
+
+def test_timeout_flush_stamped_at_deadline_not_poll_time():
+    """A session whose timer fired while another topic monopolized the clock
+    must record waits up to its deadline, not up to whenever the server got
+    around to polling it."""
+    timeout = 0.05
+    server = StreamServer(flush_timeout_s=timeout)
+    server.admit("quiet", _cfg("tcomp32"))
+    server.admit("busy", _cfg("tcomp32"))
+    quiet_vals = np.arange(8, dtype=np.uint32)
+    quiet_ts = np.linspace(0.0, 0.001, 8)
+    busy_n = 4096
+    busy_vals = np.arange(busy_n, dtype=np.uint32)
+    busy_ts = np.linspace(10.0, 100.0, busy_n)  # one run, far past the deadline
+    rep = server.run({"quiet": (quiet_vals, quiet_ts), "busy": (busy_vals, busy_ts)})
+    r = rep.sessions["quiet"]
+    assert r.n_tuples == 8 and r.n_timeout_flushes == r.n_flushes == 1
+    # waits bounded by the timeout, nowhere near the 100s the clock reached
+    assert r.mean_latency_s < 2 * timeout
+
+
+def test_unknown_topic_feed_rejected():
+    server = StreamServer()
+    server.admit("known", _cfg("tcomp32"))
+    with pytest.raises(KeyError):
+        server.run({"unknown": (np.zeros(4, np.uint32), np.zeros(4))})
