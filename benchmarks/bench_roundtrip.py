@@ -1,0 +1,97 @@
+"""Beyond-paper: the egress path — decode throughput, compress/decompress
+asymmetry, and the per-codec fidelity contract through the wire frame.
+
+Claims this PR must earn:
+  * every lossless codec roundtrips bit-exact through the framed bitstream;
+  * every bounded lossy codec lands inside its configured max-abs bound
+    (and all lossy codecs under the paper's 5% NRMSE loss budget);
+  * the decode path runs through the fused chunked-scan executor, so decode
+    throughput is the same order as encode (asymmetry bounded), not a
+    per-block dispatch crawl.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import engine_cfg, fmt_table, stream_for
+
+
+#: codec -> dataset it suits (paper Fig 5: no codec wins everywhere)
+CODEC_STREAMS = [
+    ("tcomp32", "micro"),
+    ("leb128", "micro"),
+    ("delta_leb128", "stock"),
+    ("tdic32", "rovio"),
+    ("rle", "sensor_runs"),
+    ("leb128_nuq", "micro"),
+    ("uanuq", "micro"),
+    ("adpcm", "ecg"),
+    ("uaadpcm", "ecg"),
+    ("pla", "ecg"),
+]
+
+
+def _stream(name: str, quick: bool) -> np.ndarray:
+    if name == "sensor_runs":  # heavy-runs stream so RLE has runs to merge
+        rng = np.random.default_rng(5)
+        n = (1 << 15) if quick else (1 << 17)
+        return np.repeat(rng.integers(0, 256, size=n // 32 + 1).astype(np.uint32), 32)[:n]
+    return stream_for(name, quick)
+
+
+def run(quick: bool = True) -> dict:
+    from repro.core.engine import CStreamEngine
+
+    rows = []
+    for codec, ds in CODEC_STREAMS:
+        stream = _stream(ds, quick)
+        # calibrate on the WHOLE stream: the quantizer's error bound only
+        # holds for in-range values; a prefix sample would let later values
+        # clip past vmax and void the contract this bench is checking
+        eng = CStreamEngine(engine_cfg(codec, quick), sample=stream)
+        rt = eng.roundtrip(stream)  # warmups inside; walls measure compute
+        fid = rt.fidelity
+        mb = rt.fidelity.n_tuples * 4 / 1e6
+        enc_s = rt.compress.stats.wall_s
+        dec_s = rt.decode_wall_s
+        rows.append({
+            "codec": codec,
+            "dataset": ds,
+            "ratio": rt.compress.stats.ratio,
+            "wire_ratio": (fid.n_tuples * 4) / max(rt.wire_bytes, 1),
+            "enc_mbps": mb / max(enc_s, 1e-12),
+            "dec_mbps": mb / max(dec_s, 1e-12),
+            "dec_over_enc": dec_s / max(enc_s, 1e-12),
+            "bit_exact": fid.bit_exact,
+            "max_abs": fid.max_abs,
+            "bound": fid.bound,
+            "within_bound": fid.within_bound,
+            "nrmse": fid.nrmse,
+            "lossy": eng.codec.meta.lossy,
+        })
+
+    print(fmt_table(
+        rows,
+        ["codec", "dataset", "ratio", "wire_ratio", "enc_mbps", "dec_mbps",
+         "dec_over_enc", "bit_exact", "max_abs", "bound", "nrmse"],
+        "roundtrip through the wire frame: fidelity + decode throughput",
+    ))
+
+    lossless = [r for r in rows if not r["lossy"]]
+    lossy = [r for r in rows if r["lossy"]]
+    bounded = [r for r in lossy if r["bound"] is not None]
+    asym = [r["dec_over_enc"] for r in rows]
+    claims = {
+        "all_lossless_bit_exact": all(r["bit_exact"] for r in lossless),
+        "bounded_lossy_within_bound": all(r["within_bound"] for r in bounded),
+        "all_lossy_under_5pct_nrmse": all(r["nrmse"] < 0.05 for r in lossy),
+        # fused decode: median decompress within ~6x of compress (same order;
+        # ADPCM's sequential reconstruction scan is the honest outlier)
+        "decode_same_order_as_encode": float(np.median(asym)) < 6.0,
+    }
+    print("   claims:", claims)
+    return {"rows": rows, "claims": claims}
+
+
+if __name__ == "__main__":
+    run()

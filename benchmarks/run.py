@@ -30,13 +30,15 @@ MODULES = [
     "bench_compressibility",   # Figs 15/16
     "bench_production_paths",  # beyond-paper
     "bench_server",            # beyond-paper: fused executor + StreamServer
+    "bench_roundtrip",         # beyond-paper: egress/decode path + fidelity
     "bench_roofline",          # dry-run aggregation
 ]
 
-#: --smoke: the fast subset CI runs on CPU — executor + runtime claims only
+#: --smoke: the fast subset CI runs on CPU — executor + runtime + egress claims
 SMOKE_MODULES = [
     "bench_execution",
     "bench_server",
+    "bench_roundtrip",
 ]
 
 

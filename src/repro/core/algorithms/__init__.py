@@ -29,6 +29,24 @@ PAPER_TABLE1 = {
     "PLA": "pla",
 }
 
+#: stable wire-format codec identifiers (core/bits.py frame header). Append
+#: only — renumbering breaks every previously written frame.
+WIRE_CODEC_IDS = {
+    "leb128_nuq": 1,
+    "adpcm": 2,
+    "uanuq": 3,
+    "uaadpcm": 4,
+    "leb128": 5,
+    "delta_leb128": 6,
+    "tcomp32": 7,
+    "tdic32": 8,
+    "rle": 9,
+    "pla": 10,
+}
+
+#: reverse map: frame codec id -> registry name
+WIRE_CODEC_NAMES = {v: k for k, v in WIRE_CODEC_IDS.items()}
+
 __all__ = [
     "Codec",
     "CodecMeta",
@@ -36,4 +54,6 @@ __all__ = [
     "codec_names",
     "make_codec",
     "PAPER_TABLE1",
+    "WIRE_CODEC_IDS",
+    "WIRE_CODEC_NAMES",
 ]

@@ -92,7 +92,12 @@ class _ADPCMBase(Codec):
 
 @register("adpcm")
 class ADPCM(_ADPCMBase):
-    meta = CodecMeta("adpcm", lossy=True, stateful=True, state_kind="value", aligned=True)
+    # not maskable: decode replays xhat from the delta codes themselves, so
+    # pad symbols must travel on the wire to keep encoder/decoder state equal
+    meta = CodecMeta(
+        "adpcm", lossy=True, stateful=True, state_kind="value", aligned=True,
+        maskable=False,
+    )
 
     def _bitlen(self) -> int:
         return 8 * ((self.qbits + 7) // 8)
@@ -100,7 +105,10 @@ class ADPCM(_ADPCMBase):
 
 @register("uaadpcm")
 class UAADPCM(_ADPCMBase):
-    meta = CodecMeta("uaadpcm", lossy=True, stateful=True, state_kind="value", aligned=False)
+    meta = CodecMeta(
+        "uaadpcm", lossy=True, stateful=True, state_kind="value", aligned=False,
+        maskable=False,
+    )
 
     def _bitlen(self) -> int:
         return self.qbits

@@ -41,6 +41,18 @@ class CodecMeta:
     stateful: bool
     state_kind: str  # 'none' | 'value' | 'dictionary' | 'model'
     aligned: bool
+    #: decode locality (DESIGN.md §10): 'block' codecs reconstruct each
+    #: micro-batch block from its own symbols (+ replayed state), so decode
+    #: runs inside the fused chunked scan; 'stream' codecs (RLE) emit symbols
+    #: whose expansion crosses block boundaries and decode the whole symbol
+    #: stream in one vectorized dispatch.
+    scope: str = "block"  # 'block' | 'stream'
+    #: True if pad symbols may be dropped from the wire: the decoder never
+    #: reads them and no state replay depends on them. False for codecs whose
+    #: decoder replays state from the symbols themselves (value/dictionary
+    #: recurrences) — dropping a pad symbol would fork encoder and decoder
+    #: state, corrupting every later micro-batch of the session.
+    maskable: bool = True
 
 
 class Codec:
@@ -60,8 +72,21 @@ class Codec:
         raise NotImplementedError
 
     def flush(self, state: Any) -> Optional[Encoded]:
-        """Final symbols for trailing state (None if codec has none)."""
+        """Final symbols for trailing state (None if codec has none).
+
+        Called by the pipeline when a stream ends; the returned mini-block
+        (one symbol slot per lane per trailing item) is packed after the last
+        data block. Must not mutate `state`."""
         return None
+
+    def error_bound(self) -> Optional[float]:
+        """Max-abs reconstruction error this codec guarantees per tuple.
+
+        0.0 for lossless codecs; a finite bound for lossy codecs whose
+        quantizer is bounded by construction (PLA's eps, NUQ's level
+        spacing); None when no hard bound exists (ADPCM slope overload) and
+        fidelity must be measured, not assumed."""
+        return 0.0 if not self.meta.lossy else None
 
     # -- convenience ---------------------------------------------------------
     @property
@@ -69,13 +94,21 @@ class Codec:
         return self.meta.name
 
     def roundtrip(self, x: jax.Array) -> jax.Array:
-        """Single-shot encode+decode starting from fresh state (testing)."""
+        """Single-shot encode+flush+decode starting from fresh state."""
         lanes = x.shape[0]
         st_e = self.init_state(lanes)
         st_d = self.init_state(lanes)
-        _, enc = self.encode(st_e, x)
+        st_e, enc = self.encode(st_e, x)
+        tail = self.flush(st_e)
+        if tail is not None:
+            enc = Encoded(
+                jnp.concatenate([enc.codes, tail.codes], axis=1),
+                jnp.concatenate([enc.bitlen, tail.bitlen], axis=1),
+            )
         _, xhat = self.decode(st_d, enc)
-        return xhat
+        # stream-scope decoders return one value per symbol slot; the valid
+        # reconstruction is the input-width prefix either way
+        return xhat[:, : x.shape[1]]
 
 
 _REGISTRY: Dict[str, Callable[..., Codec]] = {}

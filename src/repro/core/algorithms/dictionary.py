@@ -29,7 +29,12 @@ KNUTH = jnp.uint32(2654435761)
 
 @register("tdic32")
 class Tdic32(Codec):
-    meta = CodecMeta("tdic32", lossy=False, stateful=True, state_kind="dictionary", aligned=False)
+    # not maskable: decode replays table inserts from decoded symbols; pad
+    # symbols must travel so the replayed table matches the encoder's
+    meta = CodecMeta(
+        "tdic32", lossy=False, stateful=True, state_kind="dictionary",
+        aligned=False, maskable=False,
+    )
 
     def __init__(self, idx_bits: int = 12, mode: str = "frozen"):
         assert mode in ("frozen", "exact")

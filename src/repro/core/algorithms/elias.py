@@ -66,3 +66,6 @@ class UANUQ(Codec):
     def decode(self, state: Any, enc: Encoded) -> Tuple[Any, jax.Array]:
         v = nuq.mulaw_decode_unsigned(enc.codes[..., 0], self.qbits, self.vmax, self.mu)
         return state, v.astype(U32)
+
+    def error_bound(self) -> float:
+        return nuq.mulaw_max_abs_err(self.qbits, self.vmax, self.mu)

@@ -71,7 +71,12 @@ class DeltaLEB128(Codec):
     the lane state carries the last value across micro-batches.
     """
 
-    meta = CodecMeta("delta_leb128", lossy=False, stateful=True, state_kind="value", aligned=True)
+    # not maskable: the decoder's `prev` replays from decoded symbols, so pad
+    # symbols must travel on the wire or session state forks at each pad
+    meta = CodecMeta(
+        "delta_leb128", lossy=False, stateful=True, state_kind="value",
+        aligned=True, maskable=False,
+    )
 
     def init_state(self, lanes: int):
         return {"prev": jnp.zeros((lanes,), U32)}
@@ -111,3 +116,6 @@ class LEB128NUQ(Codec):
         q = leb128_decode_words(enc.codes, enc.bitlen)
         v = nuq.mulaw_decode_unsigned(q, self.qbits, self.vmax, self.mu)
         return state, v.astype(U32)
+
+    def error_bound(self) -> float:
+        return nuq.mulaw_max_abs_err(self.qbits, self.vmax, self.mu)

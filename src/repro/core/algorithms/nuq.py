@@ -16,6 +16,29 @@ import jax.numpy as jnp
 DEFAULT_MU = 255.0
 
 
+def mulaw_max_abs_err(qbits: int, vmax: float, mu: float = DEFAULT_MU) -> float:
+    """Hard max-abs reconstruction bound of the unsigned mu-law quantizer
+    (for inputs within [0, vmax]; values above vmax clip unboundedly).
+
+    Encode rounds y = F(v) to the nearest of `levels+1` grid points, so a
+    value at the decision boundary y = (k + 1/2)/levels may land on level k
+    OR k+1. Because F^-1 is convex, the up-rounding branch is the worse one:
+    err <= max_k (x[k+1] - F^-1((k+1/2)/levels)), which exceeds the naive
+    half-gap. Adds 1/2 for the snap to the integer grid.
+    """
+    import numpy as np
+
+    levels = (1 << qbits) - 1
+
+    def inv(y):
+        return (np.power(1.0 + mu, y) - 1.0) / mu * float(vmax)
+
+    x = inv(np.arange(levels + 1, dtype=np.float64) / levels)
+    vb = inv((np.arange(levels, dtype=np.float64) + 0.5) / levels)
+    worst = max(float(np.max(x[1:] - vb)), float(np.max(vb - x[:-1])))
+    return worst + 0.5
+
+
 def mulaw_encode_unsigned(v: jax.Array, qbits: int, vmax: float, mu: float = DEFAULT_MU) -> jax.Array:
     """Quantize unsigned values in [0, vmax] to `qbits`-bit codes."""
     x = v.astype(jnp.float32) / jnp.float32(vmax)

@@ -53,12 +53,21 @@ def _line_fit(xs: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
 
 @register("pla")
 class PLA(Codec):
+    # maskable: decode is a pure per-window function of the symbols (no
+    # carried state), pads sit in a suffix so any window holding real tuples
+    # keeps its parameter slots, and masked raw pads decode to 0 and are
+    # trimmed by the frame's valid count
     meta = CodecMeta("pla", lossy=True, stateful=True, state_kind="model", aligned=True)
 
     def __init__(self, window: int = 16, eps: float = 8.0):
         assert window >= 4
         self.window = window
         self.eps = eps
+
+    def error_bound(self) -> float:
+        # fitted windows are accepted only at max-abs err <= eps; raw windows
+        # are exact; rounding to the integer grid adds at most 1/2
+        return self.eps + 0.5
 
     def encode(self, state: Any, x: jax.Array) -> Tuple[Any, Encoded]:
         lanes, B = x.shape

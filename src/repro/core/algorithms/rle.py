@@ -1,18 +1,31 @@
 """RLE: lossless value-state run-length encoding (paper Table 1, [30]).
 
-Block-local formulation: every micro-batch closes its final run (one extra
-symbol per batch worst-case). This is the standard choice in *parallel* RLE —
-it makes batches self-contained so lanes/devices never serialize on a shared
-run, and it is exactly the paper's lazy/micro-batch execution model. Runs are
-detected and sized with data-parallel scans (cummax over run starts), not the
-CPU's sequential loop.
+Streaming formulation with a carried open run: each lane's state holds the
+value and pending count of the run that was still open when the previous
+micro-batch ended. Runs that span micro-batch boundaries are emitted ONCE,
+with their full (carry-merged) count, and the trailing run of a stream is
+emitted by `flush()` — the pipeline's finalization hook — so nothing is lost
+and long runs are not split at block boundaries (better ratio than the old
+block-local closing, and the reason `Codec.flush` exists).
 
-Symbol: 32-bit value + 16-bit count (aligned, 48 bits). Runs longer than
-65535 are split.
+Symbols are emitted at run-START slots: the slot where a new run begins
+carries the (value, count) of the run that just CLOSED. This keeps the
+encoder shape-stable (at most one symbol per tuple slot, in stream order)
+even though a closing run's tuples may live in earlier blocks. The price is
+decode scope: a block's tuples can be covered by symbols of later blocks, so
+RLE decodes the whole symbol stream at once (meta.scope == 'stream') with a
+single vectorized expansion (cumsum of counts + searchsorted), not
+block-by-block — the EDPC-style decoupled decode dataflow.
+
+Runs are detected and sized with data-parallel scans (cummax over run
+starts), not the CPU's sequential loop. Symbol: 32-bit value + 16-bit count
+(aligned, 48 bits). Runs longer than 65535 split at the cap; a cap split is
+emitted at the slot where the count saturates, which is never also a
+run-start slot, so the two emission kinds cannot collide.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,36 +38,68 @@ CAP = 65535
 
 @register("rle")
 class RLE(Codec):
-    meta = CodecMeta("rle", lossy=False, stateful=True, state_kind="value", aligned=True)
+    meta = CodecMeta(
+        "rle", lossy=False, stateful=True, state_kind="value", aligned=True,
+        scope="stream", maskable=False,
+    )
+
+    def init_state(self, lanes: int):
+        # cnt == 0 <=> no open run (cnt is kept mod CAP: a run that closed
+        # exactly at the cap was fully emitted and carries nothing)
+        return {
+            "val": jnp.zeros((lanes,), U32),
+            "cnt": jnp.zeros((lanes,), jnp.int32),
+        }
 
     def encode(self, state: Any, x: jax.Array) -> Tuple[Any, Encoded]:
         lanes, B = x.shape
         idx = jnp.broadcast_to(jnp.arange(B)[None, :], (lanes, B))
-        new_run = jnp.concatenate(
-            [jnp.ones((lanes, 1), bool), x[:, 1:] != x[:, :-1]], axis=1
-        )
+        prev = jnp.concatenate([state["val"][:, None], x[:, :-1]], axis=1)
+        carried = state["cnt"] > 0
+        cont0 = carried & (x[:, 0] == state["val"])  # head merges the carry
+        new_run = x != prev
+        new_run = new_run.at[:, 0].set(~cont0)
+        # start == -1 marks the carry-merged head run
         start = jax.lax.cummax(jnp.where(new_run, idx, -1), axis=1)
-        run_pos = idx - start  # 0-based position within the run
-        count_so_far = run_pos + 1
-        run_ends = jnp.concatenate(
-            [x[:, 1:] != x[:, :-1], jnp.ones((lanes, 1), bool)], axis=1
-        )
-        cap_split = (count_so_far % CAP) == 0
-        emit = run_ends | cap_split
-        count = jnp.where(cap_split, CAP, ((count_so_far - 1) % CAP) + 1)
-        c0 = x
-        c1 = count.astype(U32)
+        c_in = jnp.where(cont0, state["cnt"], 0)
+        count_so_far = idx - start + jnp.where(start < 0, c_in[:, None], 1)
+        pend = count_so_far % CAP
+        pending_before = jnp.concatenate([state["cnt"][:, None], pend[:, :-1]], axis=1)
+        # run-start slots carry the close of the previous run (suppressed if
+        # a cap split already emitted everything); cap splits emit in place
+        emit_close = new_run & (pending_before > 0)
+        emit_cap = pend == 0
+        value = jnp.where(emit_cap, x, prev)
+        count = jnp.where(emit_cap, CAP, pending_before)
+        emit = emit_cap | emit_close
         blen = jnp.where(emit, 48, 0).astype(jnp.int32)
-        return state, Encoded(jnp.stack([c0, c1], axis=-1), blen)
+        new_state = {"val": x[:, -1], "cnt": pend[:, -1]}
+        return new_state, Encoded(
+            jnp.stack([value, count.astype(U32)], axis=-1), blen
+        )
+
+    def flush(self, state: Any) -> Optional[Encoded]:
+        """Close the trailing open run: one (value, count) slot per lane."""
+        blen = jnp.where(state["cnt"] > 0, 48, 0).astype(jnp.int32)[:, None]
+        codes = jnp.stack(
+            [state["val"][:, None], state["cnt"].astype(U32)[:, None]], axis=-1
+        )
+        return Encoded(codes, blen)
 
     def decode(self, state: Any, enc: Encoded) -> Tuple[Any, jax.Array]:
-        lanes, B = enc.bitlen.shape
+        """Expand the symbol stream; returns one value per symbol SLOT.
+
+        The valid reconstruction is the prefix of length sum(counts) per
+        lane (the caller trims); slots past the covered range repeat the
+        last symbol's value. Stream scope: pass the whole stream's symbols
+        (including `flush`'s) in one call."""
+        lanes, S = enc.bitlen.shape
         counts = jnp.where(enc.bitlen > 0, enc.codes[..., 1].astype(jnp.int32), 0)
-        ends = jnp.cumsum(counts, axis=1)  # (L, B), flat over emitted symbols
+        ends = jnp.cumsum(counts, axis=1)
 
         def expand(ends_l, values_l):
-            j = jnp.searchsorted(ends_l, jnp.arange(B), side="right")
-            return values_l[jnp.clip(j, 0, B - 1)]
+            j = jnp.searchsorted(ends_l, jnp.arange(S), side="right")
+            return values_l[jnp.clip(j, 0, S - 1)]
 
         x = jax.vmap(expand)(ends, enc.codes[..., 0])
         return state, x

@@ -11,6 +11,8 @@ package never requires jax_enable_x64.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -128,6 +130,27 @@ def extract_bits(words: jax.Array, offsets: jax.Array, nbits: jax.Array):
     return jnp.stack([lo, hi], axis=-1)
 
 
+def unpack_symbols(words: jax.Array, bitlen: jax.Array):
+    """Reassemble `(codes, offsets)` from a dense word stream.
+
+    The decode-side mirror of `pack_bits`: an exclusive cumsum of `bitlen`
+    gives every symbol's bit offset, then a vectorized 3-word gather/shift
+    (`extract_bits`) reconstructs each symbol's uint32[2] code. 0-bit
+    (suppressed) slots come back as zero codes — exactly what the shape-
+    stable decoders expect.
+
+    Args:
+      words: uint32[W] — packed bitstream (LSB-first within words).
+      bitlen: int32[N] — per-symbol bit lengths (0 = suppressed).
+
+    Returns:
+      codes: uint32[N, 2]; offsets: int32[N] (each symbol's bit offset).
+    """
+    bitlen = bitlen.astype(jnp.int32)
+    offsets = jnp.cumsum(bitlen) - bitlen  # exclusive scan
+    return extract_bits(words, offsets, bitlen), offsets
+
+
 def zigzag_encode(d: jax.Array) -> jax.Array:
     """Map signed int32 deltas to uint32 so small magnitudes are small."""
     d = d.astype(jnp.int32)
@@ -137,3 +160,230 @@ def zigzag_encode(d: jax.Array) -> jax.Array:
 def zigzag_decode(z: jax.Array) -> jax.Array:
     z = z.astype(U32)
     return ((z >> 1) ^ (-(z & _ONE)).astype(U32)).astype(jnp.int32)
+
+
+# ======================================================================
+# Wire format (DESIGN.md §10)
+#
+# A Frame is the self-describing egress unit: header (codec id, block
+# shape, counts) + per-block bit counts and valid-tuple counts + the
+# per-symbol bitlen stream (7 bits/symbol, bitlens are 0..64) + the
+# word-aligned concatenation of the per-block packed payloads. The bitlen
+# stream is what makes decode embarrassingly parallel (EDPC-style
+# decoupled dataflow): its exclusive cumsum yields every symbol's bit
+# offset without parsing a single prefix, at a metadata cost of
+# 7 bits/tuple that `Frame.wire_bytes` reports honestly.
+#
+# All serialization is host-side numpy on explicit little-endian uint32
+# words; device code only ever sees the unpacked arrays.
+# ======================================================================
+
+FRAME_MAGIC = 0x43535746  # "CSWF"
+FRAME_VERSION = 1
+_HDR_WORDS = 12
+
+
+def _pack_bitlens(bitlen: np.ndarray) -> np.ndarray:
+    """Pack 0..64 bitlens at 7 bits each into uint32 words (host-side)."""
+    bl = np.ascontiguousarray(bitlen, np.int64).ravel()
+    n = bl.size
+    nwords = int((7 * n + 31) // 32)
+    if n == 0:
+        return np.zeros(0, np.uint32)
+    off = np.arange(n, dtype=np.int64) * 7
+    w = off >> 5
+    s = (off & 31).astype(np.uint64)
+    v = (bl.astype(np.uint64) & 0x7F) << s  # up to 38 significant bits
+    acc = np.zeros(nwords + 1, np.uint64)
+    # fields are bit-disjoint, so ADD == OR within each word
+    np.add.at(acc, w, v & 0xFFFFFFFF)
+    np.add.at(acc, w + 1, v >> 32)
+    return (acc[:nwords] & 0xFFFFFFFF).astype(np.uint32)
+
+
+def _unpack_bitlens(words: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of `_pack_bitlens`: n 7-bit fields from uint32 words."""
+    if n == 0:
+        return np.zeros(0, np.int32)
+    w64 = np.concatenate([words.astype(np.uint64), np.zeros(1, np.uint64)])
+    off = np.arange(n, dtype=np.int64) * 7
+    w = off >> 5
+    s = (off & 31).astype(np.uint64)
+    v = (w64[w] >> s) | (w64[w + 1] << (np.uint64(32) - s) & np.uint64(0xFFFFFFFFFFFFFFFF))
+    return (v & 0x7F).astype(np.int32)
+
+
+@dataclasses.dataclass
+class Frame:
+    """One stream's framed bitstream: header + metadata + payload.
+
+    Blocks are, in order: `n_full` full blocks of shape (lanes, per_lane),
+    an optional tail block of shape (lanes, tail_per_lane), and an optional
+    flush mini-block of shape (lanes, flush_slots) holding the codec's
+    trailing state symbols (e.g. RLE's open run). Each block's payload
+    starts word-aligned; `block_bits[b]` is its bit count and
+    `block_valid[b]` how many of its tuples are real (pads are a flat
+    row-major suffix, the flush block carries no tuples at all).
+    """
+
+    codec_id: int
+    lanes: int
+    per_lane: int  # tuples per lane of a full block (0 if no full blocks)
+    n_full: int
+    tail_per_lane: int  # 0 = no tail block
+    flush_slots: int  # per-lane slots of the flush mini-block (0 = none)
+    n_valid: int  # real tuples across the whole frame
+    block_bits: np.ndarray  # uint32[n_blocks]
+    block_valid: np.ndarray  # uint32[n_blocks]
+    bitlen: np.ndarray  # int32[n_symbols], stream order
+    payload: np.ndarray  # uint32[payload_words]
+
+    # ------------------------------------------------------------ shapes --
+    @property
+    def n_blocks(self) -> int:
+        return self.n_full + (1 if self.tail_per_lane else 0) + (1 if self.flush_slots else 0)
+
+    def block_shapes(self):
+        """(lanes, B) of every block, in stream order."""
+        shapes = [(self.lanes, self.per_lane)] * self.n_full
+        if self.tail_per_lane:
+            shapes.append((self.lanes, self.tail_per_lane))
+        if self.flush_slots:
+            shapes.append((self.lanes, self.flush_slots))
+        return shapes
+
+    @property
+    def n_symbols(self) -> int:
+        return self.lanes * (
+            self.n_full * self.per_lane + self.tail_per_lane + self.flush_slots
+        )
+
+    def block_words(self):
+        """Word count of each block's payload segment."""
+        return [(int(b) + 31) // 32 for b in self.block_bits]
+
+    @property
+    def payload_bits(self) -> int:
+        return int(np.asarray(self.block_bits, np.int64).sum())
+
+    @property
+    def wire_bytes(self) -> int:
+        """Total serialized size (header + metadata + payload), computed in
+        O(1) — must equal len(self.to_bytes())."""
+        meta_words = (7 * self.n_symbols + 31) // 32
+        return 4 * (_HDR_WORDS + 2 * self.n_blocks + meta_words + self.payload.size)
+
+    # ----------------------------------------------------------- serialize --
+    def to_bytes(self) -> bytes:
+        nb = self.n_blocks
+        meta = _pack_bitlens(self.bitlen)
+        header = np.array(
+            [
+                FRAME_MAGIC,
+                FRAME_VERSION,
+                self.codec_id,
+                self.lanes,
+                self.per_lane,
+                self.n_full,
+                self.tail_per_lane,
+                self.flush_slots,
+                self.n_valid,
+                nb,
+                meta.size,
+                self.payload.size,
+            ],
+            np.uint32,
+        )
+        parts = [
+            header,
+            np.ascontiguousarray(self.block_bits, np.uint32),
+            np.ascontiguousarray(self.block_valid, np.uint32),
+            meta,
+            np.ascontiguousarray(self.payload, np.uint32),
+        ]
+        return b"".join(p.astype("<u4").tobytes() for p in parts)
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "Frame":
+        head = np.frombuffer(buf[: 4 * _HDR_WORDS], dtype="<u4")
+        if head.size < _HDR_WORDS or int(head[0]) != FRAME_MAGIC:
+            raise ValueError("not a CStream frame (bad magic)")
+        if int(head[1]) != FRAME_VERSION:
+            raise ValueError(f"unsupported frame version {int(head[1])}")
+        nb, meta_words, payload_words = int(head[9]), int(head[10]), int(head[11])
+        body = np.frombuffer(buf[4 * _HDR_WORDS :], dtype="<u4")
+        if body.size != 2 * nb + meta_words + payload_words:
+            raise ValueError("frame length mismatch")
+        block_bits = body[:nb].astype(np.uint32)
+        block_valid = body[nb : 2 * nb].astype(np.uint32)
+        meta = body[2 * nb : 2 * nb + meta_words].astype(np.uint32)
+        payload = body[2 * nb + meta_words :].astype(np.uint32)
+        frame = cls(
+            codec_id=int(head[2]),
+            lanes=int(head[3]),
+            per_lane=int(head[4]),
+            n_full=int(head[5]),
+            tail_per_lane=int(head[6]),
+            flush_slots=int(head[7]),
+            n_valid=int(head[8]),
+            block_bits=block_bits,
+            block_valid=block_valid,
+            bitlen=np.zeros(0, np.int32),
+            payload=payload,
+        )
+        # header self-consistency: every derived size must match the declared
+        # section lengths, so a tampered/corrupt header is rejected here (the
+        # parser's ValueError contract) instead of escaping as an IndexError
+        if frame.n_blocks != nb:
+            raise ValueError(
+                f"frame header inconsistent: {nb} blocks declared, shape "
+                f"fields imply {frame.n_blocks}"
+            )
+        if (7 * frame.n_symbols + 31) // 32 != meta_words:
+            raise ValueError("frame header inconsistent: bitlen metadata size")
+        if sum(frame.block_words()) != payload_words:
+            raise ValueError("frame header inconsistent: payload size")
+        frame.bitlen = _unpack_bitlens(meta, frame.n_symbols)
+        return frame
+
+
+def build_frame(
+    codec_id: int,
+    lanes: int,
+    per_lane: int,
+    n_full: int,
+    tail_per_lane: int,
+    flush_slots: int,
+    n_valid: int,
+    blocks,
+) -> Frame:
+    """Assemble a Frame from per-block `(words, nbits, bitlen)` triples.
+
+    `words` may be the executor's fixed worst-case buffer; only the used
+    prefix (ceil(nbits/32) words) enters the payload, so the wire carries
+    no worst-case padding."""
+    block_bits, block_valid, bitlens, segments = [], [], [], []
+    for words, nbits, bitlen, valid in blocks:
+        nbits = int(nbits)
+        used = (nbits + 31) // 32
+        segments.append(np.ascontiguousarray(words[:used], np.uint32))
+        block_bits.append(nbits)
+        block_valid.append(int(valid))
+        bitlens.append(np.ascontiguousarray(bitlen, np.int32).ravel())
+    return Frame(
+        codec_id=codec_id,
+        lanes=lanes,
+        per_lane=per_lane,
+        n_full=n_full,
+        tail_per_lane=tail_per_lane,
+        flush_slots=flush_slots,
+        n_valid=n_valid,
+        block_bits=np.asarray(block_bits, np.uint32),
+        block_valid=np.asarray(block_valid, np.uint32),
+        bitlen=(
+            np.concatenate(bitlens) if bitlens else np.zeros(0, np.int32)
+        ),
+        payload=(
+            np.concatenate(segments) if segments else np.zeros(0, np.uint32)
+        ),
+    )

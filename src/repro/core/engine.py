@@ -35,6 +35,7 @@ from repro.core import bits, metrics
 from repro.core.algorithms import make_codec
 from repro.core.pipeline import (
     CompressionPipeline,
+    DecompressionPipeline,
     lww_select,
     merge_shared_dictionary,
 )
@@ -63,6 +64,18 @@ class CompressResult:
     busy_s: List[float]
     blocked_s: float  # dispatch/sync overhead (paper Fig 10b 'blocked time')
     running_s: float  # pure compression time
+    frame: Optional[bits.Frame] = None  # wire-format payload (emit_frame=True)
+
+
+@dataclasses.dataclass
+class RoundtripResult:
+    """compress -> framed bitstream -> decompress, with the fidelity check."""
+
+    compress: CompressResult
+    values: np.ndarray  # reconstructed stream (uint32[n_tuples])
+    fidelity: metrics.Fidelity
+    decode_wall_s: float
+    wire_bytes: int  # serialized frame size (header + metadata + payload)
 
 
 def queueing_delay_s(proc_s: float, batch_fill_s: float, max_factor: float = 20.0) -> float:
@@ -84,6 +97,14 @@ class CStreamEngine:
         self.pipeline = CompressionPipeline(config, sample=sample)
         self.codec = self.pipeline.codec
         self._step = self.pipeline._step
+        self._decompressor: Optional[DecompressionPipeline] = None
+
+    @property
+    def decompressor(self) -> DecompressionPipeline:
+        """Lazily built egress executor sharing this engine's codec."""
+        if self._decompressor is None:
+            self._decompressor = DecompressionPipeline(self.config, codec=self.codec)
+        return self._decompressor
 
     # ------------------------------------------------------------- shaping
     def _block_tuples(self) -> int:
@@ -101,12 +122,17 @@ class CStreamEngine:
         arrival_rate_tps: Optional[float] = None,
         max_blocks: Optional[int] = None,
         breakdown: bool = False,
+        emit_frame: bool = False,
     ) -> CompressResult:
+        """Compress a stream; with `emit_frame=True` the result additionally
+        carries the self-describing wire-format `bits.Frame` (the payload a
+        consumer decodes with `decompress`). Framing copies the packed words
+        to the host after timing, so the measured wall stays hot-path."""
         cfg = self.config
         pipe = self.pipeline
         shaped = pipe.shape_blocks(np.asarray(values, np.uint32), max_blocks=max_blocks)
 
-        res = pipe.execute(shaped)
+        res = pipe.execute(shaped, collect_payload=emit_frame)
         wall = res.wall_s
         per_block_bits = res.per_block_bits
         total_bits = float(per_block_bits.sum())
@@ -167,13 +193,49 @@ class CStreamEngine:
             busy_s=busy,
             blocked_s=max(wall - running, 0.0),
             running_s=running,
+            frame=pipe.frame_from(shaped, res) if emit_frame else None,
+        )
+
+    # --------------------------------------------------------------- egress
+    def decompress(self, frame: bits.Frame) -> np.ndarray:
+        """Reconstruct a framed bitstream (fused chunked-scan decode)."""
+        return self.decompressor.decompress(frame).values
+
+    def roundtrip(
+        self,
+        values: np.ndarray,
+        arrival_rate_tps: Optional[float] = None,
+        max_blocks: Optional[int] = None,
+    ) -> RoundtripResult:
+        """Compress to the wire frame, decode it back, check fidelity.
+
+        The fidelity contract (EdgeCodec-style): lossless codecs must be
+        bit-exact; lossy codecs must sit inside their configured max-abs
+        bound when one exists (`Codec.error_bound`), and report measured
+        max-abs / RMSE / NRMSE either way."""
+        values = np.asarray(values, np.uint32).ravel()
+        res = self.compress(
+            values,
+            arrival_rate_tps=arrival_rate_tps,
+            max_blocks=max_blocks,
+            emit_frame=True,
+        )
+        dec = self.decompressor.decompress(res.frame)
+        fid = metrics.fidelity(
+            values[: dec.n_tuples], dec.values, bound=self.codec.error_bound()
+        )
+        return RoundtripResult(
+            compress=res,
+            values=dec.values,
+            fidelity=fid,
+            decode_wall_s=dec.wall_s,
+            wire_bytes=res.frame.wire_bytes,
         )
 
     # -------------------------------------------------- lossy fidelity check
     def roundtrip_nrmse(self, values: np.ndarray) -> float:
-        values = np.asarray(values, np.uint32)
-        xhat = self.pipeline.roundtrip_values(values)
-        return metrics.nrmse(values[: len(xhat)], xhat)
+        """NRMSE through the framed wire roundtrip (0.0 when bit-exact)."""
+        return self.roundtrip(values).fidelity.nrmse
 
 
 # ----------------------------------------------------------- sharded engine --

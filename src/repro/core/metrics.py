@@ -25,6 +25,56 @@ def nrmse(x: jax.Array, xhat: jax.Array) -> float:
 
 
 @dataclasses.dataclass
+class Fidelity:
+    """Reconstruction-fidelity contract check for one roundtrip.
+
+    The egress path's measurement of the paper's 'marginal information
+    loss' claim: lossless codecs must come back bit-exact; lossy codecs are
+    judged against their configured max-abs error bound when the quantizer
+    has one (PLA eps, NUQ level spacing) and reported as measured
+    max-abs/RMSE/NRMSE regardless."""
+
+    n_tuples: int
+    bit_exact: bool
+    max_abs: float
+    rmse: float
+    nrmse: float
+    bound: Optional[float]  # codec's configured max-abs bound (None = no hard bound)
+
+    @property
+    def within_bound(self) -> bool:
+        """Bit-exact, or inside the codec's hard bound when one exists."""
+        if self.bit_exact:
+            return True
+        if self.bound is None:
+            return True  # no hard bound to violate; consult rmse/nrmse
+        return self.max_abs <= self.bound + 1e-9
+
+    def row(self) -> str:
+        kind = "bit-exact" if self.bit_exact else f"max_abs={self.max_abs:.3g}"
+        b = "-" if self.bound is None else f"{self.bound:.3g}"
+        return f"{kind},rmse={self.rmse:.4g},nrmse={self.nrmse:.4g},bound={b}"
+
+
+def fidelity(x, xhat, bound: Optional[float] = None) -> Fidelity:
+    """Compare a reconstruction against its source (both uint32 streams)."""
+    xf = np.asarray(x, dtype=np.float64).ravel()
+    yf = np.asarray(xhat, dtype=np.float64).ravel()
+    if xf.size != yf.size:
+        raise ValueError(f"length mismatch: {xf.size} vs {yf.size}")
+    err = np.abs(xf - yf)
+    denom = max(abs(xf.mean()), 1e-12) if xf.size else 1.0
+    return Fidelity(
+        n_tuples=int(xf.size),
+        bit_exact=bool((err == 0).all()) if xf.size else True,
+        max_abs=float(err.max()) if xf.size else 0.0,
+        rmse=float(np.sqrt(np.mean(err**2))) if xf.size else 0.0,
+        nrmse=float(np.sqrt(np.mean(err**2)) / denom) if xf.size else 0.0,
+        bound=bound,
+    )
+
+
+@dataclasses.dataclass
 class RunStats:
     """One compression run's measurements."""
 

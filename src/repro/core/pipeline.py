@@ -1,38 +1,57 @@
-"""Executor layer — CompressionPipeline (DESIGN.md §2, paper §3.3).
+"""Executor layer — blocked executors for BOTH directions (DESIGN.md §2, §10).
 
-Owns codec state, block shaping and the execution paths:
+`BlockedExecutor` owns what compression and decompression share: the codec,
+the resolved execution plan, block shaping, and the chunked-`lax.scan`
+machinery (one dispatch per `plan.scan_chunk` blocks, codec state carried
+across chunks). On top of it:
 
-  * **fused** (default for lazy execution): blocks are grouped into chunks of
-    `plan.scan_chunk` and each chunk runs as ONE `lax.scan` dispatch — the
-    per-block Python dispatch loop that the paper's Fig 10b charges as
-    "blocked time" disappears from the hot path. Codec state is carried
-    across chunks, so the bitstream is identical to the per-block loop.
-  * **dispatch** (the `eager` strategy, and the explicit baseline for
-    benchmarks): one jitted step per block, paying dispatch/sync per block.
+  * `CompressionPipeline` — encode + bit-pack. Execution paths:
+      - **fused** (default for lazy execution): chunks of blocks run as ONE
+        `lax.scan` dispatch — the per-block Python dispatch loop the paper's
+        Fig 10b charges as "blocked time" disappears from the hot path.
+      - **dispatch** (the `eager` strategy / benchmark baseline): one jitted
+        step per block.
+    Stream finalization calls `Codec.flush` and packs the trailing state
+    symbols (e.g. RLE's open run) as a flush mini-block, and
+    `collect_payload=True` keeps each block's packed words + per-symbol
+    bitlens so `frame_from` can assemble the wire-format `bits.Frame`.
+  * `DecompressionPipeline` — the egress path: splits a frame back into
+    blocks and replays codec state through the SAME fused chunked scan,
+    unpacking symbols with `bits.unpack_symbols` (exclusive-cumsum offsets +
+    vectorized gather/shift) and decoding in the scan body. Stream-scope
+    codecs (RLE) unpack through the scan, then decode the whole symbol
+    stream in one vectorized expansion — EDPC's decoupled decode dataflow.
 
-Streams whose length is not a multiple of the block size no longer raise:
-the tail is edge-padded up to one (possibly smaller) aligned block and its
-pad slots are masked out of the emitted bitstream, so short/bursty sessions
-compress instead of crashing while ratio/throughput account only real
-tuples.
+Streams whose length is not a multiple of the block size do not raise: the
+tail is edge-padded up to one (possibly smaller) aligned block. Pad symbols
+are dropped from the bitstream only for `meta.maskable` codecs — codecs
+whose decoder replays state from the symbols themselves (ADPCM, Delta,
+Tdic32, RLE) must ship their pad symbols or encoder and decoder state fork;
+the frame's per-block valid counts trim the pads after decode either way.
 
 The shared-dictionary last-writer-wins merge lives here as `lww_select` /
-`merge_shared_dictionary` and is reused by both the local engine and the
-`sharded_compress_fn` collective path (engine.py) — one semantics, two
-transports.
+`merge_shared_dictionary` and is reused by the local engine, the
+`sharded_compress_fn` collective path (engine.py), and the decode-side
+state replay — one semantics, three call sites.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bits
-from repro.core.algorithms import Codec, make_codec
+from repro.core.algorithms import (
+    Codec,
+    Encoded,
+    WIRE_CODEC_IDS,
+    WIRE_CODEC_NAMES,
+    make_codec,
+)
 from repro.core.calibration import calibrated_kwargs
 from repro.core.strategies import (
     EngineConfig,
@@ -102,62 +121,70 @@ class ShapedStream:
 
 
 @dataclasses.dataclass
+class BlockPayload:
+    """One block's wire contribution: packed words + per-symbol bitlens."""
+
+    words: np.ndarray  # uint32[<=out_words] (worst-case buffer; prefix used)
+    nbits: int
+    bitlen: np.ndarray  # int32[lanes * B]
+    valid: int  # real tuples in this block (0 for the flush mini-block)
+
+
+@dataclasses.dataclass
 class ExecutionResult:
     """What one execution pass produced: bits per block + measured wall."""
 
-    per_block_bits: np.ndarray  # float[n_blocks] (tail included, pad masked)
+    per_block_bits: np.ndarray  # float[n_blocks (+1 flush)] (pad masked)
     wall_s: float
     n_tuples: int  # real tuples compressed
     state: Any  # final codec state (for session reuse)
+    payload: Optional[List[BlockPayload]] = None  # collect_payload=True only
+    flush_slots: int = 0  # per-lane slots of the flush mini-block
 
 
-class CompressionPipeline:
-    """Executor: codec + block shaping + fused/dispatch execution paths."""
+@dataclasses.dataclass
+class DecompressionResult:
+    """One frame's reconstruction + measured decode wall time."""
 
-    def __init__(self, config: EngineConfig, sample: Optional[np.ndarray] = None):
+    values: np.ndarray  # uint32[n_valid]
+    wall_s: float
+    n_tuples: int
+
+
+# --------------------------------------------------------- blocked executor --
+class BlockedExecutor:
+    """Codec + plan + block shaping + chunked-scan machinery (both ways).
+
+    Subclasses provide `_scan_body(state, xs) -> (state, ys)`; the base
+    caches one jitted `lax.scan` per chunk length so repeated executions
+    (sessions, best-of-N benchmarks) never re-trace."""
+
+    def __init__(
+        self,
+        config: EngineConfig,
+        sample: Optional[np.ndarray] = None,
+        codec: Optional[Codec] = None,
+    ):
         self.config = config
-        kwargs = dict(config.codec_kwargs)
-        if config.calibrate and sample is not None:
-            auto = calibrated_kwargs(config.codec, sample)
-            for k, v in auto.items():
-                kwargs.setdefault(k, v)
-        self.codec: Codec = make_codec(config.codec, **kwargs)
+        if codec is None:
+            kwargs = dict(config.codec_kwargs)
+            if config.calibrate and sample is not None:
+                auto = calibrated_kwargs(config.codec, sample)
+                for k, v in auto.items():
+                    kwargs.setdefault(k, v)
+            codec = make_codec(config.codec, **kwargs)
+        self.codec: Codec = codec
         # PLA fits superwindows of 2W tuples; everything else packs any shape
         align = 2 * self.codec.window if self.codec.name == "pla" else 1
         self.plan: ExecutionPlan = plan_execution(config, codec_align=align)
         self._align = align
-        self._step = jax.jit(self.step)
-        self._masked_step = jax.jit(self.masked_step)
         self._scan_fns: Dict[int, Any] = {}  # chunk length -> jitted scan
-        self._warmed: set = set()  # (shapes, chunk, fused) already compiled
+        self._warmed: set = set()  # (shapes, chunk, ...) already compiled
 
-    # -------------------------------------------------------------- core step
-    def step(self, state: Any, block: jax.Array):
-        """Encode one micro-batch block (lanes, B) and pack its bitstream."""
-        return self.masked_step(state, block, None)
-
-    def masked_step(self, state: Any, block: jax.Array, mask: Optional[jax.Array]):
-        """`step` with pad slots (mask == False) dropped from the bitstream."""
-        state, enc = self.codec.encode(state, block)
-        if (
-            self.config.state == StateStrategy.SHARED
-            and self.codec.meta.state_kind == "dictionary"
-        ):
-            state = merge_shared_dictionary(state)
-        lanes, B = block.shape
-        bitlen = enc.bitlen
-        if mask is not None:
-            bitlen = jnp.where(mask, bitlen, 0)
-        flat_codes = enc.codes.reshape(lanes * B, 2)
-        flat_blen = bitlen.reshape(lanes * B)
-        out_words = lanes * B * 2 + 2
-        words, total_bits, _ = bits.pack_bits(flat_codes, flat_blen, out_words)
-        return state, words, total_bits
-
+    # ------------------------------------------------------------- plumbing
     def init_state(self, lanes: Optional[int] = None) -> Any:
         return self.codec.init_state(self.config.lanes if lanes is None else lanes)
 
-    # --------------------------------------------------------------- shaping
     @property
     def block_tuples(self) -> int:
         return self.plan.block_tuples
@@ -167,13 +194,23 @@ class CompressionPipeline:
         """Per-lane tuple alignment the codec requires (PLA superwindows)."""
         return self._align
 
+    def _merge_if_shared(self, state: Any) -> Any:
+        if (
+            self.config.state == StateStrategy.SHARED
+            and self.codec.meta.state_kind == "dictionary"
+        ):
+            return merge_shared_dictionary(state)
+        return state
+
+    # --------------------------------------------------------------- shaping
     def shape_blocks(self, values: np.ndarray, max_blocks: Optional[int] = None) -> ShapedStream:
         """Cut a flat uint32 stream into (lanes, B) blocks.
 
         The tail that does not fill a whole block becomes a smaller aligned
         block, edge-padded (repeat of the last value) with a mask marking the
-        real tuples — pad symbols are masked out of the bitstream, so the
-        accounting stays exact for short and bursty streams."""
+        real tuples — pad symbols are dropped from the bitstream for
+        maskable codecs and trimmed by the frame's valid counts otherwise,
+        so the accounting stays exact for short and bursty streams."""
         values = np.ascontiguousarray(values, np.uint32).ravel()
         bt = self.block_tuples
         lanes = self.config.lanes
@@ -198,47 +235,139 @@ class CompressionPipeline:
         tail_mask = mask.reshape(lanes, padded // lanes)
         return ShapedStream(blocks, tail, tail_mask, n_full * bt + rem)
 
-    # -------------------------------------------------------- execution paths
-    def _scan_fn(self, chunk_len: int):
+    # ------------------------------------------------------- scan machinery
+    def _scan_body(self, state: Any, xs: Any):
+        raise NotImplementedError
+
+    def _scan_fn(self, chunk_len: int, key: str = "", body: Any = None):
         """Jitted scan over `chunk_len` blocks: ONE dispatch, state carried.
 
-        The packed words are scanned out (not dropped) so XLA cannot
-        dead-code-eliminate the bit-packing work — fused and dispatch paths
-        do the same compute, the fused path just dispatches it once."""
-        fn = self._scan_fns.get(chunk_len)
+        Outputs are scanned out (not dropped) so XLA cannot dead-code-
+        eliminate the work — fused and dispatch paths do the same compute,
+        the fused path just dispatches it once. `key`/`body` let a subclass
+        cache variants with different scan outputs (e.g. with/without the
+        per-symbol bitlens only framing needs)."""
+        cache_key = (chunk_len, key)
+        fn = self._scan_fns.get(cache_key)
         if fn is None:
+            scan_body = body if body is not None else self._scan_body
 
-            def scan_chunk(state, blks):
-                def body(s, blk):
-                    s, words, tb = self.step(s, blk)
-                    return s, (tb, words)
-                state, (tbs, words) = jax.lax.scan(body, state, blks)
-                return state, tbs, words
+            def scan_chunk(state, xs):
+                return jax.lax.scan(scan_body, state, xs)
 
             fn = jax.jit(scan_chunk)
-            self._scan_fns[chunk_len] = fn
+            self._scan_fns[cache_key] = fn
         return fn
 
     def _chunks(self, n_blocks: int, chunk: Optional[int] = None):
         c = chunk or max(self.plan.scan_chunk, 1)
-        out = [(i, min(c, n_blocks - i)) for i in range(0, n_blocks, c)]
-        return out
+        return [(i, min(c, n_blocks - i)) for i in range(0, n_blocks, c)]
 
-    def run_fused(self, blocks_dev: jax.Array, state: Any, chunk: Optional[int] = None):
-        """Chunked-scan execution: returns (state, per-block bits list)."""
-        bits_out = []
+
+# ------------------------------------------------------ compression pipeline --
+class CompressionPipeline(BlockedExecutor):
+    """Ingress executor: encode + bit-pack + fused/dispatch execution paths."""
+
+    def __init__(self, config: EngineConfig, sample: Optional[np.ndarray] = None):
+        super().__init__(config, sample=sample)
+        self._step = jax.jit(self.step)
+        self._masked_step = jax.jit(self.masked_step)
+        self._flush_fn = None
+        # probe once: does this codec emit trailing state symbols?
+        probe = self.codec.flush(self.init_state())
+        self._has_flush = probe is not None
+        self._flush_slots = 0 if probe is None else int(probe.bitlen.shape[1])
+
+    # -------------------------------------------------------------- core step
+    def step(self, state: Any, block: jax.Array):
+        """Encode one micro-batch block (lanes, B) and pack its bitstream."""
+        return self.masked_step(state, block, None)
+
+    def masked_step(self, state: Any, block: jax.Array, mask: Optional[jax.Array]):
+        """`step` with pad slots (mask == False) dropped from the bitstream
+        when the codec allows it (`meta.maskable`); non-maskable codecs ship
+        their pad symbols so the decoder's state replay stays exact."""
+        state, enc = self.codec.encode(state, block)
+        state = self._merge_if_shared(state)
+        lanes, B = block.shape
+        bitlen = enc.bitlen
+        if mask is not None and self.codec.meta.maskable:
+            bitlen = jnp.where(mask, bitlen, 0)
+        flat_codes = enc.codes.reshape(lanes * B, 2)
+        flat_blen = bitlen.reshape(lanes * B)
+        out_words = lanes * B * 2 + 2
+        words, total_bits, _ = bits.pack_bits(flat_codes, flat_blen, out_words)
+        return state, words, total_bits, flat_blen
+
+    def _scan_body(self, state: Any, blk: jax.Array):
+        """Hot-path scan body: bits + words only (PR-1 parity); the
+        per-symbol bitlens are scanned out only when a frame is being
+        collected (`_scan_body_payload`) — no extra output traffic on the
+        timed benchmark paths."""
+        state, words, tb, _ = self.step(state, blk)
+        return state, (tb, words)
+
+    def _scan_body_payload(self, state: Any, blk: jax.Array):
+        state, words, tb, blen = self.step(state, blk)
+        return state, (tb, words, blen)
+
+    # ------------------------------------------------------------- finalize
+    def _pack_flush(self, state: Any):
+        """Pack the codec's trailing state symbols (`Codec.flush`)."""
+        if self._flush_fn is None:
+
+            def pack(state):
+                enc = self.codec.flush(state)
+                lanes, fs = enc.bitlen.shape
+                words, tb, _ = bits.pack_bits(
+                    enc.codes.reshape(lanes * fs, 2),
+                    enc.bitlen.reshape(lanes * fs),
+                    lanes * fs * 2 + 2,
+                )
+                return words, tb, enc.bitlen
+
+            self._flush_fn = jax.jit(pack)
+        return self._flush_fn(state)
+
+    @property
+    def flush_slots(self) -> int:
+        """Per-lane symbol slots the flush mini-block occupies (0 = none)."""
+        return self._flush_slots
+
+    # -------------------------------------------------------- execution paths
+    def run_fused(
+        self,
+        blocks_dev: jax.Array,
+        state: Any,
+        chunk: Optional[int] = None,
+        collect: bool = False,
+    ):
+        """Chunked-scan execution: (state, per-block bits, words, bitlens).
+
+        `collect=True` scans the per-symbol bitlens out too (framing);
+        otherwise the scan carries only bits + words, like the pre-egress
+        hot path."""
+        bits_out, words_out, blen_out = [], [], []
+        body = self._scan_body_payload if collect else self._scan_body
+        key = "payload" if collect else ""
         for start, length in self._chunks(blocks_dev.shape[0], chunk):
-            state, tbs, _ = self._scan_fn(length)(state, blocks_dev[start : start + length])
-            bits_out.append(tbs)
-        return state, bits_out
+            state, ys = self._scan_fn(length, key=key, body=body)(
+                state, blocks_dev[start : start + length]
+            )
+            bits_out.append(ys[0])
+            words_out.append(ys[1])
+            blen_out.append(ys[2] if collect else None)
+        return state, bits_out, words_out, blen_out
 
     def run_dispatch(self, blocks_dev: jax.Array, state: Any):
         """Per-block dispatch loop (eager strategy / Fig 10b baseline)."""
-        bits_out = []
+        bits_out, words_out, blen_out = [], [], []
         for i in range(blocks_dev.shape[0]):
-            state, _, tb = self._step(state, blocks_dev[i])
+            state, words, tb, blen = self._step(state, blocks_dev[i])
             bits_out.append(tb)
-        return state, bits_out
+            words_out.append(words)
+            blen_out.append(blen)
+        return state, bits_out, words_out, blen_out
 
     def warmup(
         self,
@@ -247,6 +376,7 @@ class CompressionPipeline:
         tail_mask=None,
         fused: bool = True,
         chunk: Optional[int] = None,
+        collect: bool = False,
     ) -> None:
         """Compile every kernel an `execute` call will hit (untimed).
 
@@ -258,20 +388,25 @@ class CompressionPipeline:
             None if tail is None else tuple(tail.shape),
             chunk,
             fused,
+            collect,
         )
         if key in self._warmed:
             return
         state = self.init_state()
         if blocks_dev is not None and blocks_dev.shape[0] > 0:
             if fused:
+                body = self._scan_body_payload if collect else self._scan_body
+                skey = "payload" if collect else ""
                 for length in sorted({ln for _, ln in self._chunks(blocks_dev.shape[0], chunk)}):
                     jax.block_until_ready(
-                        self._scan_fn(length)(state, blocks_dev[:length])
+                        self._scan_fn(length, key=skey, body=body)(state, blocks_dev[:length])
                     )
             else:
                 jax.block_until_ready(self._step(state, blocks_dev[0]))
         if tail is not None:
             jax.block_until_ready(self._masked_step(state, tail, tail_mask))
+        if self._has_flush:
+            jax.block_until_ready(self._pack_flush(state))
         self._warmed.add(key)
 
     def execute(
@@ -281,14 +416,19 @@ class CompressionPipeline:
         fused: Optional[bool] = None,
         warmup: bool = True,
         chunk: Optional[int] = None,
+        finalize: bool = True,
+        collect_payload: bool = False,
     ) -> ExecutionResult:
         """Run one shaped stream through the codec; measure wall time.
 
         `fused=None` follows the plan (lazy -> fused scan, eager ->
         dispatch loop); pass an explicit bool to force a path (benchmarks
         compare both on identical blocks). `chunk` overrides the plan's scan
-        fusion length (e.g. the Fig 10b breakdown fuses an eager-shaped
-        stream to measure its pure 'running' time)."""
+        fusion length. `finalize=True` closes the stream: `Codec.flush`'s
+        trailing symbols (RLE's open run) are packed as a flush mini-block
+        and counted. `collect_payload=True` additionally keeps every
+        block's packed words + bitlens (host copies made after timing) so
+        `frame_from` can build the wire frame."""
         if fused is True and chunk is None and self.plan.scan_chunk <= 1:
             # explicit fuse request against a per-block-dispatch plan (the
             # Fig 10b 'running' replay): the plan's chunk of 1 would just
@@ -300,48 +440,324 @@ class CompressionPipeline:
         tail_dev = jnp.asarray(shaped.tail) if shaped.tail is not None else None
         mask_dev = jnp.asarray(shaped.tail_mask) if shaped.tail is not None else None
         if warmup:
-            self.warmup(blocks_dev, tail_dev, mask_dev, fused=fused, chunk=chunk)
+            self.warmup(
+                blocks_dev, tail_dev, mask_dev, fused=fused, chunk=chunk,
+                collect=collect_payload,
+            )
 
         if state is None:
             state = self.init_state()
-        bits_acc = []
+        bits_acc: List[Any] = []
+        words_acc: List[Any] = []
+        blen_acc: List[Any] = []
+        flush_out = None
         t0 = time.perf_counter()
         if blocks_dev is not None:
             if fused:
-                state, bits_acc = self.run_fused(blocks_dev, state, chunk)
+                state, bits_acc, words_acc, blen_acc = self.run_fused(
+                    blocks_dev, state, chunk, collect=collect_payload
+                )
             else:
-                state, bits_acc = self.run_dispatch(blocks_dev, state)
+                state, bits_acc, words_acc, blen_acc = self.run_dispatch(blocks_dev, state)
         if tail_dev is not None:
-            state, _, tb = self._masked_step(state, tail_dev, mask_dev)
+            state, twords, tb, tblen = self._masked_step(state, tail_dev, mask_dev)
             bits_acc.append(tb)
+            words_acc.append(twords)
+            blen_acc.append(tblen)
+        if finalize and self._has_flush:
+            flush_out = self._pack_flush(state)
+            bits_acc.append(flush_out[1])
         jax.block_until_ready(bits_acc)
         wall = time.perf_counter() - t0
 
         per_block = np.concatenate([np.atleast_1d(np.asarray(b, np.float64)) for b in bits_acc])
+        payload = None
+        flush_slots = self.flush_slots if (finalize and self._has_flush) else 0
+        if collect_payload:
+            payload = self._collect_payload(shaped, words_acc, blen_acc, per_block, flush_out)
         return ExecutionResult(
             per_block_bits=per_block,
             wall_s=wall,
             n_tuples=shaped.n_valid,
             state=state,
+            payload=payload,
+            flush_slots=flush_slots,
         )
 
-    # ------------------------------------------------------------- roundtrip
-    def roundtrip_values(self, values: np.ndarray) -> np.ndarray:
-        """Encode+decode the stream, returning the reconstructed values
-        (valid prefix only — pad slots dropped)."""
-        shaped = self.shape_blocks(values)
-        lanes = self.config.lanes
-        st_e = self.init_state()
-        st_d = self.init_state()
-        outs = []
-        for i in range(len(shaped.blocks)):
-            blk = jnp.asarray(shaped.blocks[i])
-            st_e, enc = self.codec.encode(st_e, blk)
-            st_d, xhat = self.codec.decode(st_d, enc)
-            outs.append(np.asarray(xhat).ravel())
+    # ------------------------------------------------------------- framing
+    def _collect_payload(
+        self, shaped: ShapedStream, words_acc, blen_acc, per_block: np.ndarray, flush_out
+    ) -> List[BlockPayload]:
+        """Host copies of every block's wire contribution (post-timing)."""
+        n_full = len(shaped.blocks)
+        bt = self.block_tuples
+        rem = shaped.n_valid - n_full * bt
+        # flatten fused chunk outputs into per-block rows
+        words_np: List[np.ndarray] = []
+        blen_np: List[np.ndarray] = []
+        for w, b in zip(words_acc, blen_acc):
+            w = np.asarray(w)
+            b = np.asarray(b, np.int32)
+            if w.ndim == 2:  # one fused chunk: (chunk, OW) / (chunk, L*B)
+                words_np.extend(w)
+                blen_np.extend(b)
+            else:
+                words_np.append(w)
+                blen_np.append(b)
+        payload = []
+        for i in range(n_full):
+            payload.append(
+                BlockPayload(words_np[i], int(per_block[i]), blen_np[i], bt)
+            )
+        k = n_full
         if shaped.tail is not None:
-            st_e, enc = self.codec.encode(st_e, jnp.asarray(shaped.tail))
-            st_d, xhat = self.codec.decode(st_d, enc)
-            outs.append(np.asarray(xhat).ravel())
-        flat = np.concatenate(outs) if outs else np.zeros(0, np.uint32)
-        return flat[: shaped.n_valid]
+            payload.append(
+                BlockPayload(words_np[k], int(per_block[k]), blen_np[k], rem)
+            )
+            k += 1
+        if flush_out is not None:
+            payload.append(BlockPayload(*self._flush_entry(flush_out)))
+        return payload
+
+    @staticmethod
+    def _flush_entry(flush_out) -> tuple:
+        """Canonical flush-mini-block entry (words, nbits, bitlen, valid=0).
+
+        The ONE place the flush block's frame layout is defined — reused by
+        `_collect_payload` (engine path) and `flush_block_entry` (session
+        egress), so the two paths cannot desynchronize."""
+        fw, fb, fblen = flush_out
+        return (np.asarray(fw), int(fb), np.asarray(fblen, np.int32).ravel(), 0)
+
+    def flush_block_entry(self, state: Any):
+        """Pack `Codec.flush`'s trailing symbols for a frame; None if the
+        codec has no trailing state. Does not mutate `state`."""
+        if not self._has_flush:
+            return None
+        return self._flush_entry(self._pack_flush(state))
+
+    def marshal_frame(
+        self,
+        blocks,
+        per_lane: int,
+        n_full: int,
+        tail_per_lane: int,
+        flush_slots: int,
+        n_valid: int,
+    ) -> bits.Frame:
+        """Single authority for frame marshalling: codec id and lane count
+        come from this pipeline's config, callers only supply the block
+        geometry and the (words, nbits, bitlen, valid) entries."""
+        return bits.build_frame(
+            codec_id=WIRE_CODEC_IDS[self.codec.name],
+            lanes=self.config.lanes,
+            per_lane=per_lane,
+            n_full=n_full,
+            tail_per_lane=tail_per_lane,
+            flush_slots=flush_slots,
+            n_valid=n_valid,
+            blocks=blocks,
+        )
+
+    def frame_from(self, shaped: ShapedStream, result: ExecutionResult) -> bits.Frame:
+        """Assemble the wire-format frame from a `collect_payload` run."""
+        if result.payload is None:
+            raise ValueError("execute(collect_payload=True) required for framing")
+        return self.marshal_frame(
+            blocks=[(p.words, p.nbits, p.bitlen, p.valid) for p in result.payload],
+            per_lane=self.block_tuples // self.config.lanes,
+            n_full=len(shaped.blocks),
+            tail_per_lane=0 if shaped.tail is None else shaped.tail.shape[1],
+            flush_slots=result.flush_slots,
+            n_valid=shaped.n_valid,
+        )
+
+    def compress_to_frame(self, values: np.ndarray, state: Any = None) -> bits.Frame:
+        """One-call egress: shape, execute (fused per plan), finalize, frame.
+
+        For the full encode -> frame -> decode circle use
+        `CStreamEngine.roundtrip`, which caches its `DecompressionPipeline`
+        (a fresh one per call would pay XLA retracing every time)."""
+        shaped = self.shape_blocks(values)
+        res = self.execute(shaped, state=state, collect_payload=True)
+        return self.frame_from(shaped, res)
+
+
+# ---------------------------------------------------- decompression pipeline --
+class DecompressionPipeline(BlockedExecutor):
+    """Egress executor: frame -> blocks -> fused chunked-scan decode.
+
+    Shares the blocked-executor machinery (plan, chunking, scan caches)
+    with the compression side. Pass the SAME codec instance (or an
+    identically configured one) that produced the frame: the frame header
+    identifies the codec family; quantizer parameters are session config,
+    as in any negotiated wire protocol."""
+
+    def __init__(
+        self,
+        config: EngineConfig,
+        codec: Optional[Codec] = None,
+        sample: Optional[np.ndarray] = None,
+    ):
+        super().__init__(config, sample=sample, codec=codec)
+        self._tail_fns: Dict[Tuple[int, int], Any] = {}
+        self._stream_decode_fn = None
+
+    # ------------------------------------------------------------ scan body
+    def _decode_block(self, state: Any, words: jax.Array, bitlen2d: jax.Array):
+        lanes, B = bitlen2d.shape
+        codes, _ = bits.unpack_symbols(words, bitlen2d.reshape(lanes * B))
+        enc = Encoded(codes.reshape(lanes, B, 2), bitlen2d)
+        state, x = self.codec.decode(state, enc)
+        return self._merge_if_shared(state), x
+
+    def _scan_body(self, state: Any, xs: Any):
+        words, bitlen2d = xs
+        if self.codec.meta.scope == "stream":
+            # unpack only; the cross-block expansion decode runs once, after
+            # the scan, over the whole symbol stream
+            lanes, B = bitlen2d.shape
+            codes, _ = bits.unpack_symbols(words, bitlen2d.reshape(lanes * B))
+            return state, codes.reshape(lanes, B, 2)
+        return self._decode_block(state, words, bitlen2d)
+
+    def _tail_fn(self, shape: Tuple[int, int]):
+        fn = self._tail_fns.get(shape)
+        if fn is None:
+            fn = jax.jit(self._scan_body)
+            self._tail_fns[shape] = fn
+        return fn
+
+    def _stream_decode(self, codes: jax.Array, bitlen: jax.Array):
+        """Single-dispatch expansion decode for stream-scope codecs."""
+        if self._stream_decode_fn is None:
+
+            def run(codes, bitlen):
+                _, x = self.codec.decode(None, Encoded(codes, bitlen))
+                return x
+
+            self._stream_decode_fn = jax.jit(run)
+        return self._stream_decode_fn(codes, bitlen)
+
+    # ------------------------------------------------------------ frame prep
+    def _split_frame(self, frame: bits.Frame):
+        """Frame -> (full-block stacks, per-block extras), device-ready."""
+        lanes = frame.lanes
+        shapes = frame.block_shapes()
+        seg_words = frame.block_words()
+        seg_starts = np.concatenate([[0], np.cumsum(seg_words)]).astype(np.int64)
+        sym_counts = [L * B for (L, B) in shapes]
+        sym_starts = np.concatenate([[0], np.cumsum(sym_counts)]).astype(np.int64)
+
+        def block_arrays(b: int):
+            L, B = shapes[b]
+            ow = L * B * 2 + 2  # executor's fixed worst-case width
+            words = np.zeros(ow, np.uint32)
+            seg = frame.payload[seg_starts[b] : seg_starts[b + 1]]
+            words[: seg.size] = seg
+            bl = frame.bitlen[sym_starts[b] : sym_starts[b + 1]].reshape(L, B)
+            return words, bl
+
+        return shapes, block_arrays
+
+    # ------------------------------------------------------------ decompress
+    def decompress(self, frame: bits.Frame, warmup: bool = True) -> DecompressionResult:
+        """Reconstruct a frame's stream through the fused chunked executor."""
+        want = WIRE_CODEC_IDS.get(self.codec.name)
+        if frame.codec_id != want:
+            raise ValueError(
+                f"frame codec id {frame.codec_id} "
+                f"({WIRE_CODEC_NAMES.get(frame.codec_id, '?')}) != pipeline codec "
+                f"{self.codec.name!r}"
+            )
+        lanes = frame.lanes
+        shapes, block_arrays = self._split_frame(frame)
+        n_full = frame.n_full
+        stream_scope = self.codec.meta.scope == "stream"
+
+        # device prep (symmetric with execute's blocks_dev upload): stack the
+        # uniform full blocks for the chunked scan, stage the extras
+        if n_full:
+            full_pairs = [block_arrays(b) for b in range(n_full)]
+            full_words = jnp.asarray(np.stack([w for w, _ in full_pairs]))
+            full_blens = jnp.asarray(np.stack([bl for _, bl in full_pairs]))
+        else:
+            full_words = full_blens = None
+        extra_blocks = [
+            (jnp.asarray(w), jnp.asarray(bl))
+            for w, bl in (block_arrays(b) for b in range(n_full, len(shapes)))
+        ]
+
+        if warmup:
+            # one full untimed pass on first sight of this frame shape: the
+            # measured pass then pays compute, not XLA compilation (decode is
+            # pure, so running it twice is free of side effects)
+            key = (
+                tuple(full_words.shape) if full_words is not None else None,
+                tuple(bl.shape for _, bl in extra_blocks),
+                "decomp",
+            )
+            if key not in self._warmed:
+                self._run_blocks(frame, lanes, full_words, full_blens, extra_blocks, stream_scope)
+                self._warmed.add(key)
+
+        t0 = time.perf_counter()
+        outs, xs = self._run_blocks(
+            frame, lanes, full_words, full_blens, extra_blocks, stream_scope
+        )
+        wall = time.perf_counter() - t0
+
+        values = self._assemble(frame, shapes, outs, xs)
+        return DecompressionResult(values=values, wall_s=wall, n_tuples=frame.n_valid)
+
+    def _run_blocks(self, frame, lanes, full_words, full_blens, extra_blocks, stream_scope):
+        """One decode pass over the staged blocks (the timed region)."""
+        state = self.init_state(lanes)
+        outs: List[Any] = []  # per-block decoded (L, B) or unpacked codes
+        blens: List[Any] = []
+        if full_words is not None:
+            for start, length in self._chunks(full_words.shape[0]):
+                state, ys = self._scan_fn(length)(
+                    state,
+                    (full_words[start : start + length], full_blens[start : start + length]),
+                )
+                outs.extend(ys[i] for i in range(length))
+                blens.extend(full_blens[start + i] for i in range(length))
+        for words, bl in extra_blocks:
+            state, y = self._tail_fn(tuple(bl.shape))(state, (words, bl))
+            outs.append(y)
+            blens.append(bl)
+        xs = None
+        if stream_scope:
+            # concatenate every block's symbols per lane (temporal order) and
+            # expand in ONE dispatch — symbols may cover tuples of any block
+            codes = jnp.concatenate([o.reshape(lanes, -1, 2) for o in outs], axis=1)
+            blen = jnp.concatenate(blens, axis=1)
+            xs = self._stream_decode(codes, blen)
+            jax.block_until_ready(xs)
+        else:
+            jax.block_until_ready(outs)
+        return outs, xs
+
+    def _assemble(
+        self, frame: bits.Frame, shapes, outs, stream_vals: Optional[jax.Array]
+    ) -> np.ndarray:
+        """Trim per-block pads (flat row-major suffix) and re-flatten."""
+        n_data = frame.n_full + (1 if frame.tail_per_lane else 0)
+        pieces = []
+        if stream_vals is not None:
+            xs = np.asarray(stream_vals)  # (L, total symbol slots)
+            pos = 0
+            for b in range(n_data):
+                L, B = shapes[b]
+                view = xs[:, pos : pos + B]
+                pieces.append(view.ravel()[: int(frame.block_valid[b])])
+                pos += B
+        else:
+            for b in range(n_data):
+                view = np.asarray(outs[b])
+                pieces.append(view.ravel()[: int(frame.block_valid[b])])
+        values = (
+            np.concatenate(pieces) if pieces else np.zeros(0, np.uint32)
+        ).astype(np.uint32)
+        return values[: frame.n_valid]

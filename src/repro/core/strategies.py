@@ -92,7 +92,10 @@ def plan_execution(
     if mbb <= 0:
         mbb = cache_aware_batch_bytes(profile)
     if config.execution == ExecutionStrategy.EAGER:
-        per_lane = 1  # one tuple per lane per dispatch
+        # one ALIGNED unit per lane per dispatch: pinning per_lane to 1 would
+        # violate codec block constraints (PLA superwindows need per-lane
+        # multiples of 2W) — eager means smallest legal block, not 1 tuple
+        per_lane = codec_align
     else:
         per_lane = max(1, mbb // 4 // config.lanes)
         per_lane = max(codec_align, (per_lane // codec_align) * codec_align)

@@ -103,8 +103,7 @@ class CompressedFeed:
     # -------------------------------------------------------------- device --
     def _decode_impl(self, words, bitlen, tail, lanes: int, per_lane: int):
         bl = bitlen.reshape(-1).astype(jnp.int32)
-        offsets = jnp.cumsum(bl) - bl
-        codes = bits.extract_bits(words, offsets, bl)
+        codes, _ = bits.unpack_symbols(words, bl)
         from repro.core.algorithms.base import Encoded
 
         enc = Encoded(

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: block-local bitstream unpacking (decode-side mirror of
+kernels/bitpack.py).
+
+Same VMEM-block design as the packer: each grid step owns one block of
+symbols whose working set (the packed word segment + per-symbol bitlens +
+the reconstructed codes) lives entirely in VMEM, and blocks start
+word-aligned so grid steps are independent — the decode side of the paper's
+cache-aware micro-batching, and the kernel form of EDPC's decoupled decode
+dataflow: because the per-symbol bitlens travel as frame metadata, no grid
+step ever parses a prefix to find its symbols.
+
+Within a block the bit offsets are an exclusive scan of the bitlens
+(`lax.fori_loop` carry, mirroring the packer's fold); each symbol then
+gathers its 3-word window and shifts/masks the <=64-bit code back out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bits
+
+DEFAULT_BLOCK = 256
+
+
+def _words_per_block(block: int) -> int:
+    return 2 * block + 1  # worst case: 64 bits/symbol + spill word
+
+
+def _unpack_kernel(words_ref, blen_ref, codes_ref, *, block: int):
+    words = words_ref[...].reshape(-1)  # (wpb,) uint32
+    blen = blen_ref[...]  # (block,) int32
+    # spill guard so the last symbol's 3-word window never reads OOB
+    ext = jnp.concatenate([words, jnp.zeros((2,), jnp.uint32)])
+
+    def body(i, carry):
+        codes, off = carry
+        n = blen[i]
+        w = off // 32
+        s = off % 32
+        # gather the 3-word window covering any <=64-bit code at offset s
+        g = jax.lax.dynamic_slice(ext, (w,), (3,))
+        r = 32 - s
+        lo = bits._safe_rshift(g[0], s) | bits._safe_lshift(g[1], r)
+        hi = bits._safe_rshift(g[1], s) | bits._safe_lshift(g[2], r)
+        lo = lo & bits.mask_bits(jnp.minimum(n, 32))
+        hi = hi & bits.mask_bits(jnp.maximum(n - 32, 0))
+        codes = jax.lax.dynamic_update_slice(
+            codes, jnp.stack([lo, hi])[None, :], (i, 0)
+        )
+        return codes, off + n
+
+    codes0 = jnp.zeros((block, 2), jnp.uint32)
+    codes, _ = jax.lax.fori_loop(0, block, body, (codes0, jnp.int32(0)))
+    codes_ref[...] = codes
+
+
+def unpack_blocks(words: jax.Array, bitlen: jax.Array, block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """Unpack per-block bitstreams back into (N, 2) uint32 codes.
+
+    Args:
+      words: uint32[nblocks, words_per_block] — per-block packed streams
+        (the layout `kernels/bitpack.py:pack_blocks` emits).
+      bitlen: int32[N] — per-symbol bit lengths, N = nblocks * block.
+
+    Returns:
+      codes: uint32[N, 2] — low/high words of each symbol (0 for 0-bit slots).
+    """
+    nblocks, wpb = words.shape
+    assert wpb == _words_per_block(block), f"words width {wpb} != {_words_per_block(block)}"
+    assert bitlen.shape[0] == nblocks * block, (bitlen.shape, nblocks, block)
+    kernel = functools.partial(_unpack_kernel, block=block)
+    codes = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks * block, 2), jnp.uint32),
+        interpret=interpret,
+    )(words, bitlen)
+    return codes

@@ -12,6 +12,7 @@ from functools import partial
 import jax
 
 from repro.kernels import bitpack as _bitpack
+from repro.kernels import bitunpack as _bitunpack
 from repro.kernels import delta_nuq as _delta_nuq
 from repro.kernels import dict_hash as _dict_hash
 
@@ -23,6 +24,12 @@ def _interpret() -> bool:
 @partial(jax.jit, static_argnames=("block",))
 def pack_blocks(codes, bitlen, block: int = _bitpack.DEFAULT_BLOCK):
     return _bitpack.pack_blocks(codes, bitlen, block=block, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block",))
+def unpack_blocks(words, bitlen, block: int = _bitunpack.DEFAULT_BLOCK):
+    """Decode-side mirror of `pack_blocks` (kernels/bitunpack.py)."""
+    return _bitunpack.unpack_blocks(words, bitlen, block=block, interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("qbits", "dmax", "mu", "sublanes", "t_tile"))

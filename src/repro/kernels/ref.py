@@ -26,6 +26,18 @@ def pack_blocks_ref(codes: jax.Array, bitlen: jax.Array, block: int):
     return words, totals.astype(jnp.int32)
 
 
+def unpack_blocks_ref(words: jax.Array, bitlen: jax.Array, block: int):
+    """Oracle for kernels/bitunpack.py: vmapped `bits.unpack_symbols`."""
+    nblocks = words.shape[0]
+
+    def unpack_one(w, b):
+        codes, _ = bits.unpack_symbols(w, b)
+        return codes
+
+    codes = jax.vmap(unpack_one)(words, bitlen.reshape(nblocks, block))
+    return codes.reshape(nblocks * block, 2)
+
+
 # --------------------------------------------------------------- delta_nuq --
 def delta_nuq_encode_ref(x: jax.Array, qbits: int, dmax: float, mu: float, t_tile: int):
     """Sequential-scan oracle with the same tile-local bootstrap semantics."""

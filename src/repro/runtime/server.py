@@ -29,8 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bits, metrics
 from repro.core.energy import PROFILES, edge_energy_j
-from repro.core.pipeline import CompressionPipeline
+from repro.core.pipeline import CompressionPipeline, DecompressionPipeline
 from repro.core.strategies import EngineConfig, SchedulingStrategy, schedule_blocks
 
 
@@ -61,6 +62,10 @@ class SessionReport:
     mean_latency_s: float  # per-tuple wait + processing, flush-weighted
     p95_latency_s: float
     energy_j: float  # session's share of the scheduled profile energy
+    # egress accounting (sessions created with egress=True only)
+    fidelity: Optional[metrics.Fidelity] = None  # decoded-vs-fed contract check
+    wire_bytes: Optional[int] = None  # serialized egress frame size
+    decode_s: Optional[float] = None  # egress decode wall time
 
 
 @dataclasses.dataclass
@@ -88,8 +93,10 @@ class StreamSession:
         sample: Optional[np.ndarray] = None,
         flush_tuples: int = 0,
         flush_timeout_s: float = 0.25,
+        egress: bool = False,
     ):
         self.topic = topic
+        self.config = config
         self.pipeline = CompressionPipeline(config, sample=sample)
         plan = self.pipeline.plan
         unit = config.lanes * self.pipeline.align
@@ -102,6 +109,15 @@ class StreamSession:
         self._arrivals = np.zeros(self.capacity, np.float64)
         self._count = 0
         self.flushes: List[FlushRecord] = []
+        #: egress=True keeps each flush's packed words + bitlens (and the fed
+        #: values, for the fidelity check) so the session can be closed into
+        #: one wire-format frame and decoded back — the per-session egress
+        #: path. Off by default: the hot ingest path pays no host copies.
+        self.egress = egress
+        self._egress_blocks: List[tuple] = []  # (words, nbits, bitlen, valid)
+        self._egress_values: List[np.ndarray] = []
+        self._egress_cache: Optional[tuple] = None  # (n_blocks, fidelity triple)
+        self._decompressor: Optional[DecompressionPipeline] = None
         # compile the flush kernel up front so per-flush timings are compute,
         # not compilation (throwaway state: warmup must not advance the codec)
         zeros = jnp.zeros((self.lanes, self.capacity // self.lanes), jnp.uint32)
@@ -173,15 +189,18 @@ class StreamSession:
 
     # -------------------------------------------------------------- flush
     def flush(self, now: float) -> Optional[FlushRecord]:
-        """Compress the buffered batch (padded + masked if partial).
+        """Compress the buffered batch (edge-padded if partial).
 
-        Partial batches are edge-padded (repeats of the batch's last value)
-        and the pad symbols are masked out of the bitstream. The codec state
-        still advances over the pads, which stays decoder-replayable: a
-        frame header carries the real tuple count, padding is defined as
-        repeat-of-last-value, so by the time a decoder reaches the pad
-        positions it has already reconstructed that value and can replay
-        the identical state evolution."""
+        Partial batches are padded with repeats of the batch's last value.
+        What happens to the pad SYMBOLS depends on the codec's masking
+        policy (DESIGN.md §10): maskable codecs (stateless decode) drop
+        them from the bitstream; non-maskable codecs (ADPCM, Delta,
+        Tdic32, RLE — their decoders replay state from the symbols
+        themselves) ship them on the wire, because a decoder cannot
+        regenerate the encoder's pad symbols and dropping them would fork
+        encoder/decoder state at every partial flush. Either way the
+        frame's per-block valid counts trim the pads after decode, so the
+        reconstruction and accounting stay exact."""
         n = self._count
         if n == 0:
             return None
@@ -192,10 +211,15 @@ class StreamSession:
         block = jnp.asarray(vals.reshape(self.lanes, -1))
         mask_dev = jnp.asarray(mask.reshape(self.lanes, -1))
         t0 = time.perf_counter()
-        self.state, _, total_bits = jax.block_until_ready(
+        self.state, words, total_bits, bitlen = jax.block_until_ready(
             self.pipeline._masked_step(self.state, block, mask_dev)
         )
         cost = time.perf_counter() - t0
+        if self.egress:  # host copies after the timed region
+            self._egress_blocks.append(
+                (np.asarray(words), int(total_bits), np.asarray(bitlen, np.int32), n)
+            )
+            self._egress_values.append(self._values[:n].copy())
         waits = np.maximum(now - self._arrivals[:n], 0.0)
         rec = FlushRecord(
             n_tuples=n,
@@ -209,6 +233,67 @@ class StreamSession:
         self._count = 0
         return rec
 
+    # ------------------------------------------------------------- egress
+    def egress_frame(self) -> bits.Frame:
+        """Close the session's bitstream into one wire-format frame.
+
+        All flushed micro-batches become full blocks of the session's
+        capacity shape with per-block valid counts (partial/timeout flushes
+        were padded); `Codec.flush`'s trailing symbols (RLE's open run) are
+        packed as the flush mini-block. Leaves the session state untouched.
+
+        The frame covers the session FROM ITS START: stateful decode must
+        replay from the initial codec state, so egress blocks accumulate
+        for the session's lifetime. For long-lived topics, rotate the
+        session (close + re-admit) per retention interval rather than
+        letting one frame grow without bound."""
+        if not self.egress:
+            raise RuntimeError("session was not created with egress=True")
+        blocks = list(self._egress_blocks)
+        flush_entry = self.pipeline.flush_block_entry(self.state)
+        flush_slots = 0
+        if flush_entry is not None:
+            blocks.append(flush_entry)
+            flush_slots = self.pipeline.flush_slots
+        return self.pipeline.marshal_frame(
+            blocks,
+            per_lane=self.capacity // self.lanes,
+            n_full=len(self._egress_blocks),
+            tail_per_lane=0,
+            flush_slots=flush_slots,
+            n_valid=sum(b[3] for b in self._egress_blocks),
+        )
+
+    def egress_fidelity(self):
+        """Decode the session's frame and check the fidelity contract.
+
+        Returns (Fidelity, wire_bytes, decode_wall_s): bit-exact for
+        lossless codecs, within `Codec.error_bound` for bounded lossy ones,
+        measured max-abs/RMSE/NRMSE regardless. Memoized on the flush
+        count, so repeated `report()` calls between flushes do not re-frame
+        and re-decode the whole session history."""
+        if self._egress_cache is not None and self._egress_cache[0] == len(
+            self._egress_blocks
+        ):
+            return self._egress_cache[1]
+        frame = self.egress_frame()
+        if self._decompressor is None:
+            self._decompressor = DecompressionPipeline(
+                self.config, codec=self.pipeline.codec
+            )
+        dec = self._decompressor.decompress(frame)
+        fed = (
+            np.concatenate(self._egress_values)
+            if self._egress_values
+            else np.zeros(0, np.uint32)
+        )
+        fid = metrics.fidelity(
+            fed, dec.values, bound=self.pipeline.codec.error_bound()
+        )
+        out = (fid, frame.wire_bytes, dec.wall_s)
+        self._egress_cache = (len(self._egress_blocks), out)
+        return out
+
     # ------------------------------------------------------------- report
     def report(self, energy_j: float = 0.0) -> SessionReport:
         n_tuples = sum(f.n_tuples for f in self.flushes)
@@ -220,6 +305,9 @@ class StreamSession:
         lat_arr = np.array(lat, np.float64)
         mean_lat = float((lat_arr * weights).sum() / max(weights.sum(), 1.0))
         p95 = float(np.percentile(lat_arr, 95)) if len(lat_arr) else 0.0
+        fid = wire = dec_s = None
+        if self.egress and self.flushes:
+            fid, wire, dec_s = self.egress_fidelity()
         return SessionReport(
             topic=self.topic,
             codec=self.pipeline.codec.name,
@@ -234,6 +322,9 @@ class StreamSession:
             mean_latency_s=mean_lat,
             p95_latency_s=p95,
             energy_j=energy_j,
+            fidelity=fid,
+            wire_bytes=wire,
+            decode_s=dec_s,
         )
 
 
@@ -247,11 +338,16 @@ class StreamServer:
         scheduling: SchedulingStrategy = SchedulingStrategy.ASYMMETRIC,
         max_sessions: int = 16,
         flush_timeout_s: float = 0.25,
+        egress: bool = False,
     ):
         self.profile = PROFILES[profile]
         self.scheduling = scheduling
         self.max_sessions = max_sessions
         self.flush_timeout_s = flush_timeout_s
+        #: egress=True: every session keeps its wire payload, and reports
+        #: carry the decoded-roundtrip fidelity contract next to ratio/
+        #: throughput/latency/energy
+        self.egress = egress
         self.sessions: Dict[str, StreamSession] = {}
 
     # -------------------------------------------------------------- admit
@@ -277,6 +373,7 @@ class StreamServer:
             flush_timeout_s=(
                 self.flush_timeout_s if flush_timeout_s is None else flush_timeout_s
             ),
+            egress=self.egress,
         )
         self.sessions[topic] = session
         return session

@@ -53,7 +53,13 @@ def test_roundtrip(name, sname):
 
 @pytest.mark.parametrize("name", sorted(PAPER_TABLE1.values()))
 def test_multibatch_state_continuity(name):
-    """Stateful codecs must decode correctly across micro-batch boundaries."""
+    """Stateful codecs must decode correctly across micro-batch boundaries.
+
+    Block-scope codecs decode chunk by chunk with replayed state;
+    stream-scope codecs (RLE: runs span micro-batch boundaries) decode the
+    concatenated symbol stream — including `flush`'s trailing run — once."""
+    from repro.core.algorithms import Encoded
+
     x = jnp.asarray(
         np.clip(
             np.cumsum(RNG.integers(-8, 9, size=(LANES, 4 * B)), axis=1) + 4096,
@@ -63,13 +69,25 @@ def test_multibatch_state_continuity(name):
     )
     codec = _make(name, sample=np.asarray(x))
     st_e, st_d = codec.init_state(LANES), codec.init_state(LANES)
-    outs = []
+    outs, encs = [], []
     for k in range(4):
         chunk = x[:, k * B : (k + 1) * B]
         st_e, enc = codec.encode(st_e, chunk)
-        st_d, xhat = codec.decode(st_d, enc)
-        outs.append(np.asarray(xhat))
-    xhat_all = np.concatenate(outs, axis=1)
+        if codec.meta.scope == "stream":
+            encs.append(enc)
+        else:
+            st_d, xhat = codec.decode(st_d, enc)
+            outs.append(np.asarray(xhat))
+    if codec.meta.scope == "stream":
+        encs.append(codec.flush(st_e))
+        joined = Encoded(
+            jnp.concatenate([e.codes for e in encs], axis=1),
+            jnp.concatenate([e.bitlen for e in encs], axis=1),
+        )
+        _, xhat = codec.decode(st_d, joined)
+        xhat_all = np.asarray(xhat)[:, : 4 * B]
+    else:
+        xhat_all = np.concatenate(outs, axis=1)
     if not codec.meta.lossy:
         np.testing.assert_array_equal(xhat_all, np.asarray(x))
     else:
@@ -140,12 +158,19 @@ def test_property_lossy_monotone_ratio_vs_qbits(vals, qbits):
 @given(seed=st.integers(0, 2**31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_property_rle_expansion_conserves_counts(seed):
-    """Property: RLE emitted counts sum exactly to the tuple count."""
+    """Property: RLE emitted counts (encode + flush) sum exactly to the
+    tuple count — the trailing open run travels via `flush`, nothing is
+    double-counted across the carry."""
     rng = np.random.default_rng(seed)
     x = jnp.asarray(
         np.repeat(rng.integers(0, 8, size=(2, 32)).astype(np.uint32), 8, axis=1)
     )
     codec = make_codec("rle")
-    _, enc = codec.encode(None, x)
-    counts = np.where(np.asarray(enc.bitlen) > 0, np.asarray(enc.codes[..., 1]), 0)
-    np.testing.assert_array_equal(counts.sum(axis=1), [x.shape[1]] * 2)
+    st, enc = codec.encode(codec.init_state(2), x)
+    tail = codec.flush(st)
+
+    def counts(e):
+        return np.where(np.asarray(e.bitlen) > 0, np.asarray(e.codes[..., 1]), 0)
+
+    total = counts(enc).sum(axis=1) + counts(tail).sum(axis=1)
+    np.testing.assert_array_equal(total, [x.shape[1]] * 2)

@@ -1,0 +1,159 @@
+"""Wire-format layer: pack->unpack bit-exactness (jnp reference vs the
+Pallas bitunpack kernel), frame serialization, and the 7-bit bitlen
+metadata stream."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis_compat import given, settings, st  # skips when absent
+
+from repro.core import bits
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _masked_codes(codes: np.ndarray, blen: np.ndarray):
+    """Clamp codes to their bitlen (the packer drops bits beyond bitlen)."""
+    c = jnp.asarray(codes)
+    b = jnp.asarray(blen)
+    return jnp.stack(
+        [
+            c[:, 0] & bits.mask_bits(jnp.minimum(b, 32)),
+            c[:, 1] & bits.mask_bits(jnp.maximum(b - 32, 0)),
+        ],
+        axis=1,
+    )
+
+
+def _random_symbols(rng, n, p_zero=0.15, p_full=0.1):
+    """Random bitlens over the full 0..64 range, forcing the extremes:
+    0-bit (suppressed) slots and full 64-bit codes."""
+    blen = rng.integers(1, 64, size=(n,)).astype(np.int32)
+    u = rng.random(n)
+    blen[u < p_zero] = 0
+    blen[u > 1 - p_full] = 64
+    codes = rng.integers(0, 2**32, size=(n, 2), dtype=np.uint64).astype(np.uint32)
+    return codes, blen
+
+
+# ------------------------------------------------------------ unpack_symbols --
+def test_unpack_symbols_inverts_pack_bits():
+    n = 512
+    codes, blen = _random_symbols(RNG, n)
+    masked = _masked_codes(codes, blen)
+    words, total, offsets = bits.pack_bits(masked, jnp.asarray(blen), 2 * n + 2)
+    got, got_off = bits.unpack_symbols(words, jnp.asarray(blen))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(masked))
+    np.testing.assert_array_equal(np.asarray(got_off), np.asarray(offsets))
+    assert int(total) == int(blen.sum())
+
+
+def test_unpack_symbols_zero_slots_come_back_zero():
+    blen = np.array([0, 48, 0, 0, 64, 0], np.int32)
+    codes = np.full((6, 2), 0xFFFFFFFF, np.uint32)
+    masked = _masked_codes(codes, blen)
+    words, _, _ = bits.pack_bits(masked, jnp.asarray(blen), 14)
+    got, _ = bits.unpack_symbols(words, jnp.asarray(blen))
+    got = np.asarray(got)
+    np.testing.assert_array_equal(got[blen == 0], 0)
+    np.testing.assert_array_equal(got[blen > 0], np.asarray(masked)[blen > 0])
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_property_pack_unpack_roundtrip_arbitrary_bitlens(seed):
+    """Property: pack->unpack is the identity on any bitlen pattern,
+    including runs of 0-bit slots and 64-bit maximal codes."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 256))
+    codes, blen = _random_symbols(rng, n, p_zero=0.3, p_full=0.2)
+    masked = _masked_codes(codes, blen)
+    words, _, _ = bits.pack_bits(masked, jnp.asarray(blen), 2 * n + 2)
+    got, _ = bits.unpack_symbols(words, jnp.asarray(blen))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(masked))
+
+
+# ----------------------------------------------------------- Pallas bitunpack --
+@pytest.mark.parametrize("n,block", [(256, 64), (512, 128), (1024, 256)])
+def test_bitunpack_kernel_matches_ref(n, block):
+    codes, blen = _random_symbols(RNG, n)
+    masked = _masked_codes(codes, blen)
+    b = jnp.asarray(blen)
+    words, nbits = ops.pack_blocks(masked, b, block=block)
+    got_k = ops.unpack_blocks(words, b, block=block)
+    got_r = ref.unpack_blocks_ref(words, b, block)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(got_r))
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(masked))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_bitunpack_inverts_bitpack(seed):
+    """Property: the Pallas unpack kernel inverts the Pallas pack kernel on
+    random symbol streams (0-bit and 64-bit slots included)."""
+    rng = np.random.default_rng(seed)
+    block = 64
+    n = block * int(rng.integers(1, 5))
+    codes, blen = _random_symbols(rng, n, p_zero=0.25, p_full=0.15)
+    masked = _masked_codes(codes, blen)
+    b = jnp.asarray(blen)
+    words, _ = ops.pack_blocks(masked, b, block=block)
+    got = ops.unpack_blocks(words, b, block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(masked))
+
+
+# ------------------------------------------------------------------- framing --
+def test_bitlen_meta_pack_roundtrip():
+    for n in (0, 1, 7, 32, 100, 1000):
+        blen = RNG.integers(0, 65, size=(n,)).astype(np.int32)
+        packed = bits._pack_bitlens(blen)
+        assert packed.size == (7 * n + 31) // 32
+        np.testing.assert_array_equal(bits._unpack_bitlens(packed, n), blen)
+
+
+def test_frame_serialize_parse_roundtrip():
+    n = 256
+    codes, blen = _random_symbols(RNG, n)
+    masked = _masked_codes(codes, blen)
+    words, total, _ = bits.pack_bits(masked, jnp.asarray(blen), 2 * n + 2)
+    frame = bits.build_frame(
+        codec_id=7, lanes=4, per_lane=64, n_full=1, tail_per_lane=0,
+        flush_slots=0, n_valid=256,
+        blocks=[(np.asarray(words), int(total), blen, 256)],
+    )
+    buf = frame.to_bytes()
+    back = bits.Frame.from_bytes(buf)
+    assert back.codec_id == 7 and back.lanes == 4 and back.n_valid == 256
+    assert back.n_blocks == 1 and back.block_shapes() == [(4, 64)]
+    np.testing.assert_array_equal(back.bitlen, frame.bitlen)
+    np.testing.assert_array_equal(back.block_bits, frame.block_bits)
+    np.testing.assert_array_equal(back.block_valid, frame.block_valid)
+    np.testing.assert_array_equal(back.payload, frame.payload)
+    # the payload carries only used words, not the worst-case buffer
+    assert frame.payload.size == (int(total) + 31) // 32
+    assert frame.wire_bytes == len(buf)
+
+
+def test_frame_rejects_garbage():
+    with pytest.raises(ValueError, match="magic"):
+        bits.Frame.from_bytes(b"\x00" * 64)
+
+
+def test_frame_rejects_inconsistent_header():
+    """A tampered header (inflated lanes / block counts) must fail with the
+    parser's ValueError contract, never an uncontrolled IndexError."""
+    n = 64
+    codes, blen = _random_symbols(RNG, n)
+    masked = _masked_codes(codes, blen)
+    words, total, _ = bits.pack_bits(masked, jnp.asarray(blen), 2 * n + 2)
+    frame = bits.build_frame(
+        codec_id=7, lanes=4, per_lane=16, n_full=1, tail_per_lane=0,
+        flush_slots=0, n_valid=64,
+        blocks=[(np.asarray(words), int(total), blen, 64)],
+    )
+    buf = bytearray(frame.to_bytes())
+    for word_idx in (3, 4, 5):  # lanes, per_lane, n_full
+        bad = bytearray(buf)
+        bad[4 * word_idx : 4 * word_idx + 4] = (10**6).to_bytes(4, "little")
+        with pytest.raises(ValueError):
+            bits.Frame.from_bytes(bytes(bad))

@@ -1,0 +1,237 @@
+"""Egress path: engine roundtrips through the framed bitstream for every
+registered codec, flush finalization, the eager-alignment plan fix, the
+decompression executor, and per-session server egress fidelity."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import bits, metrics
+from repro.core.algorithms import WIRE_CODEC_IDS, codec_names, make_codec
+from repro.core.engine import CStreamEngine
+from repro.core.pipeline import CompressionPipeline, DecompressionPipeline
+from repro.core.strategies import EngineConfig, ExecutionStrategy, plan_execution
+
+RNG = np.random.default_rng(23)
+
+
+def _stream_for(name: str, n: int = 5000) -> np.ndarray:
+    """A stream the codec is suited to (runs for RLE, smooth otherwise);
+    n is deliberately not a block multiple so the masked tail is exercised."""
+    if name == "rle":
+        return np.repeat(
+            RNG.integers(0, 64, size=n // 16 + 1).astype(np.uint32), 16
+        )[:n]
+    return np.clip(
+        np.cumsum(RNG.integers(-8, 9, size=n)) + 4096, 0, 65535
+    ).astype(np.uint32)
+
+
+def _cfg(codec, **kw):
+    base = dict(codec=codec, micro_batch_bytes=4096, lanes=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# -------------------------------------------------- every codec, full circle --
+@pytest.mark.parametrize("name", sorted(codec_names()))
+def test_engine_roundtrip_every_codec(name):
+    """Acceptance: engine.roundtrip(x) through the framed bitstream is
+    bit-exact for lossless codecs and within the codec's configured error
+    bound for lossy ones."""
+    src = _stream_for(name)
+    eng = CStreamEngine(_cfg(name), sample=src)
+    rt = eng.roundtrip(src)
+    assert rt.fidelity.n_tuples == len(src)
+    assert len(rt.values) == len(src)
+    if not eng.codec.meta.lossy:
+        assert rt.fidelity.bit_exact, rt.fidelity
+    else:
+        assert rt.fidelity.within_bound, rt.fidelity
+        assert rt.fidelity.nrmse < 0.05, rt.fidelity
+    # the decode ran through the fused chunked-scan executor, not a
+    # per-block dispatch loop: the plan fuses many blocks per dispatch
+    assert eng.decompressor.plan.scan_chunk > 1
+    # and the frame is a real serializable wire object
+    back = bits.Frame.from_bytes(rt.compress.frame.to_bytes())
+    assert back.codec_id == WIRE_CODEC_IDS[name]
+    assert np.array_equal(eng.decompress(back), rt.values)
+
+
+def test_decode_runs_through_chunked_scan_not_block_loop():
+    """The decompression executor must issue one scan per chunk, not one
+    dispatch per block: count the scan invocations."""
+    src = _stream_for("tcomp32", 64 * 1024)
+    pipe = CompressionPipeline(_cfg("tcomp32"), sample=src)
+    frame = pipe.compress_to_frame(src)
+    decomp = DecompressionPipeline(pipe.config, codec=pipe.codec)
+    calls = []
+    orig = decomp._scan_fn
+
+    def counting(length):
+        fn = orig(length)
+
+        def wrapped(state, xs):
+            calls.append(length)
+            return fn(state, xs)
+
+        return wrapped
+
+    decomp._scan_fn = counting
+    res = decomp.decompress(frame)
+    np.testing.assert_array_equal(res.values, src)
+    n_full = frame.n_full
+    assert n_full > 1
+    # chunked: far fewer dispatches than blocks (incl. the warmup pass)
+    assert len(calls) < n_full
+    assert sum(calls) >= n_full  # every block covered by some chunk
+
+
+def test_roundtrip_carries_wire_overhead_honestly():
+    """wire_bytes = serialized frame >= payload bits: header + the 7-bit
+    bitlen metadata stream are counted, not hidden."""
+    src = _stream_for("tcomp32")
+    eng = CStreamEngine(_cfg("tcomp32"), sample=src)
+    rt = eng.roundtrip(src)
+    assert rt.wire_bytes > rt.compress.frame.payload_bits / 8
+    assert rt.wire_bytes == len(rt.compress.frame.to_bytes())
+
+
+def test_decompress_rejects_wrong_codec():
+    src = _stream_for("tcomp32")
+    frame = CompressionPipeline(_cfg("tcomp32"), sample=src).compress_to_frame(src)
+    other = CStreamEngine(_cfg("leb128"))
+    with pytest.raises(ValueError, match="codec id"):
+        other.decompress(frame)
+
+
+# ------------------------------------------------------- flush finalization --
+def test_rle_trailing_open_run_travels_via_flush():
+    """Satellite: a stream ending mid-run must emit the open run through
+    `Codec.flush` during pipeline finalization — and survive decode."""
+    pipe = CompressionPipeline(_cfg("rle"))
+    bt = pipe.block_tuples
+    # constant stream: every lane's whole substream is ONE open run, so the
+    # in-block symbols are empty and the flush mini-block carries everything
+    src = np.full(2 * bt, 77, np.uint32)
+    shaped = pipe.shape_blocks(src)
+    res = pipe.execute(shaped, collect_payload=True)
+    frame = pipe.frame_from(shaped, res)
+    assert frame.flush_slots == 1
+    flush_bits = float(res.per_block_bits[-1])
+    assert flush_bits == 48.0 * pipe.config.lanes  # one open run per lane
+    assert float(res.per_block_bits[:-1].sum()) == 0.0  # nothing else emitted
+    decomp = DecompressionPipeline(pipe.config, codec=pipe.codec)
+    np.testing.assert_array_equal(decomp.decompress(frame).values, src)
+
+
+def test_rle_runs_merge_across_blocks():
+    """The carried open run merges across micro-batch blocks: a long run is
+    ONE symbol, not one per block (ratio strictly better than block-local
+    closing), and the roundtrip stays exact."""
+    pipe = CompressionPipeline(_cfg("rle"))
+    bt = pipe.block_tuples
+    src = np.repeat(np.arange(4, dtype=np.uint32), 2 * bt)  # 4 runs x 2 blocks
+    shaped = pipe.shape_blocks(src)
+    res = pipe.execute(shaped, collect_payload=True)
+    total_symbols = sum(
+        int((np.asarray(p.bitlen) > 0).sum()) for p in res.payload
+    )
+    # each lane's substream sees 3 value transitions (runs span 2 blocks)
+    # plus its flush symbol: 4 symbols/lane. The old block-local closing
+    # emitted one symbol per lane per block = n_blocks symbols/lane (8 here).
+    lanes, n_blocks = pipe.config.lanes, len(shaped.blocks)
+    assert total_symbols == 4 * lanes
+    assert total_symbols < n_blocks * lanes  # strictly beats block-local RLE
+    frame = pipe.frame_from(shaped, res)
+    decomp = DecompressionPipeline(pipe.config, codec=pipe.codec)
+    np.testing.assert_array_equal(decomp.decompress(frame).values, src)
+
+
+def test_flush_is_noop_for_stateless_codecs():
+    pipe = CompressionPipeline(_cfg("tcomp32"))
+    assert pipe.flush_slots == 0
+    src = _stream_for("tcomp32", 4096)
+    shaped = pipe.shape_blocks(src)
+    res = pipe.execute(shaped, collect_payload=True)
+    assert res.flush_slots == 0
+    assert len(res.payload) == shaped.n_blocks  # no flush mini-block
+
+
+# ------------------------------------------------- eager alignment (plan fix) --
+def test_eager_plan_respects_codec_alignment():
+    """Satellite regression: EAGER plans must align per-lane tuples to
+    `codec_align` (PLA superwindows), not pin per_lane=1."""
+    cfg = _cfg("pla", execution=ExecutionStrategy.EAGER)
+    plan = plan_execution(cfg, codec_align=32)
+    assert plan.per_lane == 32  # smallest legal block, not 1
+    assert plan.scan_chunk == 1  # still per-block dispatch
+    # unaligned codecs keep the true 1-tuple-per-lane eager shape
+    assert plan_execution(_cfg("tcomp32", execution=ExecutionStrategy.EAGER)).per_lane == 1
+
+
+def test_eager_pla_compresses_and_roundtrips():
+    """End-to-end: eager PLA no longer violates the superwindow assert."""
+    src = _stream_for("pla", 2048)
+    eng = CStreamEngine(_cfg("pla", execution=ExecutionStrategy.EAGER), sample=src)
+    assert eng.pipeline.plan.per_lane % (2 * eng.codec.window) == 0
+    rt = eng.roundtrip(src, max_blocks=8)
+    assert rt.fidelity.within_bound
+
+
+# --------------------------------------------------------- server egress ----
+def test_server_sessions_report_fidelity_contract():
+    """Per-session egress: every session's decoded stream honors the
+    fidelity contract (bit-exact lossless / bounded lossy), with partial
+    timeout flushes (mid-stream pads) in the mix."""
+    from repro.data import make_dataset
+    from repro.data.stream import rate_for_dataset, zipf_timestamps
+    from repro.runtime.server import StreamServer
+
+    n, rate = 3000, rate_for_dataset(1)
+    mix = [("tcomp32", "micro"), ("tdic32", "rovio"), ("rle", "sensor"), ("adpcm", "ecg")]
+    server = StreamServer(max_sessions=8, egress=True)
+    feeds = {}
+    for i, (codec, ds) in enumerate(mix):
+        vals = make_dataset(ds, n_tuples=n).stream()[:n]
+        topic = f"{codec}-{i}"
+        server.admit(topic, _cfg(codec, micro_batch_bytes=2048), sample=vals)
+        feeds[topic] = (vals, zipf_timestamps(n, rate, zipf_factor=0.7, seed=i))
+    rep = server.run(feeds)
+    for topic, r in rep.sessions.items():
+        assert r.fidelity is not None and r.wire_bytes is not None, topic
+        assert r.fidelity.n_tuples == n
+        assert r.fidelity.within_bound, (topic, r.fidelity)
+        codec = make_codec(r.codec) if r.codec != "adpcm" else None
+        if codec is not None and not codec.meta.lossy:
+            assert r.fidelity.bit_exact, (topic, r.fidelity)
+        else:
+            assert r.fidelity.nrmse < 0.05, (topic, r.fidelity)
+
+
+def test_session_egress_off_by_default():
+    from repro.runtime.server import StreamSession
+
+    s = StreamSession("t", _cfg("tcomp32"))
+    s.offer_many(
+        np.arange(s.capacity, dtype=np.uint32), np.zeros(s.capacity)
+    )
+    assert s.flushes and s.report().fidelity is None
+    with pytest.raises(RuntimeError, match="egress"):
+        s.egress_frame()
+
+
+# ------------------------------------------------------------ error bounds --
+def test_error_bounds_exposed_per_codec():
+    assert make_codec("tcomp32").error_bound() == 0.0
+    assert make_codec("rle").error_bound() == 0.0
+    assert make_codec("adpcm").error_bound() is None  # slope overload: no hard bound
+    pla = make_codec("pla", eps=8.0)
+    assert pla.error_bound() == pytest.approx(8.5)
+    uanuq = make_codec("uanuq", qbits=12, vmax=65535.0)
+    b = uanuq.error_bound()
+    assert 0 < b < 65535
+    # the bound is real: quantize the worst grid point and stay inside it
+    xs = jnp.asarray(np.linspace(0, 65535, 4096).astype(np.uint32)[None, :])
+    _, enc = uanuq.encode(None, xs)
+    _, xh = uanuq.decode(None, enc)
+    assert float(np.abs(np.asarray(xh, np.float64) - np.asarray(xs, np.float64)).max()) <= b
