@@ -68,6 +68,23 @@ class CompressResult:
 
 
 @dataclasses.dataclass
+class GangCompressResult:
+    """Offline gang run over S same-config streams (DESIGN.md §11).
+
+    `results` has one CompressResult per stream; `wall_s` is the SHARED
+    gang wall (the streams moved through one vmapped dispatch sequence, so
+    per-stream `stats.wall_s` is the even split); `dispatches` counts the
+    kernel launches the gang issued — compare against S× the solo count."""
+
+    results: List["CompressResult"]
+    n_streams: int
+    wall_s: float
+    dispatches: int
+    makespan_s: float  # all streams' blocks scheduled together
+    energy_j: float
+
+
+@dataclasses.dataclass
 class RoundtripResult:
     """compress -> framed bitstream -> decompress, with the fidelity check."""
 
@@ -141,7 +158,8 @@ class CStreamEngine:
 
         # ---- schedule layer: map blocks onto the hardware profile ---------
         profile = cfg.hardware()
-        per_block_cost = wall / n_blocks  # measured mean cost at speed 1.0
+        # measured mean cost at speed 1.0 (empty streams have no blocks)
+        per_block_cost = wall / max(n_blocks, 1)
         costs = block_costs(wall, per_block_bits)
         speeds = profile.speeds
         _, busy, makespan = schedule_blocks(costs, speeds, cfg.scheduling)
@@ -194,6 +212,82 @@ class CStreamEngine:
             blocked_s=max(wall - running, 0.0),
             running_s=running,
             frame=pipe.frame_from(shaped, res) if emit_frame else None,
+        )
+
+    # ----------------------------------------------------------------- gang
+    def gang_compress(
+        self,
+        streams: List[np.ndarray],
+        emit_frames: bool = False,
+    ) -> GangCompressResult:
+        """Compress S independent streams through gang-batched dispatches.
+
+        The offline analogue of the server's gang dispatcher: every stream
+        is shaped to the SAME block geometry (they must share a length), the
+        stacked blocks run through one vmapped chunked-scan sequence, and
+        per-stream bitstreams/frames scatter back out bit-identical to solo
+        runs. The schedule layer then maps ALL streams' blocks onto the
+        hardware profile together — the multi-stream makespan the paper's
+        Fig 12 measures with one engine per stream."""
+        if not streams:
+            raise ValueError("gang_compress needs at least one stream")
+        pipe = self.pipeline
+        shaped = [pipe.shape_blocks(np.asarray(v, np.uint32)) for v in streams]
+        d0 = pipe.dispatches
+        exec_results, wall = pipe.execute_gang(shaped, collect_payload=emit_frames)
+        dispatches = pipe.dispatches - d0
+
+        cfg = self.config
+        profile = cfg.hardware()
+        all_costs: List[float] = []
+        results: List[CompressResult] = []
+        for sh, res in zip(shaped, exec_results):
+            per_block_bits = res.per_block_bits
+            total_bits = float(per_block_bits.sum())
+            costs = block_costs(res.wall_s, per_block_bits)
+            all_costs.extend(costs)
+            _, busy, makespan = schedule_blocks(costs, profile.speeds, cfg.scheduling)
+            energy = edge_energy_j(
+                profile, busy, makespan,
+                spin_wait=cfg.scheduling == SchedulingStrategy.UNIFORM,
+            )
+            input_bytes = res.n_tuples * 4
+            stats = metrics.RunStats(
+                name=f"{self.codec.name}/gang/{cfg.state.value}/{cfg.scheduling.value}",
+                input_bytes=input_bytes,
+                output_bytes=total_bits / 8.0,
+                wall_s=res.wall_s,
+                ratio=metrics.compression_ratio(input_bytes * 8, total_bits),
+                latency_s=None,
+                energy_j=energy,
+            )
+            results.append(
+                CompressResult(
+                    stats=stats,
+                    total_bits=total_bits,
+                    n_tuples=res.n_tuples,
+                    per_block_bits=per_block_bits,
+                    makespan_s=makespan,
+                    busy_s=busy,
+                    blocked_s=0.0,
+                    running_s=res.wall_s,
+                    frame=pipe.frame_from(sh, res) if emit_frames else None,
+                )
+            )
+        _, gang_busy, gang_makespan = schedule_blocks(
+            all_costs, profile.speeds, cfg.scheduling
+        )
+        gang_energy = edge_energy_j(
+            profile, gang_busy, gang_makespan,
+            spin_wait=cfg.scheduling == SchedulingStrategy.UNIFORM,
+        )
+        return GangCompressResult(
+            results=results,
+            n_streams=len(streams),
+            wall_s=wall,
+            dispatches=dispatches,
+            makespan_s=gang_makespan,
+            energy_j=gang_energy,
         )
 
     # --------------------------------------------------------------- egress

@@ -180,6 +180,9 @@ class BlockedExecutor:
         self._align = align
         self._scan_fns: Dict[int, Any] = {}  # chunk length -> jitted scan
         self._warmed: set = set()  # (shapes, chunk, ...) already compiled
+        #: kernel dispatches issued on timed paths (scan chunks, per-block
+        #: steps, gang steps). The gang-vs-per-session bench compares this.
+        self.dispatches: int = 0
 
     # ------------------------------------------------------------- plumbing
     def init_state(self, lanes: Optional[int] = None) -> Any:
@@ -221,8 +224,10 @@ class BlockedExecutor:
         blocks = values[: n_full * bt].reshape(n_full, lanes, bt // lanes)
         rem = len(values) - n_full * bt
         if rem == 0:
-            if n_full == 0:
-                raise ValueError("empty stream")
+            # n_full == 0 is the legitimate empty stream: zero blocks, zero
+            # valid tuples — execute() emits only the flush mini-block (if
+            # the codec has one) and the frame decodes back to an empty
+            # array, so 0-length sessions honor the fidelity contract too
             return ShapedStream(blocks, None, None, n_full * bt)
         # tail: smallest aligned (lanes, B_tail) block covering the remainder
         unit = lanes * self._align
@@ -312,21 +317,24 @@ class CompressionPipeline(BlockedExecutor):
         return state, (tb, words, blen)
 
     # ------------------------------------------------------------- finalize
+    def _flush_pack_body(self, state: Any):
+        """The ONE definition of flush mini-block packing: `Codec.flush`'s
+        trailing symbols -> (words, total_bits, bitlen). Jitted solo below
+        and jit(vmap)'d for gangs — one body, so the two paths cannot
+        desynchronize the wire layout."""
+        enc = self.codec.flush(state)
+        lanes, fs = enc.bitlen.shape
+        words, tb, _ = bits.pack_bits(
+            enc.codes.reshape(lanes * fs, 2),
+            enc.bitlen.reshape(lanes * fs),
+            lanes * fs * 2 + 2,
+        )
+        return words, tb, enc.bitlen
+
     def _pack_flush(self, state: Any):
         """Pack the codec's trailing state symbols (`Codec.flush`)."""
         if self._flush_fn is None:
-
-            def pack(state):
-                enc = self.codec.flush(state)
-                lanes, fs = enc.bitlen.shape
-                words, tb, _ = bits.pack_bits(
-                    enc.codes.reshape(lanes * fs, 2),
-                    enc.bitlen.reshape(lanes * fs),
-                    lanes * fs * 2 + 2,
-                )
-                return words, tb, enc.bitlen
-
-            self._flush_fn = jax.jit(pack)
+            self._flush_fn = jax.jit(self._flush_pack_body)
         return self._flush_fn(state)
 
     @property
@@ -351,6 +359,7 @@ class CompressionPipeline(BlockedExecutor):
         body = self._scan_body_payload if collect else self._scan_body
         key = "payload" if collect else ""
         for start, length in self._chunks(blocks_dev.shape[0], chunk):
+            self.dispatches += 1
             state, ys = self._scan_fn(length, key=key, body=body)(
                 state, blocks_dev[start : start + length]
             )
@@ -363,11 +372,229 @@ class CompressionPipeline(BlockedExecutor):
         """Per-block dispatch loop (eager strategy / Fig 10b baseline)."""
         bits_out, words_out, blen_out = [], [], []
         for i in range(blocks_dev.shape[0]):
+            self.dispatches += 1
             state, words, tb, blen = self._step(state, blocks_dev[i])
             bits_out.append(tb)
             words_out.append(words)
             blen_out.append(blen)
         return state, bits_out, words_out, blen_out
+
+    # -------------------------------------------------------- gang execution
+    @staticmethod
+    def stack_states(states: List[Any]) -> Any:
+        """Stack per-session codec states along a new leading gang axis.
+
+        Works for stateless codecs too: a `None` state is an empty pytree,
+        so the stacked state is just `None` again."""
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+    @staticmethod
+    def unstack_state(states: Any, i: int) -> Any:
+        """Slice one gang member's state back out of the stacked pytree."""
+        return jax.tree_util.tree_map(lambda x: x[i], states)
+
+    def _gang_step_fn(self):
+        """Jitted vmapped masked step over a leading session axis: ONE
+        dispatch compresses one micro-batch from EACH gang member. jit
+        re-specializes per gang size automatically; every member keeps its
+        own codec state, mask, and bitstream — the stacking is pure
+        data parallelism across sessions (paper §3.4, applied ACROSS
+        streams instead of within one)."""
+        fn = self._scan_fns.get("gang_step")
+        if fn is None:
+            fn = jax.jit(jax.vmap(self.masked_step))
+            self._scan_fns["gang_step"] = fn
+        return fn
+
+    def gang_step(self, states: Any, blocks: jax.Array, masks: jax.Array):
+        """One timed gang dispatch over stacked micro-batches.
+
+        Args: stacked states (leading gang axis), blocks uint32[S, L, B],
+        masks bool[S, L, B]. Returns (states, words[S, OW], total_bits[S],
+        bitlen[S, L*B], wall_s). The first call at a given gang size
+        compiles untimed (memoized), so measured costs stay compute."""
+        fn = self._gang_step_fn()
+        key = ("gang_step", tuple(blocks.shape))
+        if key not in self._warmed:
+            jax.block_until_ready(fn(states, blocks, masks))
+            self._warmed.add(key)
+        t0 = time.perf_counter()
+        self.dispatches += 1
+        states, words, total_bits, bitlen = jax.block_until_ready(
+            fn(states, blocks, masks)
+        )
+        return states, words, total_bits, bitlen, time.perf_counter() - t0
+
+    def _gang_scan_body(self, states: Any, blks: jax.Array):
+        """Scan body for offline gang runs: blks is (S, L, B) — the blocks
+        at one stream position across all gang members."""
+        states, words, tb, blen = jax.vmap(self.step)(states, blks)
+        return states, (tb, words, blen)
+
+    def _pack_flush_gang(self, states: Any):
+        """Vmapped `_flush_pack_body` for stacked states."""
+        fn = self._scan_fns.get("gang_flush")
+        if fn is None:
+            fn = jax.jit(jax.vmap(self._flush_pack_body))
+            self._scan_fns["gang_flush"] = fn
+        return fn(states)
+
+    def execute_gang(
+        self,
+        shaped_list: List[ShapedStream],
+        states: Optional[List[Any]] = None,
+        chunk: Optional[int] = None,
+        finalize: bool = True,
+        collect_payload: bool = False,
+    ) -> Tuple[List[ExecutionResult], float]:
+        """Run S same-geometry streams through ONE gang-batched execution.
+
+        The chunked `lax.scan` of `run_fused` runs with a vmapped body: each
+        scan step compresses stream position b of EVERY member in one
+        dispatch, carrying all members' codec states. Members must share
+        block geometry (full-block count, tail shape); their values, masks
+        and states are independent. Returns (per-member ExecutionResults,
+        gang wall seconds); each member's `wall_s` is the gang wall split
+        evenly — the dispatch is shared, which is the whole point."""
+        S = len(shaped_list)
+        if S == 0:
+            return [], 0.0
+        ref = shaped_list[0]
+        for s in shaped_list[1:]:
+            same_tail = (s.tail is None) == (ref.tail is None) and (
+                s.tail is None or s.tail.shape == ref.tail.shape
+            )
+            if len(s.blocks) != len(ref.blocks) or not same_tail:
+                raise ValueError(
+                    "gang members must share block geometry "
+                    f"({len(ref.blocks)} full + tail {None if ref.tail is None else ref.tail.shape}"
+                    f" vs {len(s.blocks)} full + tail {None if s.tail is None else s.tail.shape})"
+                )
+        n_full = len(ref.blocks)
+        blocks_dev = (
+            jnp.asarray(np.stack([s.blocks for s in shaped_list], axis=1))
+            if n_full
+            else None
+        )  # (n_full, S, L, B)
+        tail_dev = mask_dev = None
+        if ref.tail is not None:
+            tail_dev = jnp.asarray(np.stack([s.tail for s in shaped_list]))
+            mask_dev = jnp.asarray(np.stack([s.tail_mask for s in shaped_list]))
+        if states is None:
+            states = [self.init_state() for _ in range(S)]
+        stacked = self.stack_states(states)
+
+        # untimed compile pass (memoized per gang geometry)
+        wkey = (
+            "gang",
+            S,
+            None if blocks_dev is None else tuple(blocks_dev.shape),
+            None if tail_dev is None else tuple(tail_dev.shape),
+            chunk,
+        )
+        if wkey not in self._warmed:
+            if blocks_dev is not None:
+                warm_state = self.stack_states([self.init_state() for _ in range(S)])
+                for length in sorted({ln for _, ln in self._chunks(n_full, chunk)}):
+                    jax.block_until_ready(
+                        self._scan_fn(length, key="gang", body=self._gang_scan_body)(
+                            warm_state, blocks_dev[:length]
+                        )
+                    )
+            if tail_dev is not None:
+                jax.block_until_ready(
+                    self._gang_step_fn()(stacked, tail_dev, mask_dev)
+                )
+            if finalize and self._has_flush:
+                jax.block_until_ready(self._pack_flush_gang(stacked))
+            self._warmed.add(wkey)
+
+        bits_acc: List[Any] = []  # each (chunk, S) / (S,)
+        words_acc: List[Any] = []
+        blen_acc: List[Any] = []
+        flush_out = None
+        t0 = time.perf_counter()
+        if blocks_dev is not None:
+            for start, length in self._chunks(n_full, chunk):
+                self.dispatches += 1
+                stacked, ys = self._scan_fn(
+                    length, key="gang", body=self._gang_scan_body
+                )(stacked, blocks_dev[start : start + length])
+                bits_acc.append(ys[0])
+                words_acc.append(ys[1])
+                blen_acc.append(ys[2])
+        if tail_dev is not None:
+            self.dispatches += 1
+            stacked, twords, tb, tblen = self._gang_step_fn()(
+                stacked, tail_dev, mask_dev
+            )
+            bits_acc.append(tb)
+            words_acc.append(twords)
+            blen_acc.append(tblen)
+        if finalize and self._has_flush:
+            flush_out = self._pack_flush_gang(stacked)
+            bits_acc.append(flush_out[1])
+        jax.block_until_ready(bits_acc)
+        wall = time.perf_counter() - t0
+
+        flush_slots = self.flush_slots if (finalize and self._has_flush) else 0
+        # host copies once per device buffer (post-timing), then per-member
+        # slicing below is pure NumPy views
+        host_chunks = [
+            (np.asarray(b, np.float64), np.asarray(w), np.asarray(bl, np.int32))
+            for b, w, bl in zip(bits_acc[: len(words_acc)], words_acc, blen_acc)
+        ]
+        host_flush = None
+        if flush_out is not None:
+            host_flush = (
+                np.asarray(flush_out[0]),
+                np.asarray(flush_out[1]),
+                np.asarray(flush_out[2], np.int32),
+            )
+        results = []
+        for i in range(S):
+            member_bits = []
+            member_words: List[np.ndarray] = []
+            member_blen: List[np.ndarray] = []
+            for b, w, bl in host_chunks:
+                if b.ndim == 2:  # fused chunk: (chunk, S)
+                    member_bits.append(b[:, i])
+                    member_words.extend(w[:, i])
+                    member_blen.extend(bl[:, i])
+                else:  # tail gang step: (S,)
+                    member_bits.append(b[i : i + 1])
+                    member_words.append(w[i])
+                    member_blen.append(bl[i])
+            member_flush = None
+            if host_flush is not None:
+                fw, fb, fblen = host_flush
+                member_flush = (fw[i], int(fb[i]), fblen[i])
+                member_bits.append(np.asarray([float(member_flush[1])]))
+            per_block = (
+                np.concatenate([np.atleast_1d(b) for b in member_bits])
+                if member_bits
+                else np.zeros(0, np.float64)
+            )
+            payload = None
+            if collect_payload:
+                payload = self._collect_payload(
+                    shaped_list[i],
+                    member_words,
+                    member_blen,
+                    per_block,
+                    member_flush,
+                )
+            results.append(
+                ExecutionResult(
+                    per_block_bits=per_block,
+                    wall_s=wall / S,
+                    n_tuples=shaped_list[i].n_valid,
+                    state=self.unstack_state(stacked, i),
+                    payload=payload,
+                    flush_slots=flush_slots,
+                )
+            )
+        return results, wall
 
     def warmup(
         self,
@@ -460,6 +687,7 @@ class CompressionPipeline(BlockedExecutor):
             else:
                 state, bits_acc, words_acc, blen_acc = self.run_dispatch(blocks_dev, state)
         if tail_dev is not None:
+            self.dispatches += 1
             state, twords, tb, tblen = self._masked_step(state, tail_dev, mask_dev)
             bits_acc.append(tb)
             words_acc.append(twords)
@@ -470,7 +698,11 @@ class CompressionPipeline(BlockedExecutor):
         jax.block_until_ready(bits_acc)
         wall = time.perf_counter() - t0
 
-        per_block = np.concatenate([np.atleast_1d(np.asarray(b, np.float64)) for b in bits_acc])
+        per_block = (
+            np.concatenate([np.atleast_1d(np.asarray(b, np.float64)) for b in bits_acc])
+            if bits_acc
+            else np.zeros(0, np.float64)
+        )
         payload = None
         flush_slots = self.flush_slots if (finalize and self._has_flush) else 0
         if collect_payload:
@@ -600,7 +832,7 @@ class DecompressionPipeline(BlockedExecutor):
         sample: Optional[np.ndarray] = None,
     ):
         super().__init__(config, sample=sample, codec=codec)
-        self._tail_fns: Dict[Tuple[int, int], Any] = {}
+        self._tail_fn_jit = None  # jit retraces per block shape on its own
         self._stream_decode_fn = None
 
     # ------------------------------------------------------------ scan body
@@ -621,12 +853,10 @@ class DecompressionPipeline(BlockedExecutor):
             return state, codes.reshape(lanes, B, 2)
         return self._decode_block(state, words, bitlen2d)
 
-    def _tail_fn(self, shape: Tuple[int, int]):
-        fn = self._tail_fns.get(shape)
-        if fn is None:
-            fn = jax.jit(self._scan_body)
-            self._tail_fns[shape] = fn
-        return fn
+    def _tail_fn(self):
+        if self._tail_fn_jit is None:
+            self._tail_fn_jit = jax.jit(self._scan_body)
+        return self._tail_fn_jit
 
     def _stream_decode(self, codes: jax.Array, bitlen: jax.Array):
         """Single-dispatch expansion decode for stream-scope codecs."""
@@ -724,7 +954,7 @@ class DecompressionPipeline(BlockedExecutor):
                 outs.extend(ys[i] for i in range(length))
                 blens.extend(full_blens[start + i] for i in range(length))
         for words, bl in extra_blocks:
-            state, y = self._tail_fn(tuple(bl.shape))(state, (words, bl))
+            state, y = self._tail_fn()(state, (words, bl))
             outs.append(y)
             blens.append(bl)
         xs = None

@@ -116,6 +116,64 @@ def plan_execution(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class GangPlan:
+    """Resolved inter-stream gang batching decisions (DESIGN.md §11).
+
+    `max_gang` sessions with the same dispatch signature are stacked along a
+    leading session axis and pushed through ONE vmapped codec dispatch;
+    `quantum_s` is the scheduling quantum the server collects flushes over
+    before firing gangs; `budget` is the per-signature admission budget —
+    a queue longer than this forces an immediate gang dispatch
+    (backpressure) instead of waiting for the quantum edge."""
+
+    max_gang: int
+    quantum_s: float
+    budget: int
+    block_bytes: int  # one gang member's micro-batch footprint
+    cache_bytes: int  # budget the gang working set was sized against
+
+
+#: never stack more sessions than this in one dispatch, regardless of cache
+#: headroom — bounds trace size and per-dispatch latency
+_GANG_MAX = 64
+
+
+def plan_gang(
+    plan: ExecutionPlan,
+    profile: energy_mod.HardwareProfile = None,
+    flush_timeout_s: float = 0.25,
+) -> GangPlan:
+    """Size the gang for one dispatch signature (paper §3.4 applied ACROSS
+    streams): stack sessions while (a) the stacked working set stays inside
+    the cache-aware byte budget (Fig 11's rule, applied to the gang), and
+    (b) the modeled amortized makespan of scheduling the gang's member
+    blocks over the asymmetric profile keeps improving — past the profile's
+    parallel capacity, stacking more members stops amortizing anything."""
+    profile = profile or energy_mod.PROFILES["rk3399_amp"]
+    block_bytes = plan.block_tuples * 4
+    cache_bytes = cache_aware_batch_bytes(profile)
+    cache_cap = max(1, cache_bytes // max(block_bytes, 1))
+    best_g, best_amortized = 1, None
+    for g in range(1, min(cache_cap, _GANG_MAX) + 1):
+        _, _, makespan = schedule_blocks(
+            [1.0] * g, profile.speeds, SchedulingStrategy.ASYMMETRIC
+        )
+        amortized = makespan / g
+        if best_amortized is None or amortized <= best_amortized:
+            best_g, best_amortized = g, amortized
+    return GangPlan(
+        max_gang=best_g,
+        # half a timeout: a quantum never delays a flush past the point where
+        # its successor batch would also be due (waits are stamped at enqueue,
+        # so the quantum shapes dispatch batching, not latency accounting)
+        quantum_s=flush_timeout_s / 2.0,
+        budget=2 * best_g,
+        block_bytes=block_bytes,
+        cache_bytes=cache_bytes,
+    )
+
+
 def cache_aware_batch_bytes(profile: energy_mod.HardwareProfile) -> int:
     """Paper Fig 11: optimal micro-batch ~= total L1D of the active cores.
 

@@ -16,6 +16,15 @@ policy (core/strategies.py `plan_execution`) layers:
     cores via `schedule_blocks` (worker schedule layer) and reports modeled
     makespan + energy next to per-session ratio / throughput / latency.
 
+  * **Gang dispatcher** (`gang=True`, DESIGN.md §11) — sessions flushing
+    within one scheduling quantum with the same (codec, block geometry,
+    dtype) signature are stacked along a leading session axis and pushed
+    through a SINGLE vmapped codec dispatch; per-session states, wire
+    frames and flush records scatter back out bit-identical to solo runs.
+    Per-signature queues buffer flush snapshots between quantum edges, and
+    a queue that exceeds its admission budget dispatches immediately
+    (backpressure).
+
 Arrival replay is a simulation driven by `data/stream.py` timestamps — the
 wall clock measures only compression compute, never the synthetic waiting.
 """
@@ -32,7 +41,13 @@ import numpy as np
 from repro.core import bits, metrics
 from repro.core.energy import PROFILES, edge_energy_j
 from repro.core.pipeline import CompressionPipeline, DecompressionPipeline
-from repro.core.strategies import EngineConfig, SchedulingStrategy, schedule_blocks
+from repro.core.strategies import (
+    EngineConfig,
+    GangPlan,
+    SchedulingStrategy,
+    plan_gang,
+    schedule_blocks,
+)
 
 
 @dataclasses.dataclass
@@ -45,6 +60,35 @@ class FlushRecord:
     mean_wait_s: float  # arrival -> flush wait, averaged over the batch
     max_wait_s: float
     timeout: bool  # flushed by timeout (partial) rather than by size
+
+    def key(self) -> tuple:
+        """Timing-independent identity: every field except the measured
+        cost. Determinism and gang-equivalence tests compare these — two
+        runs of the same feeds must produce identical keys, but wall-clock
+        cost is measurement, not semantics."""
+        return (
+            self.n_tuples,
+            self.bits,
+            round(self.mean_wait_s, 12),
+            round(self.max_wait_s, 12),
+            self.timeout,
+        )
+
+
+@dataclasses.dataclass
+class FlushRequest:
+    """A flush snapshot awaiting compression (the gang dispatcher's unit).
+
+    Everything the latency/ratio accounting needs is captured at snapshot
+    time — padded values, pad mask, per-tuple waits stamped against the
+    flush deadline — so WHEN the gang executes the compression changes
+    nothing but the measured cost."""
+
+    values: np.ndarray  # uint32[capacity], edge-padded past n
+    mask: np.ndarray  # bool[capacity], True = real tuple
+    n: int
+    waits: np.ndarray  # float64[n], arrival -> flush-stamp waits
+    timeout: bool
 
 
 @dataclasses.dataclass
@@ -81,6 +125,7 @@ class ServerReport:
     busy_s: List[float]
     energy_j: float
     aggregate_mbps: float  # input bytes over modeled makespan
+    n_dispatches: int = 0  # kernel launches issued (gangs amortize these)
 
 
 class StreamSession:
@@ -105,6 +150,11 @@ class StreamSession:
         self.flush_timeout_s = flush_timeout_s
         self.lanes = config.lanes
         self.state = self.pipeline.init_state()
+        #: gang hook: when set, `flush` hands its FlushRequest snapshot to
+        #: this callable (the server's per-signature queue) instead of
+        #: compressing inline; results come back through `commit`
+        self.flush_sink = None
+        self._signature: Optional[tuple] = None  # memoized dispatch signature
         self._values = np.zeros(self.capacity, np.uint32)
         self._arrivals = np.zeros(self.capacity, np.float64)
         self._count = 0
@@ -135,11 +185,56 @@ class StreamSession:
     def oldest_arrival(self) -> Optional[float]:
         return float(self._arrivals[0]) if self._count else None
 
+    @property
+    def flush_deadline(self) -> Optional[float]:
+        """When the buffered batch's flush timer fires: oldest arrival +
+        timeout. None with nothing buffered. The ONE definition of the
+        deadline — `poll`, the server's drain path, and tests all read this
+        instead of poking `_arrivals`."""
+        if not self._count:
+            return None
+        return float(self._arrivals[0]) + self.flush_timeout_s
+
+    @property
+    def signature(self) -> tuple:
+        """Gang dispatch signature: sessions stack into one vmapped dispatch
+        only when codec (including resolved/calibrated parameters), block
+        geometry, and dtype all match — anything else would run a member
+        under the wrong kernel or the wrong quantizer. Immutable after
+        construction, so computed once and cached (the sink calls this on
+        every flush)."""
+        if self._signature is None:
+            codec = self.pipeline.codec
+            parts: List[Any] = [
+                codec.name,
+                self.lanes,
+                self.capacity // self.lanes,
+                "uint32",
+            ]
+            for k, v in sorted(vars(codec).items()):
+                if isinstance(v, (bool, int, float, str)):
+                    parts.append((k, v))
+                elif isinstance(v, (np.ndarray, jax.Array)):
+                    # array-valued codec params hash by dtype/shape/bytes
+                    a = np.asarray(v)
+                    parts.append((k, (str(a.dtype), a.shape, a.tobytes())))
+                else:
+                    # refuse rather than hash object identity: a repr/pointer
+                    # key would make identical sessions silently never gang
+                    raise TypeError(
+                        f"codec param {k!r} of {codec.name!r} has "
+                        f"unhashable type {type(v).__name__} for gang "
+                        "signatures"
+                    )
+            self._signature = tuple(parts)
+        return self._signature
+
     def due(self, now: float) -> bool:
         """Size reached, or the oldest buffered tuple timed out."""
         if self._count >= self.capacity:
             return True
-        return self._count > 0 and (now - self._arrivals[0]) >= self.flush_timeout_s
+        deadline = self.flush_deadline
+        return deadline is not None and now >= deadline
 
     def poll(self, now: float) -> Optional[FlushRecord]:
         """Fire the flush timer if it is due by `now`. The flush is stamped
@@ -149,8 +244,7 @@ class StreamSession:
         stopped waiting when the timer fired."""
         if not self.due(now):
             return None
-        deadline = float(self._arrivals[0]) + self.flush_timeout_s
-        return self.flush(now=min(now, deadline))
+        return self.flush(now=min(now, self.flush_deadline))
 
     def offer(self, value: int, ts: float) -> Optional[FlushRecord]:
         """Buffer one tuple; flush (and return the record) when full."""
@@ -164,16 +258,25 @@ class StreamSession:
     def offer_many(self, values: np.ndarray, tss: np.ndarray) -> List[FlushRecord]:
         """Buffer a run of tuples (same topic, ascending timestamps),
         flushing whenever a batch fills OR a batch's deadline (oldest
-        arrival + timeout) passes before the next tuple arrives."""
+        arrival + timeout) passes before the next tuple arrives.
+
+        Returns the records of flushes executed inline; in gang mode
+        (`flush_sink` set) flushes only enqueue, so the list is empty and
+        their records land in `self.flushes` at gang dispatch."""
         out: List[FlushRecord] = []
+
+        def _flushed(rec: Optional[FlushRecord]) -> None:
+            if rec is not None:
+                out.append(rec)
+
         i, n = 0, len(values)
         while i < n:
             if self._count == 0:
                 deadline = float(tss[i]) + self.flush_timeout_s
             else:
-                deadline = float(self._arrivals[0]) + self.flush_timeout_s
+                deadline = self.flush_deadline
                 if float(tss[i]) > deadline:  # timer fired before this tuple
-                    out.append(self.flush(now=deadline))
+                    _flushed(self.flush(now=deadline))
                     continue
             space = self.capacity - self._count
             # tuples that arrive before the current batch's deadline join it
@@ -184,7 +287,7 @@ class StreamSession:
             self._count += take
             i += take
             if self._count >= self.capacity:
-                out.append(self.flush(now=float(tss[i - 1])))
+                _flushed(self.flush(now=float(tss[i - 1])))
         return out
 
     # -------------------------------------------------------------- flush
@@ -208,29 +311,55 @@ class StreamSession:
         vals[:n] = self._values[:n]
         mask = np.zeros(self.capacity, bool)
         mask[:n] = True
-        block = jnp.asarray(vals.reshape(self.lanes, -1))
-        mask_dev = jnp.asarray(mask.reshape(self.lanes, -1))
+        req = FlushRequest(
+            values=vals,
+            mask=mask,
+            n=n,
+            waits=np.maximum(now - self._arrivals[:n], 0.0),
+            timeout=n < self.capacity,
+        )
+        self._count = 0
+        if self.flush_sink is not None:
+            # gang mode: the snapshot queues for a gang dispatch; the record
+            # lands in `self.flushes` when the server scatters results back
+            self.flush_sink(self, req)
+            return None
+        return self.compress_request(req)
+
+    def compress_request(self, req: FlushRequest) -> FlushRecord:
+        """Compress one flush snapshot inline (the solo dispatch path)."""
+        block = jnp.asarray(req.values.reshape(self.lanes, -1))
+        mask_dev = jnp.asarray(req.mask.reshape(self.lanes, -1))
         t0 = time.perf_counter()
-        self.state, words, total_bits, bitlen = jax.block_until_ready(
+        self.pipeline.dispatches += 1
+        state, words, total_bits, bitlen = jax.block_until_ready(
             self.pipeline._masked_step(self.state, block, mask_dev)
         )
         cost = time.perf_counter() - t0
+        return self.commit(req, state, words, total_bits, bitlen, cost)
+
+    def commit(
+        self, req: FlushRequest, state, words, total_bits, bitlen, cost_s: float
+    ) -> FlushRecord:
+        """Install one compressed flush's results — shared by the inline
+        path and the gang scatter. Ordering contract: a session's requests
+        commit in flush order, each consuming the state the previous one
+        produced."""
+        self.state = state
         if self.egress:  # host copies after the timed region
             self._egress_blocks.append(
-                (np.asarray(words), int(total_bits), np.asarray(bitlen, np.int32), n)
+                (np.asarray(words), int(total_bits), np.asarray(bitlen, np.int32), req.n)
             )
-            self._egress_values.append(self._values[:n].copy())
-        waits = np.maximum(now - self._arrivals[:n], 0.0)
+            self._egress_values.append(req.values[: req.n].copy())
         rec = FlushRecord(
-            n_tuples=n,
+            n_tuples=req.n,
             bits=float(total_bits),
-            cost_s=cost,
-            mean_wait_s=float(waits.mean()),
-            max_wait_s=float(waits.max()),
-            timeout=n < self.capacity,
+            cost_s=cost_s,
+            mean_wait_s=float(req.waits.mean()),
+            max_wait_s=float(req.waits.max()),
+            timeout=req.timeout,
         )
         self.flushes.append(rec)
-        self._count = 0
         return rec
 
     # ------------------------------------------------------------- egress
@@ -330,7 +459,16 @@ class StreamSession:
 
 class StreamServer:
     """Admits N concurrent sessions; flushes size-or-timeout; schedules
-    flushed blocks across the hardware profile."""
+    flushed blocks across the hardware profile.
+
+    With `gang=True` the server runs the cross-session gang dispatcher
+    (DESIGN.md §11): sessions that flush within the same scheduling quantum
+    with the same (codec, block geometry, dtype) signature are stacked
+    along a leading session axis and compressed by ONE vmapped dispatch,
+    then results/frames/metrics scatter back per session. Per-signature
+    queues hold flush snapshots between quantum edges; a queue that exceeds
+    its admission budget forces an immediate dispatch (backpressure), so
+    deferred work is bounded."""
 
     def __init__(
         self,
@@ -339,6 +477,10 @@ class StreamServer:
         max_sessions: int = 16,
         flush_timeout_s: float = 0.25,
         egress: bool = False,
+        gang: bool = False,
+        gang_quantum_s: Optional[float] = None,
+        max_gang: Optional[int] = None,
+        gang_budget: Optional[int] = None,
     ):
         self.profile = PROFILES[profile]
         self.scheduling = scheduling
@@ -349,6 +491,100 @@ class StreamServer:
         #: throughput/latency/energy
         self.egress = egress
         self.sessions: Dict[str, StreamSession] = {}
+        # ---- gang dispatcher state ----------------------------------------
+        self.gang = gang
+        self.gang_quantum_s = gang_quantum_s
+        self.max_gang = max_gang
+        self.gang_budget = gang_budget
+        #: per-signature FIFO of (session, FlushRequest) awaiting a gang
+        self._queues: Dict[tuple, List[Tuple[StreamSession, FlushRequest]]] = {}
+        #: per-signature session whose (compiled) pipeline runs the gangs
+        self._gang_owner: Dict[tuple, StreamSession] = {}
+        self._gang_plans: Dict[tuple, GangPlan] = {}
+
+    # ------------------------------------------------------ gang dispatcher
+    def _enqueue_flush(self, session: StreamSession, req: FlushRequest) -> None:
+        """Session flush sink: queue the snapshot under its signature.
+
+        Backpressure: when a signature's queue reaches its admission
+        budget, the dispatcher fires immediately instead of waiting for
+        the quantum edge — deferred flushes stay bounded even if one
+        signature's sessions all burst at once."""
+        sig = session.signature
+        q = self._queues.setdefault(sig, [])
+        q.append((session, req))
+        plan = self._gang_plans[sig]
+        budget = self.gang_budget if self.gang_budget is not None else plan.budget
+        if len(q) >= budget:
+            self._dispatch_signature(sig)
+
+    def _dispatch_all(self) -> None:
+        """Quantum edge: drain every signature's queue as gang waves.
+
+        Iteration follows queue creation order (first flush wins), which is
+        deterministic because `run` replays merged arrivals over sorted
+        topics — no dependence on feed dict ordering."""
+        for sig in list(self._queues):
+            self._dispatch_signature(sig)
+
+    def _dispatch_signature(self, sig: tuple) -> None:
+        q = self._queues.get(sig)
+        if not q:
+            return
+        plan = self._gang_plans[sig]
+        cap = self.max_gang if self.max_gang is not None else plan.max_gang
+        while q:
+            # one wave: the oldest pending request of each distinct session,
+            # up to the planned gang size. A session with several queued
+            # flushes keeps FIFO order across waves (state carries).
+            wave: List[Tuple[StreamSession, FlushRequest]] = []
+            in_wave = set()
+            rest: List[Tuple[StreamSession, FlushRequest]] = []
+            for s, req in q:
+                if s.topic not in in_wave and len(wave) < cap:
+                    in_wave.add(s.topic)
+                    wave.append((s, req))
+                else:
+                    rest.append((s, req))
+            q[:] = rest
+            self._execute_wave(sig, wave)
+
+    def _execute_wave(
+        self, sig: tuple, wave: List[Tuple[StreamSession, FlushRequest]]
+    ) -> None:
+        """Compress one gang wave: stack members' batches/masks/states,
+        run ONE vmapped dispatch on the signature owner's pipeline, and
+        scatter states, bitstreams and flush records back per member.
+        Degenerate single-member waves take the inline solo path — exactly
+        what a non-gang server would have run."""
+        if len(wave) == 1:
+            s, req = wave[0]
+            s.compress_request(req)
+            return
+        owner = self._gang_owner[sig]
+        pipe = owner.pipeline
+        lanes = owner.lanes
+        states = pipe.stack_states([s.state for s, _ in wave])
+        blocks = jnp.asarray(
+            np.stack([req.values.reshape(lanes, -1) for _, req in wave])
+        )
+        masks = jnp.asarray(
+            np.stack([req.mask.reshape(lanes, -1) for _, req in wave])
+        )
+        states, words, tbs, bitlens, wall = pipe.gang_step(states, blocks, masks)
+        words_np = np.asarray(words)
+        tb_np = np.asarray(tbs)
+        bl_np = np.asarray(bitlens, np.int32)
+        cost = wall / len(wave)  # the dispatch is shared; so is its cost
+        for i, (s, req) in enumerate(wave):
+            s.commit(
+                req,
+                pipe.unstack_state(states, i),
+                words_np[i],
+                int(tb_np[i]),
+                bl_np[i],
+                cost,
+            )
 
     # -------------------------------------------------------------- admit
     def admit(
@@ -376,6 +612,18 @@ class StreamServer:
             egress=self.egress,
         )
         self.sessions[topic] = session
+        if self.gang:
+            session.flush_sink = self._enqueue_flush
+            sig = session.signature
+            if sig not in self._gang_owner:
+                # first session of a signature owns the gang's compiled
+                # pipeline and fixes the gang plan for that signature
+                self._gang_owner[sig] = session
+                self._gang_plans[sig] = plan_gang(
+                    session.pipeline.plan,
+                    self.profile,
+                    flush_timeout_s=session.flush_timeout_s,
+                )
         return session
 
     def session(self, topic: str) -> StreamSession:
@@ -409,6 +657,33 @@ class StreamServer:
         order = np.argsort(all_ts, kind="stable")
 
         sess = [self.sessions[t] for t in topics]
+        # gang mode: collect flush snapshots between quantum edges; fire a
+        # signature's gang dispatch whenever the simulated clock crosses its
+        # next edge. Quanta come from the signature's GangPlan (half its
+        # sessions' flush timeout) unless the server pins one globally.
+        next_edges: Dict[tuple, float] = {}
+
+        def _quantum(sig: tuple) -> float:
+            if self.gang_quantum_s is not None:
+                return self.gang_quantum_s
+            return self._gang_plans[sig].quantum_s
+
+        def _poll_gang_edges(now: float) -> None:
+            for sig in list(self._queues):
+                if not self._queues[sig]:
+                    # drained (quantum or backpressure): drop the stale edge
+                    # so the next burst collects a fresh quantum instead of
+                    # firing an un-amortized wave of 1 on its first flush
+                    next_edges.pop(sig, None)
+                    continue
+                q_s = _quantum(sig)
+                edge = next_edges.get(sig)
+                if edge is None:
+                    next_edges[sig] = (np.floor(now / q_s) + 1.0) * q_s
+                elif now >= edge:
+                    self._dispatch_signature(sig)
+                    next_edges[sig] = (np.floor(now / q_s) + 1.0) * q_s
+
         # walk the merged order in runs of equal topic so full batches move
         # through offer_many; timeout flushes fire as the clock advances
         i, n = 0, len(order)
@@ -422,11 +697,15 @@ class StreamServer:
             sess[tpi].offer_many(values[tpi][run_idx], tss[tpi][run_idx])
             for s in sess:
                 s.poll(now)
+            if self.gang:
+                _poll_gang_edges(now)
             i = j
         # drain: every residual batch's timer fires after its oldest arrival
         for s in sess:
             if s.buffered:
-                s.flush(float(s._arrivals[0]) + s.flush_timeout_s)
+                s.flush(s.flush_deadline)
+        if self.gang:
+            self._dispatch_all()
 
         return self.report(topics)
 
@@ -449,6 +728,10 @@ class StreamServer:
         total_tuples = sum(r.n_tuples for r in reports.values())
         input_bytes = sum(r.input_bytes for r in reports.values())
         output_bytes = sum(r.output_bytes for r in reports.values())
+        # over ALL admitted sessions, not just the reported topics: gang
+        # waves count on the signature owner's pipeline, and the owner may
+        # not be among the fed topics
+        n_dispatches = sum(s.pipeline.dispatches for s in self.sessions.values())
         return ServerReport(
             sessions=reports,
             n_sessions=len(sess),
@@ -461,4 +744,5 @@ class StreamServer:
             busy_s=busy,
             energy_j=energy,
             aggregate_mbps=input_bytes / 1e6 / max(makespan, 1e-12),
+            n_dispatches=n_dispatches,
         )

@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # LM-stack tier: CI runs it separately
+
 from repro.configs import arch_ids, get_arch
 from repro.launch.steps import TrainStepConfig, make_train_step
 from repro.models import decode_step, forward, init_params, prefill

@@ -1,0 +1,201 @@
+"""Cross-session gang dispatcher (DESIGN.md §11): equivalence, dispatch
+amortization, signature keying, backpressure, and the offline engine gang.
+
+The load-bearing property is EQUIVALENCE: stacking sessions into one
+vmapped dispatch must change nothing observable except the dispatch count —
+flush records (up to measured cost), egress frames and fidelity all come
+back bit-identical to sessions run individually, including stateful codecs
+(RLE's carried runs, ADPCM's predictor) whose state would corrupt every
+later micro-batch if the gang scattered it wrong.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import CStreamEngine
+from repro.core.pipeline import CompressionPipeline
+from repro.core.strategies import EngineConfig, GangPlan, plan_gang, plan_execution
+from repro.data import make_dataset
+from repro.data.stream import rate_for_dataset, uniform_timestamps, zipf_timestamps
+from repro.runtime.server import StreamServer
+
+#: stateful codecs (rle: carried runs / stream-scope decode; adpcm: predictor
+#: replay) ride next to stateless ones — gang scatter must keep each straight
+MIX = [("tcomp32", "micro"), ("rle", "sensor"), ("adpcm", "ecg"), ("tdic32", "rovio")]
+
+
+def _cfg(codec, **kw):
+    base = dict(codec=codec, micro_batch_bytes=2048, lanes=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _run_mixed_server(gang: bool, n_sessions: int = 8, n: int = 3000):
+    rate = rate_for_dataset(1)
+    server = StreamServer(max_sessions=16, egress=True, gang=gang)
+    feeds = {}
+    for i in range(n_sessions):
+        codec, ds = MIX[i % len(MIX)]
+        vals = make_dataset(ds, n_tuples=n).stream()[:n]
+        topic = f"{codec}-{i}"
+        server.admit(topic, _cfg(codec), sample=vals)
+        # bursty zipf arrivals force mid-stream timeout flushes (pads)
+        feeds[topic] = (vals, zipf_timestamps(n, rate, zipf_factor=0.7, seed=i))
+    return server, server.run(feeds)
+
+
+def test_gang_bit_identical_to_solo_sessions():
+    """Gang-dispatched sessions produce bit-identical frames, records and
+    fidelity to the same sessions run individually — with stateful codecs
+    and mid-stream timeout pads in the mix."""
+    solo_srv, solo_rep = _run_mixed_server(gang=False)
+    gang_srv, gang_rep = _run_mixed_server(gang=True)
+
+    assert solo_rep.total_tuples == gang_rep.total_tuples
+    some_timeout = False
+    for topic in solo_srv.sessions:
+        a = solo_srv.sessions[topic]
+        b = gang_srv.sessions[topic]
+        # flush sequences identical up to measured cost
+        assert [f.key() for f in a.flushes] == [f.key() for f in b.flushes], topic
+        some_timeout |= any(f.timeout for f in a.flushes)
+        # egress frames are the same bytes on the wire
+        assert a.egress_frame().to_bytes() == b.egress_frame().to_bytes(), topic
+        fa, wa, _ = a.egress_fidelity()
+        fb, wb, _ = b.egress_fidelity()
+        assert wa == wb
+        assert (fa.bit_exact, fa.max_abs) == (fb.bit_exact, fb.max_abs), topic
+        assert fa.within_bound and fb.within_bound, topic
+    assert some_timeout  # the workload genuinely exercised partial flushes
+    # and the gang actually amortized launches
+    assert gang_rep.n_dispatches < solo_rep.n_dispatches
+
+
+def test_gang_quarter_dispatches_same_codec():
+    """8 same-codec sessions with aligned (uniform) arrivals: the gang
+    dispatcher must issue <= 1/4 the launches of per-session flushing
+    (acceptance criterion; in practice one wave of 8 per flush round)."""
+    n, rate = 4096, rate_for_dataset(1)
+
+    def run(gang):
+        server = StreamServer(max_sessions=16, gang=gang)
+        feeds = {}
+        for i in range(8):
+            vals = make_dataset("micro", n_tuples=n).stream()[:n]
+            server.admit(f"s{i}", _cfg("tcomp32"), sample=vals)
+            feeds[f"s{i}"] = (vals, uniform_timestamps(n, rate))
+        return server.run(feeds)
+
+    solo = run(False)
+    gang = run(True)
+    assert solo.total_tuples == gang.total_tuples == 8 * n
+    assert gang.n_dispatches <= solo.n_dispatches / 4
+    assert gang.n_dispatches >= 1
+
+
+def test_gang_signatures_key_on_codec_and_geometry():
+    """Sessions gang only with matching (codec, params, geometry, dtype):
+    different codecs, different quantizer params and different capacities
+    all produce distinct signatures."""
+    a = StreamServer(gang=True).admit("a", _cfg("tcomp32"))
+    b = StreamServer(gang=True).admit("b", _cfg("tcomp32"))
+    assert a.signature == b.signature  # same config => same gang
+    c = StreamServer(gang=True).admit("c", _cfg("tdic32"))
+    assert a.signature != c.signature  # codec differs
+    d = StreamServer(gang=True).admit(
+        "d", _cfg("pla", codec_kwargs=dict(eps=4.0), calibrate=False)
+    )
+    e = StreamServer(gang=True).admit(
+        "e", _cfg("pla", codec_kwargs=dict(eps=8.0), calibrate=False)
+    )
+    assert d.signature != e.signature  # quantizer params differ
+    f = StreamServer(gang=True).admit("f", _cfg("tcomp32"), flush_tuples=1024)
+    assert a.signature != f.signature  # block geometry differs
+
+
+def test_gang_backpressure_budget_forces_dispatch():
+    """A signature queue that reaches its admission budget dispatches
+    immediately instead of waiting for the quantum edge."""
+    server = StreamServer(gang=True, gang_budget=2, flush_timeout_s=1e9)
+    sessions = [server.admit(f"s{i}", _cfg("tcomp32")) for i in range(3)]
+    cap = sessions[0].capacity
+    # fill two sessions exactly: their size-triggered flushes enqueue, and
+    # the second enqueue hits the budget -> wave fires without any quantum
+    for i, s in enumerate(sessions[:2]):
+        s.offer_many(
+            np.arange(cap, dtype=np.uint32), np.full(cap, 0.001 * i, np.float64)
+        )
+    assert all(len(s.flushes) == 1 for s in sessions[:2])
+    assert len(sessions[2].flushes) == 0
+    # queue drained by the forced wave
+    assert all(not q for q in server._queues.values())
+
+
+def test_gang_max_cap_splits_waves():
+    """max_gang=2 on 4 concurrent same-signature flushes yields 2 waves."""
+    server = StreamServer(gang=True, max_gang=2, gang_budget=10**9, flush_timeout_s=1e9)
+    sessions = [server.admit(f"s{i}", _cfg("tcomp32")) for i in range(4)]
+    cap = sessions[0].capacity
+    d0 = sum(s.pipeline.dispatches for s in sessions)
+    for s in sessions:
+        s.offer_many(np.arange(cap, dtype=np.uint32), np.zeros(cap, np.float64))
+    server._dispatch_all()
+    assert all(len(s.flushes) == 1 for s in sessions)
+    assert sum(s.pipeline.dispatches for s in sessions) - d0 == 2
+
+
+def test_engine_gang_compress_bit_identical():
+    """Offline gang: same-config streams through `gang_compress` produce
+    frames bit-identical to solo `compress` runs, and fewer dispatches."""
+    rng = np.random.default_rng(7)
+    streams = [
+        np.clip(np.cumsum(rng.integers(-8, 9, size=5000)) + 4096, 0, 65535).astype(
+            np.uint32
+        )
+        for _ in range(4)
+    ]
+    eng = CStreamEngine(_cfg("tcomp32"), sample=streams[0])
+    res = eng.gang_compress(streams, emit_frames=True)
+    assert res.n_streams == 4
+    # the whole gang moved through fewer launches than one per stream
+    assert res.dispatches < len(streams)
+    for src, r in zip(streams, res.results):
+        solo = eng.compress(src, emit_frame=True)
+        assert solo.frame.to_bytes() == r.frame.to_bytes()
+        assert r.total_bits == solo.total_bits
+        assert np.array_equal(eng.decompress(r.frame), src)
+
+
+def test_engine_gang_compress_stateful_rle():
+    """RLE's carried open run survives gang scatter: constant streams whose
+    entire payload is the flush mini-block roundtrip exactly."""
+    eng = CStreamEngine(_cfg("rle"))
+    bt = eng.pipeline.block_tuples
+    streams = [np.full(2 * bt + 5, 10 + k, np.uint32) for k in range(3)]
+    res = eng.gang_compress(streams, emit_frames=True)
+    for src, r in zip(streams, res.results):
+        assert np.array_equal(eng.decompress(r.frame), src)
+        assert r.frame.to_bytes() == eng.compress(src, emit_frame=True).frame.to_bytes()
+
+
+def test_execute_gang_rejects_mismatched_geometry():
+    pipe = CompressionPipeline(_cfg("tcomp32"))
+    bt = pipe.block_tuples
+    a = pipe.shape_blocks(np.arange(2 * bt, dtype=np.uint32))
+    b = pipe.shape_blocks(np.arange(3 * bt, dtype=np.uint32))
+    with pytest.raises(ValueError, match="block geometry"):
+        pipe.execute_gang([a, b])
+
+
+def test_plan_gang_cache_and_profile_aware():
+    """Gang sizing: bounded by the cache-aware byte budget over the block
+    footprint, and never degenerate."""
+    plan = plan_execution(_cfg("tcomp32"))
+    gp = plan_gang(plan, flush_timeout_s=0.25)
+    assert isinstance(gp, GangPlan)
+    assert 1 <= gp.max_gang <= max(1, gp.cache_bytes // gp.block_bytes)
+    assert gp.max_gang >= 8  # 2 KB blocks against a 192 KB L1D budget
+    assert gp.budget >= gp.max_gang
+    assert gp.quantum_s == pytest.approx(0.125)
+    # a block that fills the whole cache budget cannot gang at all
+    big = plan_execution(_cfg("tcomp32", micro_batch_bytes=4 << 20))
+    assert plan_gang(big).max_gang == 1

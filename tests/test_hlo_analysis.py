@@ -3,6 +3,9 @@ programs (this is measurement infrastructure — it must be exact)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # LM-stack tier: CI runs it separately
 
 from repro.launch.hlo_analysis import HloModuleCost, analyze_hlo, roofline
 

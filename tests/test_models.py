@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # LM-stack tier: CI runs it separately
+
 from repro.models import ModelConfig, decode_step, forward, init_params, loss_fn, prefill
 from repro.models.layers import flash_attention
 from repro.models.rglru import causal_conv1d, init_rglru, rglru_apply, init_rglru_state

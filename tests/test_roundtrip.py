@@ -1,6 +1,11 @@
 """Egress path: engine roundtrips through the framed bitstream for every
 registered codec, flush finalization, the eager-alignment plan fix, the
-decompression executor, and per-session server egress fidelity."""
+decompression executor, and per-session server egress fidelity.
+
+Stream-length coverage (0, 1, sub-alignment, block boundaries, ragged
+tails × value distributions) lives in `test_property_roundtrip.py` — this
+module keeps the calibrated-engine quality checks (nrmse on suited data)
+and the executor-shape assertions the property suite doesn't make."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -37,7 +42,9 @@ def _cfg(codec, **kw):
 def test_engine_roundtrip_every_codec(name):
     """Acceptance: engine.roundtrip(x) through the framed bitstream is
     bit-exact for lossless codecs and within the codec's configured error
-    bound for lossy ones."""
+    bound for lossy ones — here with CALIBRATED engines on codec-suited
+    data (quality: nrmse), while `test_property_roundtrip.py` sweeps the
+    generated length × distribution space with pinned quantizers."""
     src = _stream_for(name)
     eng = CStreamEngine(_cfg(name), sample=src)
     rt = eng.roundtrip(src)

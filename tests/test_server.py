@@ -127,3 +127,77 @@ def test_unknown_topic_feed_rejected():
     server.admit("known", _cfg("tcomp32"))
     with pytest.raises(KeyError):
         server.run({"unknown": (np.zeros(4, np.uint32), np.zeros(4))})
+
+
+# ------------------------------------------------------------- determinism --
+def _determinism_feeds(n=2500):
+    rate = rate_for_dataset(1)
+    feeds = {}
+    for i in range(4):
+        codec, dataset = MIX[i % len(MIX)]
+        vals = make_dataset(dataset, n_tuples=n).stream()[:n]
+        feeds[f"{dataset}-{i}"] = (
+            codec,
+            vals,
+            zipf_timestamps(n, rate, zipf_factor=0.7, seed=i),
+        )
+    return feeds
+
+
+def _run_once(feeds, order, gang=False):
+    server = StreamServer(max_sessions=8, egress=True, gang=gang)
+    for topic in order:
+        codec, vals, _ = feeds[topic]
+        server.admit(topic, _cfg(codec), sample=vals)
+    rep = server.run({t: (feeds[t][1], feeds[t][2]) for t in order})
+    records = {
+        t: [f.key() for f in server.sessions[t].flushes] for t in feeds
+    }
+    frames = {t: server.sessions[t].egress_frame().to_bytes() for t in feeds}
+    return rep, records, frames
+
+
+@pytest.mark.parametrize("gang", [False, True])
+def test_server_run_deterministic_across_repeats_and_feed_order(gang):
+    """Same feeds => identical flush-record sequences and wire bytes, on a
+    repeat run AND with the feed/admission dict ordering reversed. Timeout
+    flushes are in the mix (zipf arrivals), so deadline stamping is
+    covered; only the measured per-flush cost may differ."""
+    feeds = _determinism_feeds()
+    order_a = sorted(feeds)
+    order_b = list(reversed(order_a))
+    rep1, rec1, frames1 = _run_once(feeds, order_a, gang=gang)
+    rep2, rec2, frames2 = _run_once(feeds, order_a, gang=gang)  # repeat
+    rep3, rec3, frames3 = _run_once(feeds, order_b, gang=gang)  # reordered
+    assert rec1 == rec2 == rec3
+    assert frames1 == frames2 == frames3
+    assert rep1.total_tuples == rep2.total_tuples == rep3.total_tuples
+    assert rep1.total_output_bytes == rep2.total_output_bytes == rep3.total_output_bytes
+    assert any(f[4] for recs in rec1.values() for f in recs)  # timeout seen
+
+
+# --------------------------------------------------------- drain deadline --
+def test_drain_uses_public_flush_deadline():
+    """Satellite: the run() drain path flushes residual batches at the
+    session's public `flush_deadline` (oldest arrival + timeout), not at
+    some private-array poke time. Waits are therefore bounded by the
+    timeout no matter when the replay ends."""
+    timeout = 0.25
+    server = StreamServer(flush_timeout_s=timeout)
+    server.admit("t", _cfg("tcomp32"))
+    session = server.session("t")
+    vals = np.arange(8, dtype=np.uint32)
+    tss = np.linspace(100.0, 100.01, 8)  # trickle: never fills, never due
+    rep = server.run({"t": (vals, tss)})
+    r = rep.sessions["t"]
+    assert r.n_tuples == 8 and r.n_timeout_flushes == 1
+    rec = session.flushes[0]
+    # stamped at deadline = oldest arrival + timeout: the oldest tuple
+    # waited exactly the timeout, the newest exactly timeout - 0.01
+    assert rec.max_wait_s == pytest.approx(timeout, abs=1e-9)
+    assert rec.mean_wait_s == pytest.approx(timeout - 0.005, abs=1e-6)
+    # the property is live (not buffered => no deadline)
+    assert session.flush_deadline is None
+    session.offer(1, ts=5.0)
+    assert session.flush_deadline == pytest.approx(5.0 + timeout)
+

@@ -4,6 +4,8 @@ its production-mesh axis size (the static version of what the dry-run
 proves by compiling)."""
 import jax
 import pytest
+
+pytestmark = pytest.mark.slow  # LM-stack tier: CI runs it separately
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import arch_ids, get_arch
