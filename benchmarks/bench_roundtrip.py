@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import engine_cfg, fmt_table, stream_for
+from benchmarks.common import fmt_table, job_spec, stream_for
 
 
 #: codec -> dataset it suits (paper Fig 5: no codec wins everywhere)
@@ -40,7 +40,7 @@ def _stream(name: str, quick: bool) -> np.ndarray:
 
 
 def run(quick: bool = True) -> dict:
-    from repro.core.engine import CStreamEngine
+    from repro import cstream
 
     rows = []
     for codec, ds in CODEC_STREAMS:
@@ -48,8 +48,10 @@ def run(quick: bool = True) -> dict:
         # calibrate on the WHOLE stream: the quantizer's error bound only
         # holds for in-range values; a prefix sample would let later values
         # clip past vmax and void the contract this bench is checking
-        eng = CStreamEngine(engine_cfg(codec, quick), sample=stream)
-        rt = eng.roundtrip(stream)  # warmups inside; walls measure compute
+        handle = cstream.open(job_spec(codec, quick, egress=True), sample=stream)
+        handle.push(stream)
+        handle.flush()  # warmups inside; walls measure compute
+        rt = handle.close().roundtrips[0]
         fid = rt.fidelity
         mb = rt.fidelity.n_tuples * 4 / 1e6
         enc_s = rt.compress.stats.wall_s
@@ -67,7 +69,7 @@ def run(quick: bool = True) -> dict:
             "bound": fid.bound,
             "within_bound": fid.within_bound,
             "nrmse": fid.nrmse,
-            "lossy": eng.codec.meta.lossy,
+            "lossy": handle.plan.cap.lossy,
         })
 
     print(fmt_table(

@@ -4,9 +4,10 @@ Three claims the runtime must earn:
   * the fused `lax.scan` executor beats the per-block dispatch loop by >= 2x
     on the SAME blocks (paper Fig 10b: dispatch overhead is 'blocked time';
     fusing removes it from the hot path);
-  * `StreamServer` sustains many concurrent sessions (mixed codecs, bursty
-    zipf arrivals) with per-session ratio/throughput/latency/energy, and
-    aggregate throughput scales with the session count;
+  * the serving runtime (`cstream.Dispatcher` session handles) sustains many
+    concurrent sessions (mixed codecs, bursty zipf arrivals) with per-session
+    ratio/throughput/latency/energy, and aggregate throughput scales with the
+    session count;
   * the cross-session gang dispatcher (DESIGN.md §11) issues <= 1/4 the
     dispatches of per-session flushing on an 8-session same-codec workload,
     with >= 1.5x compression throughput — the paper's across-stream
@@ -16,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import engine_cfg, fmt_table, stream_for
+from benchmarks.common import fmt_table, job_spec, stream_for
 
 
 #: per-session codec + dataset mix (codec chosen per paper Fig 5: no codec
@@ -30,12 +31,13 @@ SESSION_MIX = [
 
 
 def _fused_vs_dispatch(quick: bool) -> dict:
+    from repro import cstream
     from repro.core.pipeline import CompressionPipeline
-    from repro.core import metrics
 
     stream = stream_for("rovio", quick)
-    cfg = engine_cfg("tcomp32", quick, micro_batch_bytes=1024)
-    pipe = CompressionPipeline(cfg, sample=stream[: 1 << 14])
+    spec = job_spec("tcomp32", quick, micro_batch_bytes=1024)
+    plan = cstream.negotiate(spec.calibrated(stream[: 1 << 14]))
+    pipe = CompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
     shaped = pipe.shape_blocks(stream, max_blocks=256 if quick else 1024)
 
     # best-of-2 each way: host timer noise must not decide the claim
@@ -58,25 +60,22 @@ def _fused_vs_dispatch(quick: bool) -> dict:
 
 
 def _multi_stream(quick: bool, n_sessions: int) -> dict:
-    from repro.core.strategies import EngineConfig
+    from repro import cstream
     from repro.data.stream import rate_for_dataset, zipf_timestamps
-    from repro.runtime.server import StreamServer
 
     n_tuples = (1 << 12) if quick else (1 << 14)
     rate = rate_for_dataset(1)
-    server = StreamServer(max_sessions=max(16, n_sessions))
-    feeds = {}
+    dispatcher = cstream.Dispatcher(max_sessions=max(16, n_sessions))
     for i in range(n_sessions):
         codec, dataset = SESSION_MIX[i % len(SESSION_MIX)]
         vals = stream_for(dataset, quick=True)[:n_tuples]
-        topic = f"{dataset}-{i}"
-        server.admit(
-            topic,
-            EngineConfig(codec=codec, micro_batch_bytes=2048, lanes=4),
+        handle = dispatcher.open(
+            cstream.JobSpec(codec=codec, micro_batch_bytes=2048, lanes=4),
+            topic=f"{dataset}-{i}",
             sample=vals,
         )
-        feeds[topic] = (vals, zipf_timestamps(len(vals), rate, zipf_factor=0.6, seed=i))
-    rep = server.run(feeds)
+        handle.push(vals, zipf_timestamps(len(vals), rate, zipf_factor=0.6, seed=i))
+    rep = dispatcher.run()
     return {
         "sessions": n_sessions,
         "tuples": rep.total_tuples,
@@ -97,29 +96,28 @@ def _gang_vs_per_session(quick: bool, n_sessions: int = 8) -> dict:
     a single record or frame. Streams are long enough that each mode issues
     hundreds of launches — per-launch timer noise must not decide a 4x
     dispatch-count claim."""
-    from repro.core.strategies import EngineConfig
+    from repro import cstream
     from repro.data.stream import rate_for_dataset, uniform_timestamps
-    from repro.runtime.server import StreamServer
 
     n_tuples = (1 << 14) if quick else (1 << 16)
     rate = rate_for_dataset(1)
     vals = [stream_for("rovio", quick=True)[:n_tuples] for _ in range(n_sessions)]
 
     def run_server(gang: bool):
-        server = StreamServer(max_sessions=max(16, n_sessions), gang=gang)
-        feeds = {}
+        dispatcher = cstream.Dispatcher(max_sessions=max(16, n_sessions), gang=gang)
         for i in range(n_sessions):
-            topic = f"s{i}"
-            server.admit(
-                topic,
+            handle = dispatcher.open(
                 # 1 KB micro-batches: the dispatch-overhead-dominated regime
                 # the gang targets (paper Fig 11's left slope)
-                EngineConfig(codec="tcomp32", micro_batch_bytes=1024, lanes=4),
+                cstream.JobSpec(
+                    codec="tcomp32", micro_batch_bytes=1024, lanes=4, gang=gang
+                ),
+                topic=f"s{i}",
                 sample=vals[i],
             )
-            feeds[topic] = (vals[i], uniform_timestamps(n_tuples, rate))
-        rep = server.run(feeds)
-        return server, rep
+            handle.push(vals[i], uniform_timestamps(n_tuples, rate))
+        rep = dispatcher.run()
+        return dispatcher, rep
 
     # best-of-2 each way (fresh servers): host timer noise must not decide
     # the claim — dispatch counts are exact either way

@@ -35,6 +35,22 @@ def engine_cfg(codec: str, quick: bool = True, **overrides) -> EngineConfig:
     return EngineConfig(**cfg)
 
 
+def job_spec(codec: str, quick: bool = True, **overrides):
+    """The benchmark default job on the unified API surface: derived from
+    `engine_cfg` so old- and new-surface benches always measure the SAME
+    job (one source of defaults, not a parallel copy). Overrides that only
+    exist on JobSpec (egress, gang, flush policy, fidelity budget) apply on
+    top of the converted spec."""
+    import dataclasses
+
+    from repro import cstream
+
+    engine_fields = {f.name for f in dataclasses.fields(EngineConfig)}
+    spec_only = {k: overrides.pop(k) for k in list(overrides) if k not in engine_fields}
+    spec = cstream.JobSpec.from_engine_config(engine_cfg(codec, quick, **overrides))
+    return spec.replace(**spec_only) if spec_only else spec
+
+
 def fmt_table(rows: List[Dict], cols: List[str], title: str) -> str:
     if not rows:
         return f"== {title}: (no rows)"

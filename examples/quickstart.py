@@ -1,7 +1,8 @@
-"""Quickstart: CStream in five minutes.
+"""Quickstart: CStream in five minutes — through the unified job API.
 
-1. Compress an IoT stream with the paper's engine (pick any of the ten
-   codecs, any parallelization strategy).
+1. Declare a JobSpec, negotiate it, and drive a stream through the ONE
+   handle surface (pick any of the ten codecs, any parallelization
+   strategy; `repro.cstream` is the stable entry point).
 2. Let the planner navigate the Fig-4 solution space for you.
 3. Use the same codecs on an LM serving path (quantized KV cache).
 
@@ -9,9 +10,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.engine import CStreamEngine
+from repro import cstream
 from repro.core.planner import Constraints, choose, enumerate_solutions
-from repro.core.strategies import EngineConfig
 from repro.data.datasets import make_dataset
 from repro.data.stream import rate_for_dataset
 
@@ -19,11 +19,22 @@ from repro.data.stream import rate_for_dataset
 ecg = make_dataset("ecg", n_tuples=1 << 16)
 stream = ecg.stream()
 
-engine = CStreamEngine(EngineConfig(codec="adpcm", lanes=4), sample=stream[:4096])
-result = engine.compress(stream, arrival_rate_tps=rate_for_dataset(1))
-print(f"[1] ADPCM on ECG: ratio {result.stats.ratio:.2f}x, "
-      f"{result.stats.input_bytes/1e6/result.stats.wall_s:.1f} MB/s, "
-      f"NRMSE {100*engine.roundtrip_nrmse(stream[:8192]):.2f}%")
+spec = cstream.JobSpec(
+    codec="adpcm", lanes=4, egress=True, arrival_rate_tps=rate_for_dataset(1)
+)
+plan = cstream.negotiate(spec.calibrated(stream[:4096]))
+print(f"[0] negotiated: {plan.cap.name} (Table 1 {plan.cap.paper_name}, "
+      f"wire id {plan.cap.wire_id}), block {plan.block_tuples} tuples, "
+      f"scan chunk {plan.execution.scan_chunk}")
+
+with cstream.open(spec, sample=stream[:4096]) as handle:
+    handle.push(stream)
+    handle.flush()
+    report = handle.report()
+fid = report.fidelity
+print(f"[1] ADPCM on ECG: ratio {report.ratio:.2f}x, "
+      f"{report.n_tuples * 4 / 1e6 / report.wall_s:.1f} MB/s, "
+      f"NRMSE {100 * fid.nrmse:.2f}% (frame: {report.wire_bytes} wire bytes)")
 
 # --- 2. plan like Fig 4 --------------------------------------------------
 cons = Constraints(min_ratio=6.0, max_nrmse=0.05, max_energy_j_per_mb=1.5)

@@ -1,0 +1,145 @@
+"""cstream ops CLI — driven entirely by the unified job API (`repro.cstream`).
+
+    PYTHONPATH=src python scripts/run.py --list-codecs
+    PYTHONPATH=src python scripts/run.py --smoke
+    PYTHONPATH=src python scripts/run.py --compress rle --dataset micro -n 65536
+
+`--list-codecs` prints the capability registry (registry name, paper Table 1
+name, wire id, capabilities) the negotiation layer keys on. `--smoke` is the
+CI api-stability gate: it serializes/negotiates/opens a JobSpec for every
+Table 1 codec through `repro.cstream` only, and is run under
+`-W error::DeprecationWarning` so any legacy-shim leakage into the new
+surface fails the job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def list_codecs() -> int:
+    from repro import cstream
+
+    cols = [
+        "name", "table1", "wire", "lossy", "stateful", "kind", "scope",
+        "maskable", "aligned", "bound", "params",
+    ]
+    rows = []
+    for c in cstream.capabilities():
+        rows.append({
+            "name": c.name,
+            "table1": c.paper_name or "-",
+            "wire": str(c.wire_id) if c.wire_id is not None else "-",
+            "lossy": "lossy" if c.lossy else "lossless",
+            "stateful": "yes" if c.stateful else "no",
+            "kind": c.state_kind,
+            "scope": c.scope,
+            "maskable": "yes" if c.maskable else "no",
+            "aligned": "yes" if c.aligned else "no",
+            "bound": (
+                "-" if c.default_error_bound is None
+                else f"{c.default_error_bound:.4g}"
+            ),
+            "params": ",".join(c.accepted_params) or "-",
+        })
+    widths = {k: max(len(k), max(len(r[k]) for r in rows)) for k in cols}
+    print("  ".join(k.ljust(widths[k]) for k in cols))
+    for r in rows:
+        print("  ".join(r[k].ljust(widths[k]) for k in cols))
+    return 0
+
+
+def smoke() -> int:
+    """API-stability smoke: serialize/negotiate/open across all ten codecs."""
+    import numpy as np
+
+    from repro import cstream
+
+    # gate on the ten Table 1 codecs; extension codecs (paper_name None)
+    # may exist in the registry without breaking API stability
+    names = [c.name for c in cstream.capabilities() if c.paper_name is not None]
+    assert len(names) == 10, f"expected the ten Table 1 codecs, saw {names}"
+    rng = np.random.default_rng(0)
+    values = np.repeat(rng.integers(0, 4096, size=512).astype(np.uint32), 5)
+    failures = []
+    for name in names:
+        try:
+            spec = cstream.JobSpec(codec=name, micro_batch_bytes=2048, egress=True)
+            spec = cstream.JobSpec.from_dict(
+                json.loads(json.dumps(spec.to_dict()))  # wire round-trip
+            )
+            assert spec == cstream.JobSpec.from_dict(spec.to_dict())
+            plan = cstream.negotiate(spec)
+            assert plan.cap.wire_id is not None
+            with cstream.open(spec, sample=values) as h:
+                h.push(values)
+                seg = h.flush()
+                rep = h.report()
+            assert seg is not None and rep.n_tuples == values.size
+            assert rep.fidelity is not None and rep.fidelity.within_bound
+            print(f"  [OK] {name}: ratio {rep.ratio:.2f}, "
+                  f"fidelity max_abs {rep.fidelity.max_abs:.3g}")
+        except Exception as exc:  # noqa: BLE001 — the smoke reports per codec
+            failures.append(name)
+            print(f"  [FAIL] {name}: {type(exc).__name__}: {exc}")
+    print(f"api smoke: {len(names) - len(failures)}/{len(names)} codecs pass")
+    return 1 if failures else 0
+
+
+def compress(codec: str, dataset: str, n: int) -> int:
+    import numpy as np
+
+    from repro import cstream
+    from repro.data.datasets import make_dataset
+
+    values = make_dataset(dataset, n_tuples=n).stream()[:n]
+    spec = cstream.JobSpec(codec=codec, egress=True)
+    with cstream.open(spec, sample=values) as h:
+        h.push(np.asarray(values, np.uint32))
+        h.flush()
+        rep = h.report()
+    fid = rep.fidelity
+    print(json.dumps({
+        "codec": codec,
+        "dataset": dataset,
+        "n_tuples": rep.n_tuples,
+        "ratio": rep.ratio,
+        "wire_bytes": rep.wire_bytes,
+        "compute_s": rep.wall_s,
+        "makespan_s": rep.makespan_s,
+        "energy_j": rep.energy_j,
+        "bit_exact": fid.bit_exact,
+        "max_abs": fid.max_abs,
+        "nrmse": fid.nrmse,
+    }, indent=1))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--list-codecs", action="store_true",
+        help="print the codec capability registry (paper Table 1)",
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="API-stability smoke over all ten codecs (CI gate)",
+    )
+    ap.add_argument("--compress", metavar="CODEC", help="compress a dataset stream")
+    ap.add_argument("--dataset", default="micro", help="dataset name (default: micro)")
+    ap.add_argument("-n", type=int, default=1 << 16, help="tuples to stream")
+    args = ap.parse_args(argv)
+
+    if args.list_codecs:
+        return list_codecs()
+    if args.smoke:
+        return smoke()
+    if args.compress:
+        return compress(args.compress, args.dataset, args.n)
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,9 @@ from repro.core.algorithms.base import (
     Codec,
     CodecMeta,
     Encoded,
+    accepted_params,
+    check_codec_params,
+    codec_factory,
     codec_names,
     make_codec,
 )
@@ -51,6 +54,9 @@ __all__ = [
     "Codec",
     "CodecMeta",
     "Encoded",
+    "accepted_params",
+    "check_codec_params",
+    "codec_factory",
     "codec_names",
     "make_codec",
     "PAPER_TABLE1",

@@ -122,11 +122,67 @@ def register(name: str):
     return deco
 
 
+def codec_factory(name: str) -> Callable[..., Codec]:
+    """The registered factory for a codec name (capability introspection)."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown codec {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def accepted_params(name: str) -> Tuple[str, ...]:
+    """Parameter names a codec's factory accepts (capability metadata).
+
+    Introspected from the factory signature so the registry stays the one
+    source of truth; codecs without an `__init__` accept none. Memoized per
+    factory object — `make_codec` consults this on every construction."""
+    factory = codec_factory(name)
+    cached = _PARAMS_CACHE.get(factory)
+    if cached is not None:
+        return cached
+    import inspect
+
+    try:
+        sig = inspect.signature(factory)
+    except (TypeError, ValueError):
+        params: Tuple[str, ...] = ()
+    else:
+        params = tuple(
+            p.name
+            for p in sig.parameters.values()
+            if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)
+        )
+    _PARAMS_CACHE[factory] = params
+    return params
+
+
+#: factory object -> accepted parameter names (keyed on the factory, not the
+#: name, so re-registering a name never serves a stale signature)
+_PARAMS_CACHE: Dict[Callable[..., Codec], Tuple[str, ...]] = {}
+
+
+def check_codec_params(name: str, kwargs) -> None:
+    """Raise ValueError naming the codec and its accepted parameters when
+    `kwargs` contains names the factory does not take — the ONE source of
+    that message, shared by `make_codec` and the job API's negotiation."""
+    allowed = accepted_params(name)
+    unknown = sorted(set(kwargs) - set(allowed))
+    if unknown:
+        # an explicit contract instead of the factory's opaque TypeError: the
+        # message names the codec and what it would accept
+        raise ValueError(
+            f"codec {name!r} does not accept parameter(s) "
+            f"{', '.join(map(repr, unknown))}; accepted: "
+            f"{', '.join(allowed) if allowed else '(none)'}"
+        )
+
+
 def make_codec(name: str, **kwargs) -> Codec:
     if name not in _REGISTRY:
         raise KeyError(f"unknown codec {name!r}; have {sorted(_REGISTRY)}")
+    check_codec_params(name, kwargs)
     return _REGISTRY[name](**kwargs)
 
 
-def codec_names():
-    return sorted(_REGISTRY)
+def codec_names() -> Tuple[str, ...]:
+    """Registered codec names, sorted for deterministic listings."""
+    return tuple(sorted(_REGISTRY))

@@ -1,37 +1,42 @@
-"""CStreamEngine — parallel stream compression with pluggable execution,
-state-management and scheduling strategies (paper §3.3–3.4).
+"""CStreamEngine — deprecated shim over the unified job API (DESIGN.md §12).
 
-Layering (DESIGN.md §2):
-  * the *executor layer* (core/pipeline.py) runs the codec over `lanes`
-    private substreams and bit-packs symbols — measured wall-clock
-    throughput. Lazy execution fuses whole chunks of micro-batch blocks into
-    single `lax.scan` dispatches; the per-block dispatch loop survives only
-    as the `eager` strategy (the paper's per-tuple baseline, Fig 10b);
-  * the *policy layer* (core/strategies.py `plan_execution`) decides batch
-    sizing, scan fusion granularity and scheduling in one place;
-  * the *worker schedule layer* maps micro-batch blocks onto a hardware
-    profile's cores (uniform vs asymmetry-aware) and yields modeled makespan,
-    per-tuple latency and energy — the paper's evaluation axes. On real
-    asymmetric silicon the same assignment drives thread placement; on this
-    CPU-only container the speeds come from the hardware profile (documented
-    simulation, constants from paper Fig 6a).
+The engine predates `repro.cstream`: it exposed compression through an
+`EngineConfig` constructor plus `compress/roundtrip/gang_compress` methods.
+All of that behavior now lives in the job API's negotiation + execution
+layers (`repro/api.py`): the engine converts its `EngineConfig` (+ optional
+calibration sample) into a resolved `JobSpec` via
+`JobSpec.from_engine_config`, negotiates the same `Plan` the new surface
+would, and delegates every run to the same `run_compress` /
+`run_gang_compress` / `run_roundtrip` implementations `StreamHandle` uses —
+so the shim is bit-identical to the new surface by construction (and the
+API tests assert frames/records/metrics equality anyway).
 
-`CStreamEngine` is the stable facade over those layers: `compress` keeps its
-public signature and `CompressResult` its fields across the refactor. The
-multi-stream serving runtime (runtime/server.py) drives the same pipeline
-per session.
+Migration (see DESIGN.md §12 for the full table):
+
+    CStreamEngine(cfg, sample).compress(v)   -> cstream.open(spec).push(v).flush()
+    CStreamEngine(cfg, sample).roundtrip(v)  -> cstream.open(spec.replace(egress=True)) ...
+    CStreamEngine(cfg).gang_compress(vs)     -> cstream.gang_compress(spec, vs)
+
+`sharded_compress_fn` (the pjit scale-out path) is not deprecated; it lives
+here unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro import compat
-from repro.core import bits, metrics
+from repro.api import (  # noqa: F401  (canonical homes are repro.api / repro.cstream)
+    CompressResult,
+    GangCompressResult,
+    RoundtripResult,
+    queueing_delay_s,
+)
+from repro.core import bits
 from repro.core.algorithms import make_codec
 from repro.core.pipeline import (
     CompressionPipeline,
@@ -47,71 +52,26 @@ from repro.core.strategies import (  # noqa: F401  (re-exported for callers)
     block_costs,
     schedule_blocks,
 )
-from repro.core.energy import edge_energy_j
 
 # Backward-compatible alias: the merge predates the pipeline extraction and
 # is referenced by tests/callers under its old private name.
 _merge_shared_dictionary = merge_shared_dictionary
 
 
-@dataclasses.dataclass
-class CompressResult:
-    stats: metrics.RunStats
-    total_bits: float
-    n_tuples: int
-    per_block_bits: np.ndarray
-    makespan_s: float
-    busy_s: List[float]
-    blocked_s: float  # dispatch/sync overhead (paper Fig 10b 'blocked time')
-    running_s: float  # pure compression time
-    frame: Optional[bits.Frame] = None  # wire-format payload (emit_frame=True)
-
-
-@dataclasses.dataclass
-class GangCompressResult:
-    """Offline gang run over S same-config streams (DESIGN.md §11).
-
-    `results` has one CompressResult per stream; `wall_s` is the SHARED
-    gang wall (the streams moved through one vmapped dispatch sequence, so
-    per-stream `stats.wall_s` is the even split); `dispatches` counts the
-    kernel launches the gang issued — compare against S× the solo count."""
-
-    results: List["CompressResult"]
-    n_streams: int
-    wall_s: float
-    dispatches: int
-    makespan_s: float  # all streams' blocks scheduled together
-    energy_j: float
-
-
-@dataclasses.dataclass
-class RoundtripResult:
-    """compress -> framed bitstream -> decompress, with the fidelity check."""
-
-    compress: CompressResult
-    values: np.ndarray  # reconstructed stream (uint32[n_tuples])
-    fidelity: metrics.Fidelity
-    decode_wall_s: float
-    wire_bytes: int  # serialized frame size (header + metadata + payload)
-
-
-def queueing_delay_s(proc_s: float, batch_fill_s: float, max_factor: float = 20.0) -> float:
-    """Smoothed M/D/1-style queueing term for the latency model (paper §4.1).
-
-    `rho` is server utilization (processing time over the batch fill window).
-    The raw `rho / (1 - rho)` growth is clamped to `max_factor`, which makes
-    the model continuous through saturation (the old form jumped from
-    ~50x·proc to a flat 10x·proc exactly at rho = 1) while keeping the same
-    saturated value: 0.5 · proc · max_factor = 10 · proc."""
-    rho = proc_s / max(batch_fill_s, 1e-12)
-    growth = rho / (1.0 - rho) if rho < 1.0 else float("inf")
-    return 0.5 * proc_s * min(growth, max_factor)
-
-
 class CStreamEngine:
+    """Deprecated: declare a `repro.cstream.JobSpec` and `cstream.open` it.
+
+    Kept as a bit-identical facade — construction negotiates the equivalent
+    JobSpec/Plan, and every method body is the shared api-layer runner."""
+
     def __init__(self, config: EngineConfig, sample: Optional[np.ndarray] = None):
+        api.warn_deprecated_shim("CStreamEngine", "cstream.open(JobSpec(...))")
         self.config = config
-        self.pipeline = CompressionPipeline(config, sample=sample)
+        self.spec = api.JobSpec.from_engine_config(config, sample=sample)
+        self.plan = api.negotiate(self.spec)
+        self.pipeline = CompressionPipeline(
+            config, codec=self.plan.codec, plan=self.plan.execution
+        )
         self.codec = self.pipeline.codec
         self._step = self.pipeline._step
         self._decompressor: Optional[DecompressionPipeline] = None
@@ -120,7 +80,9 @@ class CStreamEngine:
     def decompressor(self) -> DecompressionPipeline:
         """Lazily built egress executor sharing this engine's codec."""
         if self._decompressor is None:
-            self._decompressor = DecompressionPipeline(self.config, codec=self.codec)
+            self._decompressor = DecompressionPipeline(
+                self.config, codec=self.codec, plan=self.plan.execution
+            )
         return self._decompressor
 
     # ------------------------------------------------------------- shaping
@@ -143,75 +105,15 @@ class CStreamEngine:
     ) -> CompressResult:
         """Compress a stream; with `emit_frame=True` the result additionally
         carries the self-describing wire-format `bits.Frame` (the payload a
-        consumer decodes with `decompress`). Framing copies the packed words
-        to the host after timing, so the measured wall stays hot-path."""
-        cfg = self.config
-        pipe = self.pipeline
-        shaped = pipe.shape_blocks(np.asarray(values, np.uint32), max_blocks=max_blocks)
-
-        res = pipe.execute(shaped, collect_payload=emit_frame)
-        wall = res.wall_s
-        per_block_bits = res.per_block_bits
-        total_bits = float(per_block_bits.sum())
-        n_tuples = res.n_tuples
-        n_blocks = shaped.n_blocks
-
-        # ---- schedule layer: map blocks onto the hardware profile ---------
-        profile = cfg.hardware()
-        # measured mean cost at speed 1.0 (empty streams have no blocks)
-        per_block_cost = wall / max(n_blocks, 1)
-        costs = block_costs(wall, per_block_bits)
-        speeds = profile.speeds
-        _, busy, makespan = schedule_blocks(costs, speeds, cfg.scheduling)
-        # uniform scheduling implies barrier spin-wait (paper Fig 13b)
-        energy = edge_energy_j(
-            profile, busy, makespan,
-            spin_wait=cfg.scheduling == SchedulingStrategy.UNIFORM,
-        )
-
-        # ---- latency model (paper §4.1 end-to-end latency) -----------------
-        latency = None
-        if arrival_rate_tps:
-            batch_fill_s = self._block_tuples() / arrival_rate_tps
-            proc = per_block_cost
-            # tuples wait on average half the fill window + processing, plus
-            # queueing if the server is slower than the arrival rate
-            latency = batch_fill_s / 2.0 + proc + queueing_delay_s(proc, batch_fill_s)
-
-        input_bytes = n_tuples * 4
-        stats = metrics.RunStats(
-            name=f"{self.codec.name}/{cfg.execution.value}/{cfg.state.value}/{cfg.scheduling.value}",
-            input_bytes=input_bytes,
-            output_bytes=total_bits / 8.0,
-            wall_s=wall,
-            ratio=metrics.compression_ratio(input_bytes * 8, total_bits),
-            latency_s=latency,
-            energy_j=energy,
-        )
-        # Fig 10b breakdown: 'running' = pure compression compute, measured by
-        # replaying all blocks under fused scan dispatch; 'blocked' = per-block
-        # dispatch/synchronization overhead — the cost eager execution pays per
-        # tuple (paper: partitioning/sync/cache thrashing). Under the default
-        # fused lazy path the timed run IS the fused replay, so blocked ~ 0.
-        if breakdown and pipe.plan.scan_chunk <= 1:
-            # per-block-dispatch timed run (eager, or chunk pinned to 1):
-            # measure 'running' by force-fusing the same blocks
-            fused = pipe.execute(shaped, fused=True)
-            running = min(fused.wall_s, wall)
-        elif breakdown:
-            running = wall  # the timed run already WAS the fused replay
-        else:
-            running = min(per_block_cost * n_blocks, wall)
-        return CompressResult(
-            stats=stats,
-            total_bits=total_bits,
-            n_tuples=n_tuples,
-            per_block_bits=per_block_bits,
-            makespan_s=makespan,
-            busy_s=busy,
-            blocked_s=max(wall - running, 0.0),
-            running_s=running,
-            frame=pipe.frame_from(shaped, res) if emit_frame else None,
+        consumer decodes with `decompress`)."""
+        return api.run_compress(
+            self.pipeline,
+            self.spec,
+            values,
+            arrival_rate_tps=arrival_rate_tps,
+            max_blocks=max_blocks,
+            breakdown=breakdown,
+            emit_frame=emit_frame,
         )
 
     # ----------------------------------------------------------------- gang
@@ -220,74 +122,12 @@ class CStreamEngine:
         streams: List[np.ndarray],
         emit_frames: bool = False,
     ) -> GangCompressResult:
-        """Compress S independent streams through gang-batched dispatches.
-
-        The offline analogue of the server's gang dispatcher: every stream
-        is shaped to the SAME block geometry (they must share a length), the
-        stacked blocks run through one vmapped chunked-scan sequence, and
-        per-stream bitstreams/frames scatter back out bit-identical to solo
-        runs. The schedule layer then maps ALL streams' blocks onto the
-        hardware profile together — the multi-stream makespan the paper's
-        Fig 12 measures with one engine per stream."""
+        """Compress S independent streams through gang-batched dispatches
+        (see `api.run_gang_compress` / DESIGN.md §11)."""
         if not streams:
             raise ValueError("gang_compress needs at least one stream")
-        pipe = self.pipeline
-        shaped = [pipe.shape_blocks(np.asarray(v, np.uint32)) for v in streams]
-        d0 = pipe.dispatches
-        exec_results, wall = pipe.execute_gang(shaped, collect_payload=emit_frames)
-        dispatches = pipe.dispatches - d0
-
-        cfg = self.config
-        profile = cfg.hardware()
-        all_costs: List[float] = []
-        results: List[CompressResult] = []
-        for sh, res in zip(shaped, exec_results):
-            per_block_bits = res.per_block_bits
-            total_bits = float(per_block_bits.sum())
-            costs = block_costs(res.wall_s, per_block_bits)
-            all_costs.extend(costs)
-            _, busy, makespan = schedule_blocks(costs, profile.speeds, cfg.scheduling)
-            energy = edge_energy_j(
-                profile, busy, makespan,
-                spin_wait=cfg.scheduling == SchedulingStrategy.UNIFORM,
-            )
-            input_bytes = res.n_tuples * 4
-            stats = metrics.RunStats(
-                name=f"{self.codec.name}/gang/{cfg.state.value}/{cfg.scheduling.value}",
-                input_bytes=input_bytes,
-                output_bytes=total_bits / 8.0,
-                wall_s=res.wall_s,
-                ratio=metrics.compression_ratio(input_bytes * 8, total_bits),
-                latency_s=None,
-                energy_j=energy,
-            )
-            results.append(
-                CompressResult(
-                    stats=stats,
-                    total_bits=total_bits,
-                    n_tuples=res.n_tuples,
-                    per_block_bits=per_block_bits,
-                    makespan_s=makespan,
-                    busy_s=busy,
-                    blocked_s=0.0,
-                    running_s=res.wall_s,
-                    frame=pipe.frame_from(sh, res) if emit_frames else None,
-                )
-            )
-        _, gang_busy, gang_makespan = schedule_blocks(
-            all_costs, profile.speeds, cfg.scheduling
-        )
-        gang_energy = edge_energy_j(
-            profile, gang_busy, gang_makespan,
-            spin_wait=cfg.scheduling == SchedulingStrategy.UNIFORM,
-        )
-        return GangCompressResult(
-            results=results,
-            n_streams=len(streams),
-            wall_s=wall,
-            dispatches=dispatches,
-            makespan_s=gang_makespan,
-            energy_j=gang_energy,
+        return api.run_gang_compress(
+            self.pipeline, self.spec, streams, emit_frames=emit_frames
         )
 
     # --------------------------------------------------------------- egress
@@ -301,29 +141,14 @@ class CStreamEngine:
         arrival_rate_tps: Optional[float] = None,
         max_blocks: Optional[int] = None,
     ) -> RoundtripResult:
-        """Compress to the wire frame, decode it back, check fidelity.
-
-        The fidelity contract (EdgeCodec-style): lossless codecs must be
-        bit-exact; lossy codecs must sit inside their configured max-abs
-        bound when one exists (`Codec.error_bound`), and report measured
-        max-abs / RMSE / NRMSE either way."""
-        values = np.asarray(values, np.uint32).ravel()
-        res = self.compress(
+        """Compress to the wire frame, decode it back, check fidelity."""
+        return api.run_roundtrip(
+            self.pipeline,
+            self.decompressor,
+            self.spec,
             values,
             arrival_rate_tps=arrival_rate_tps,
             max_blocks=max_blocks,
-            emit_frame=True,
-        )
-        dec = self.decompressor.decompress(res.frame)
-        fid = metrics.fidelity(
-            values[: dec.n_tuples], dec.values, bound=self.codec.error_bound()
-        )
-        return RoundtripResult(
-            compress=res,
-            values=dec.values,
-            fidelity=fid,
-            decode_wall_s=dec.wall_s,
-            wire_bytes=res.frame.wire_bytes,
         )
 
     # -------------------------------------------------- lossy fidelity check

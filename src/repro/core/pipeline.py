@@ -54,9 +54,10 @@ from repro.core.algorithms import (
 )
 from repro.core.calibration import calibrated_kwargs
 from repro.core.strategies import (
-    EngineConfig,
+    EngineConfig,  # noqa: F401  (re-exported for legacy callers)
     ExecutionPlan,
     ExecutionStrategy,
+    SpecLike,
     StateStrategy,
     plan_execution,
 )
@@ -66,6 +67,40 @@ from repro.core.strategies import (
 #: dispatch (the eager Fig 10b breakdown replay): long enough to amortize
 #: dispatch, short enough to keep trace size bounded
 _FORCED_FUSE_CHUNK = 128
+
+
+def codec_align(codec: Codec) -> int:
+    """Per-lane tuple alignment a codec requires (policy input).
+
+    PLA fits superwindows of 2W tuples; every other codec packs any shape.
+    Shared by the executors here and the job-API negotiation layer."""
+    return 2 * codec.window if codec.name == "pla" else 1
+
+
+def dispatch_signature(
+    codec: Codec, lanes: int, per_lane: int, dtype: str = "uint32"
+) -> Tuple[Any, ...]:
+    """Gang dispatch signature: streams/sessions stack into one vmapped
+    dispatch only when codec (including resolved/calibrated parameters),
+    block geometry, and dtype all match — anything else would run a member
+    under the wrong kernel or the wrong quantizer. Used by the serving
+    runtime's gang queues and the job API's gang negotiation."""
+    parts: List[Any] = [codec.name, lanes, per_lane, dtype]
+    for k, v in sorted(vars(codec).items()):
+        if isinstance(v, (bool, int, float, str)):
+            parts.append((k, v))
+        elif isinstance(v, (np.ndarray, jax.Array)):
+            # array-valued codec params hash by dtype/shape/bytes
+            a = np.asarray(v)
+            parts.append((k, (str(a.dtype), a.shape, a.tobytes())))
+        else:
+            # refuse rather than hash object identity: a repr/pointer key
+            # would make identical sessions silently never gang
+            raise TypeError(
+                f"codec param {k!r} of {codec.name!r} has unhashable type "
+                f"{type(v).__name__} for gang signatures"
+            )
+    return tuple(parts)
 
 
 # ------------------------------------------------------- shared-state merge --
@@ -161,10 +196,16 @@ class BlockedExecutor:
 
     def __init__(
         self,
-        config: EngineConfig,
+        config: SpecLike,
         sample: Optional[np.ndarray] = None,
         codec: Optional[Codec] = None,
+        plan: Optional[ExecutionPlan] = None,
     ):
+        """`config` is any spec carrier with the EngineConfig attribute
+        surface — the legacy `EngineConfig` or a `repro.cstream.JobSpec`.
+        A pre-negotiated `plan`/`codec` (from `cstream.negotiate`) is
+        consumed as-is; otherwise both are derived here exactly as the
+        negotiation layer would."""
         self.config = config
         if codec is None:
             kwargs = dict(config.codec_kwargs)
@@ -174,9 +215,10 @@ class BlockedExecutor:
                     kwargs.setdefault(k, v)
             codec = make_codec(config.codec, **kwargs)
         self.codec: Codec = codec
-        # PLA fits superwindows of 2W tuples; everything else packs any shape
-        align = 2 * self.codec.window if self.codec.name == "pla" else 1
-        self.plan: ExecutionPlan = plan_execution(config, codec_align=align)
+        align = codec_align(self.codec)
+        self.plan: ExecutionPlan = (
+            plan if plan is not None else plan_execution(config, codec_align=align)
+        )
         self._align = align
         self._scan_fns: Dict[int, Any] = {}  # chunk length -> jitted scan
         self._warmed: set = set()  # (shapes, chunk, ...) already compiled
@@ -273,8 +315,14 @@ class BlockedExecutor:
 class CompressionPipeline(BlockedExecutor):
     """Ingress executor: encode + bit-pack + fused/dispatch execution paths."""
 
-    def __init__(self, config: EngineConfig, sample: Optional[np.ndarray] = None):
-        super().__init__(config, sample=sample)
+    def __init__(
+        self,
+        config: SpecLike,
+        sample: Optional[np.ndarray] = None,
+        codec: Optional[Codec] = None,
+        plan: Optional[ExecutionPlan] = None,
+    ):
+        super().__init__(config, sample=sample, codec=codec, plan=plan)
         self._step = jax.jit(self.step)
         self._masked_step = jax.jit(self.masked_step)
         self._flush_fn = None
@@ -827,11 +875,12 @@ class DecompressionPipeline(BlockedExecutor):
 
     def __init__(
         self,
-        config: EngineConfig,
+        config: SpecLike,
         codec: Optional[Codec] = None,
         sample: Optional[np.ndarray] = None,
+        plan: Optional[ExecutionPlan] = None,
     ):
-        super().__init__(config, sample=sample, codec=codec)
+        super().__init__(config, sample=sample, codec=codec, plan=plan)
         self._tail_fn_jit = None  # jit retraces per block shape on its own
         self._stream_decode_fn = None
 

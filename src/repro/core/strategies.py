@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Protocol, Sequence, Tuple
 
 from repro.core import energy as energy_mod
 
@@ -22,6 +22,43 @@ class StateStrategy(str, enum.Enum):
 class SchedulingStrategy(str, enum.Enum):
     UNIFORM = "uniform"  # balanced partition / equal distribution [39]
     ASYMMETRIC = "asymmetric"  # asymmetry-aware (paper [4]): cost-model LPT
+
+
+class SpecLike(Protocol):
+    """Structural config carrier the executor/policy layers consume.
+
+    Both the legacy `EngineConfig` and the job API's `repro.cstream.JobSpec`
+    satisfy it, so `plan_execution`, the pipelines and the serving runtime
+    accept either without importing the API layer (no circular imports)."""
+
+    @property
+    def codec(self) -> str: ...
+
+    @property
+    def codec_kwargs(self) -> Mapping[str, Any]: ...
+
+    @property
+    def calibrate(self) -> bool: ...
+
+    @property
+    def execution(self) -> "ExecutionStrategy": ...
+
+    @property
+    def state(self) -> "StateStrategy": ...
+
+    @property
+    def scheduling(self) -> "SchedulingStrategy": ...
+
+    @property
+    def micro_batch_bytes(self) -> int: ...
+
+    @property
+    def lanes(self) -> int: ...
+
+    @property
+    def scan_chunk(self) -> int: ...
+
+    def hardware(self) -> energy_mod.HardwareProfile: ...
 
 
 @dataclasses.dataclass
@@ -73,7 +110,7 @@ _SCAN_CHUNK_MAX = 128
 
 
 def plan_execution(
-    config: "EngineConfig",
+    config: SpecLike,
     profile: energy_mod.HardwareProfile = None,
     codec_align: int = 1,
 ) -> ExecutionPlan:
@@ -172,6 +209,18 @@ def plan_gang(
         block_bytes=block_bytes,
         cache_bytes=cache_bytes,
     )
+
+
+def resolve_capacity(
+    block_tuples: int, lanes: int, align: int, flush_tuples: int = 0
+) -> int:
+    """Session flush capacity: the requested tuple count (or one planned
+    micro-batch block when 0), rounded UP to the lane-aligned unit the codec
+    requires. The ONE definition — `StreamSession` and the job-API
+    negotiation layer must agree or gang signatures diverge."""
+    unit = lanes * align
+    cap = flush_tuples if flush_tuples > 0 else block_tuples
+    return max(unit, ((cap + unit - 1) // unit) * unit)
 
 
 def cache_aware_batch_bytes(profile: energy_mod.HardwareProfile) -> int:

@@ -1,0 +1,23 @@
+"""`repro.cstream` — the unified, stable cstream job API (DESIGN.md §12).
+
+This module IS the public surface; the implementation lives in `repro.api`.
+Import from here:
+
+    from repro import cstream
+
+    spec = cstream.JobSpec(codec="rle", egress=True)
+    with cstream.open(spec) as h:
+        h.push(values)
+        h.flush()
+        report = h.report()
+
+Declarative `JobSpec` in, capability-negotiated `Plan` out (`negotiate`),
+one `StreamHandle` for offline compression, wire roundtrips, server
+sessions and gang dispatch (`open` / `Dispatcher`). The pre-API entry
+points (`CStreamEngine`, `StreamServer`) are deprecated shims over this
+surface; importing this module never emits a DeprecationWarning.
+"""
+from __future__ import annotations
+
+from repro.api import *  # noqa: F401,F403  (this module IS the public re-export)
+from repro.api import __all__  # noqa: F401

@@ -1,4 +1,5 @@
 from repro.runtime.server import (  # noqa: F401
+    ServerCore,
     ServerReport,
     SessionReport,
     StreamServer,

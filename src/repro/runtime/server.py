@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -39,13 +40,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bits, metrics
+from repro.core.algorithms import Codec
 from repro.core.energy import PROFILES, edge_energy_j
-from repro.core.pipeline import CompressionPipeline, DecompressionPipeline
+from repro.core.pipeline import (
+    CompressionPipeline,
+    DecompressionPipeline,
+    dispatch_signature,
+)
 from repro.core.strategies import (
-    EngineConfig,
+    EngineConfig,  # noqa: F401  (re-exported for legacy callers)
+    ExecutionPlan,
     GangPlan,
     SchedulingStrategy,
+    SpecLike,
     plan_gang,
+    resolve_capacity,
     schedule_blocks,
 )
 
@@ -134,19 +143,26 @@ class StreamSession:
     def __init__(
         self,
         topic: str,
-        config: EngineConfig,
+        config: SpecLike,
         sample: Optional[np.ndarray] = None,
         flush_tuples: int = 0,
         flush_timeout_s: float = 0.25,
         egress: bool = False,
+        codec: Optional[Codec] = None,
+        plan: Optional[ExecutionPlan] = None,
     ):
+        """`config` is any spec carrier with the EngineConfig attribute
+        surface (EngineConfig or `repro.cstream.JobSpec`); a pre-negotiated
+        `codec`/`plan` (from `cstream.negotiate`) is consumed directly."""
         self.topic = topic
         self.config = config
-        self.pipeline = CompressionPipeline(config, sample=sample)
-        plan = self.pipeline.plan
-        unit = config.lanes * self.pipeline.align
-        cap = flush_tuples if flush_tuples > 0 else plan.block_tuples
-        self.capacity = max(unit, ((cap + unit - 1) // unit) * unit)
+        self.pipeline = CompressionPipeline(config, sample=sample, codec=codec, plan=plan)
+        self.capacity = resolve_capacity(
+            self.pipeline.plan.block_tuples,
+            config.lanes,
+            self.pipeline.align,
+            flush_tuples,
+        )
         self.flush_timeout_s = flush_timeout_s
         self.lanes = config.lanes
         self.state = self.pipeline.init_state()
@@ -204,29 +220,9 @@ class StreamSession:
         construction, so computed once and cached (the sink calls this on
         every flush)."""
         if self._signature is None:
-            codec = self.pipeline.codec
-            parts: List[Any] = [
-                codec.name,
-                self.lanes,
-                self.capacity // self.lanes,
-                "uint32",
-            ]
-            for k, v in sorted(vars(codec).items()):
-                if isinstance(v, (bool, int, float, str)):
-                    parts.append((k, v))
-                elif isinstance(v, (np.ndarray, jax.Array)):
-                    # array-valued codec params hash by dtype/shape/bytes
-                    a = np.asarray(v)
-                    parts.append((k, (str(a.dtype), a.shape, a.tobytes())))
-                else:
-                    # refuse rather than hash object identity: a repr/pointer
-                    # key would make identical sessions silently never gang
-                    raise TypeError(
-                        f"codec param {k!r} of {codec.name!r} has "
-                        f"unhashable type {type(v).__name__} for gang "
-                        "signatures"
-                    )
-            self._signature = tuple(parts)
+            self._signature = dispatch_signature(
+                self.pipeline.codec, self.lanes, self.capacity // self.lanes
+            )
         return self._signature
 
     def due(self, now: float) -> bool:
@@ -457,9 +453,13 @@ class StreamSession:
         )
 
 
-class StreamServer:
+class ServerCore:
     """Admits N concurrent sessions; flushes size-or-timeout; schedules
     flushed blocks across the hardware profile.
+
+    This is the serving/dispatch implementation behind BOTH public
+    surfaces: `repro.cstream.Dispatcher` (the job API) composes it, and
+    `StreamServer` (deprecated) subclasses it unchanged.
 
     With `gang=True` the server runs the cross-session gang dispatcher
     (DESIGN.md §11): sessions that flush within the same scheduling quantum
@@ -590,11 +590,18 @@ class StreamServer:
     def admit(
         self,
         topic: str,
-        config: EngineConfig,
+        config: SpecLike,
         sample: Optional[np.ndarray] = None,
         flush_tuples: int = 0,
         flush_timeout_s: Optional[float] = None,
+        egress: Optional[bool] = None,
+        codec: Optional[Codec] = None,
+        plan: Optional[ExecutionPlan] = None,
     ) -> StreamSession:
+        """Admit one session. `config` may be an `EngineConfig` or a
+        `repro.cstream.JobSpec`; `egress=None` inherits the server default;
+        a pre-negotiated `codec`/`plan` is consumed as-is (the Dispatcher
+        path, so negotiation happens exactly once)."""
         if topic in self.sessions:
             raise ValueError(f"session {topic!r} already admitted")
         if len(self.sessions) >= self.max_sessions:
@@ -609,7 +616,9 @@ class StreamServer:
             flush_timeout_s=(
                 self.flush_timeout_s if flush_timeout_s is None else flush_timeout_s
             ),
-            egress=self.egress,
+            egress=self.egress if egress is None else egress,
+            codec=codec,
+            plan=plan,
         )
         self.sessions[topic] = session
         if self.gang:
@@ -746,3 +755,21 @@ class StreamServer:
             aggregate_mbps=input_bytes / 1e6 / max(makespan, 1e-12),
             n_dispatches=n_dispatches,
         )
+
+
+class StreamServer(ServerCore):
+    """Deprecated shim: the pre-job-API entry point (DESIGN.md §12).
+
+    Bit-identical to `ServerCore` — it IS `ServerCore`, plus a
+    DeprecationWarning. New code declares sessions as `repro.cstream`
+    JobSpecs and drives them through `Dispatcher.open(spec)` handles."""
+
+    def __init__(self, *args: Any, **kwargs: Any):
+        warnings.warn(
+            "StreamServer is deprecated; use repro.cstream.Dispatcher "
+            "(JobSpec-driven session handles) instead — see DESIGN.md §12 "
+            "for the migration table",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        super().__init__(*args, **kwargs)

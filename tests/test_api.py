@@ -1,0 +1,498 @@
+"""Unified job API (DESIGN.md §12): JobSpec round-tripping, capability
+negotiation errors (property-tested across the whole codec registry), and
+shim equivalence — `CStreamEngine` / `StreamServer` must be bit-identical
+to driving the same job through `repro.cstream.open`.
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import cstream
+from repro.core.algorithms import WIRE_CODEC_IDS, codec_names, make_codec
+from repro.core.algorithms.base import _REGISTRY, Codec, CodecMeta, register
+from repro.core.engine import CStreamEngine
+from repro.core.strategies import EngineConfig
+from repro.data import make_dataset
+from repro.data.stream import rate_for_dataset, uniform_timestamps, zipf_timestamps
+from repro.runtime.server import StreamServer
+from tests.hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+ALL_CODECS = list(codec_names())
+
+
+def _stream(n=4000, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.repeat(rng.integers(0, 4096, size=n // 4 + 1).astype(np.uint32), 4)[:n]
+
+
+# --------------------------------------------------------------- JobSpec ----
+class TestJobSpec:
+    def test_dict_roundtrip_is_exact_and_jsonable(self):
+        spec = cstream.JobSpec(
+            codec="pla",
+            params={"eps": 4.0, "window": 16},
+            lanes=8,
+            micro_batch_bytes=4096,
+            execution="eager",
+            scheduling="uniform",
+            egress=True,
+            max_abs_error=5.0,
+            flush_tuples=1024,
+        )
+        wire = json.loads(json.dumps(spec.to_dict()))
+        assert cstream.JobSpec.from_dict(wire) == spec
+
+    @pytest.mark.parametrize("name", ALL_CODECS)
+    def test_dict_roundtrip_every_codec(self, name):
+        spec = cstream.JobSpec(codec=name)
+        assert cstream.JobSpec.from_dict(spec.to_dict()) == spec
+
+    def test_from_dict_rejects_unknown_keys(self):
+        with pytest.raises(ValueError, match="unknown key.*'codecs'"):
+            cstream.JobSpec.from_dict({"codecs": "rle"})
+
+    def test_params_normalize_and_sort(self):
+        a = cstream.JobSpec(codec="uanuq", params={"vmax": 10.0, "qbits": 8})
+        b = cstream.JobSpec(codec="uanuq", params={"qbits": 8, "vmax": 10.0})
+        assert a == b and a.params == (("qbits", 8), ("vmax", 10.0))
+
+    def test_structural_validation(self):
+        with pytest.raises(ValueError, match="lanes"):
+            cstream.JobSpec(lanes=0)
+        with pytest.raises(ValueError, match="scan_chunk"):
+            cstream.JobSpec(scan_chunk=-1)
+        with pytest.raises(ValueError, match="flush_timeout_s"):
+            cstream.JobSpec(flush_timeout_s=0.0)
+        with pytest.raises(ValueError, match="scalar"):
+            cstream.JobSpec(codec="uanuq", params={"vmax": np.zeros(3)})
+
+    def test_spec_is_static_pytree(self):
+        """Pytree-friendly: no array leaves, hashable, legal as jit config."""
+        import jax
+
+        spec = cstream.JobSpec(codec="rle")
+        assert jax.tree_util.tree_leaves(spec) == []
+        assert hash(spec) == hash(cstream.JobSpec(codec="rle"))
+
+        @jax.jit
+        def use(x, s: cstream.JobSpec):
+            return x * s.lanes
+
+        assert int(use(jax.numpy.asarray(2), spec)) == 2 * spec.lanes
+
+    def test_engine_config_bridge_roundtrip(self):
+        cfg = EngineConfig(codec="tdic32", codec_kwargs={"idx_bits": 10}, lanes=8)
+        spec = cstream.JobSpec.from_engine_config(cfg)
+        back = spec.engine_config()
+        assert back.codec == cfg.codec
+        assert back.codec_kwargs == cfg.codec_kwargs
+        assert back.lanes == cfg.lanes
+        assert back.calibrate is False  # params are resolved by construction
+
+    if HAVE_HYPOTHESIS:
+
+        @given(
+            lanes=st.integers(1, 16),
+            mbb=st.integers(256, 1 << 16),
+            timeout=st.floats(1e-3, 10.0, allow_nan=False),
+            egress=st.booleans(),
+        )
+        @settings(max_examples=25, deadline=None, derandomize=True)
+        def test_dict_roundtrip_property(self, lanes, mbb, timeout, egress):
+            spec = cstream.JobSpec(
+                codec="tcomp32",
+                lanes=lanes,
+                micro_batch_bytes=mbb,
+                flush_timeout_s=timeout,
+                egress=egress,
+            )
+            assert cstream.JobSpec.from_dict(spec.to_dict()) == spec
+
+
+# ---------------------------------------------------------- capabilities ----
+class TestCapabilities:
+    def test_registry_is_complete_and_deterministic(self):
+        caps = cstream.capabilities()
+        assert [c.name for c in caps] == sorted(c.name for c in caps)
+        assert len(caps) == 10  # paper Table 1
+        for c in caps:
+            assert c.wire_id == WIRE_CODEC_IDS[c.name]
+            assert c.paper_name is not None
+
+    @pytest.mark.parametrize("name", ALL_CODECS)
+    def test_accepted_params_match_factory(self, name):
+        cap = cstream.capability(name)
+        # every accepted param is a real constructor kwarg
+        if cap.accepted_params:
+            make_codec(name, **{cap.accepted_params[0]: getattr(
+                make_codec(name), cap.accepted_params[0]
+            )})
+
+    def test_make_codec_unknown_kwarg_is_actionable(self):
+        with pytest.raises(ValueError, match=r"'uanuq' does not accept.*'bogus'.*accepted: qbits, vmax, mu"):
+            make_codec("uanuq", bogus=1)
+        # codecs with no parameters say so instead of a bare TypeError
+        with pytest.raises(ValueError, match=r"'tcomp32' does not accept.*\(none\)"):
+            make_codec("tcomp32", qbits=7)
+
+    def test_codec_names_sorted(self):
+        assert list(codec_names()) == sorted(codec_names())
+
+
+# ---------------------------------------------------- negotiation errors ----
+def _single_line(err) -> str:
+    msg = str(err)
+    assert "\n" not in msg, f"negotiation error spans lines: {msg!r}"
+    return msg
+
+
+class TestNegotiationErrors:
+    """Every invalid JobSpec combination produces a single-line actionable
+    message — checked across the whole codec registry."""
+
+    def test_unknown_codec_lists_registry(self):
+        with pytest.raises(cstream.NegotiationError) as ei:
+            cstream.negotiate(cstream.JobSpec(codec="zstd"))
+        msg = _single_line(ei.value)
+        for name in ALL_CODECS:
+            assert name in msg
+
+    @pytest.mark.parametrize("name", ALL_CODECS)
+    def test_unknown_param_names_codec_and_accepted(self, name):
+        with pytest.raises(cstream.NegotiationError) as ei:
+            cstream.negotiate(cstream.JobSpec(codec=name, params={"no_such_param": 1}))
+        msg = _single_line(ei.value)
+        assert name in msg and "no_such_param" in msg and "accepted" in msg
+
+    @pytest.mark.parametrize("name", ALL_CODECS)
+    def test_fidelity_budget_negotiation(self, name):
+        cap = cstream.capability(name)
+        spec = cstream.JobSpec(codec=name, max_abs_error=0.0)
+        if cap.default_error_bound == 0.0:  # lossless: any budget is fine
+            cstream.negotiate(spec)
+        else:
+            with pytest.raises(cstream.NegotiationError) as ei:
+                cstream.negotiate(spec)
+            msg = _single_line(ei.value)
+            assert name in msg and "max_abs_error" in msg or "max-abs" in msg
+        # a budget at/above the bound negotiates fine
+        if cap.default_error_bound is not None and cap.default_error_bound > 0:
+            cstream.negotiate(
+                cstream.JobSpec(codec=name, max_abs_error=cap.default_error_bound)
+            )
+
+    @pytest.mark.parametrize("name", ALL_CODECS)
+    def test_strict_masking_respects_capability(self, name):
+        cap = cstream.capability(name)
+        spec = cstream.JobSpec(codec=name, strict_masking=True)
+        if cap.maskable:
+            cstream.negotiate(spec)
+        else:
+            with pytest.raises(cstream.NegotiationError) as ei:
+                cstream.negotiate(spec)
+            msg = _single_line(ei.value)
+            assert "maskable" in msg and name in msg
+
+    def test_eager_scan_chunk_conflict(self):
+        with pytest.raises(cstream.NegotiationError) as ei:
+            cstream.negotiate(cstream.JobSpec(execution="eager", scan_chunk=8))
+        assert "scan_chunk" in _single_line(ei.value)
+
+    def test_bad_codec_params_are_wrapped(self):
+        with pytest.raises(cstream.NegotiationError) as ei:
+            cstream.negotiate(cstream.JobSpec(codec="pla", params={"window": 2}))
+        _single_line(ei.value)
+
+    def test_egress_requires_wire_id(self):
+        """A codec outside the wire registry cannot negotiate egress."""
+
+        @register("_test_unwired")
+        class _Unwired(Codec):
+            meta = CodecMeta(
+                "_test_unwired", lossy=False, stateful=False,
+                state_kind="none", aligned=True,
+            )
+
+        try:
+            with pytest.raises(cstream.NegotiationError) as ei:
+                cstream.negotiate(cstream.JobSpec(codec="_test_unwired", egress=True))
+            msg = _single_line(ei.value)
+            assert "wire" in msg and "_test_unwired" in msg
+            # without egress the same codec negotiates
+            plan = cstream.negotiate(cstream.JobSpec(codec="_test_unwired"))
+            assert plan.cap.wire_id is None
+        finally:
+            _REGISTRY.pop("_test_unwired", None)
+
+    def test_gang_mismatched_signatures(self):
+        a = cstream.JobSpec(codec="pla", params={"eps": 4.0})
+        b = cstream.JobSpec(codec="pla", params={"eps": 8.0})
+        with pytest.raises(cstream.NegotiationError) as ei:
+            cstream.negotiate_gang([a, b])
+        msg = _single_line(ei.value)
+        assert "signature" in msg and "spec[1]" in msg
+        # matching specs agree
+        plans = cstream.negotiate_gang([a, a])
+        assert plans[0].signature == plans[1].signature
+
+    def test_gang_spec_needs_gang_dispatcher(self):
+        spec = cstream.JobSpec(codec="tcomp32", gang=True)
+        with pytest.raises(cstream.NegotiationError, match="gang"):
+            cstream.open(spec)
+        with pytest.raises(cstream.NegotiationError, match="gang=True"):
+            cstream.Dispatcher(gang=False).open(spec)
+
+    @pytest.mark.parametrize("name", ALL_CODECS)
+    def test_every_codec_negotiates_a_full_plan(self, name):
+        plan = cstream.negotiate(cstream.JobSpec(codec=name, micro_batch_bytes=2048))
+        assert plan.execution.block_tuples > 0
+        assert plan.capacity % (plan.spec.lanes * plan.align) == 0
+        assert plan.gang.max_gang >= 1
+        assert plan.signature[0] == name
+
+
+# ------------------------------------------------------- shim equivalence ----
+class TestShimEquivalence:
+    """`CStreamEngine` / `StreamServer` are deprecated shims: driving the
+    same job through `cstream.open(spec)` must produce bit-identical frames,
+    records and reports."""
+
+    @pytest.mark.parametrize("codec", ["tcomp32", "rle", "adpcm", "pla"])
+    def test_engine_compress_equivalence(self, codec):
+        vals = make_dataset("ecg", n_tuples=5000).stream()[:5000]
+        cfg = EngineConfig(codec=codec, micro_batch_bytes=2048, lanes=4)
+        eng = CStreamEngine(cfg, sample=vals)
+        solo = eng.compress(vals, emit_frame=True)
+
+        spec = cstream.JobSpec.from_engine_config(cfg, sample=vals).replace(egress=True)
+        with cstream.open(spec) as h:
+            seg = h.push(vals).flush()
+            rep = h.report()
+        assert seg.frame.to_bytes() == solo.frame.to_bytes()
+        assert seg.total_bits == solo.total_bits
+        assert np.array_equal(seg.per_block_bits, solo.per_block_bits)
+        assert seg.stats.ratio == solo.stats.ratio
+        assert rep.n_tuples == solo.n_tuples
+
+    def test_engine_roundtrip_equivalence(self):
+        vals = make_dataset("ecg", n_tuples=4000).stream()[:4000]
+        cfg = EngineConfig(codec="adpcm", micro_batch_bytes=2048, lanes=4)
+        eng = CStreamEngine(cfg, sample=vals)
+        rt = eng.roundtrip(vals)
+
+        spec = cstream.JobSpec.from_engine_config(cfg, sample=vals).replace(egress=True)
+        with cstream.open(spec) as h:
+            h.push(vals)
+            h.flush()
+            rep = h.report()
+        hrt = rep.roundtrips[0]
+        assert np.array_equal(rt.values, hrt.values)
+        assert rt.wire_bytes == hrt.wire_bytes == rep.wire_bytes
+        assert rt.fidelity.max_abs == hrt.fidelity.max_abs == rep.fidelity.max_abs
+        assert rt.fidelity.within_bound and rep.fidelity.within_bound
+
+    def test_engine_gang_compress_equivalence(self):
+        rng = np.random.default_rng(3)
+        streams = [
+            np.clip(np.cumsum(rng.integers(-8, 9, size=3000)) + 4096, 0, 65535)
+            .astype(np.uint32)
+            for _ in range(3)
+        ]
+        cfg = EngineConfig(codec="tcomp32", micro_batch_bytes=2048, lanes=4)
+        eng = CStreamEngine(cfg, sample=streams[0])
+        old = eng.gang_compress(streams, emit_frames=True)
+
+        spec = cstream.JobSpec.from_engine_config(cfg, sample=streams[0])
+        new = cstream.gang_compress(spec, streams, emit_frames=True)
+        assert new.n_streams == old.n_streams
+        assert new.dispatches == old.dispatches
+        for a, b in zip(old.results, new.results):
+            assert a.frame.to_bytes() == b.frame.to_bytes()
+            assert a.total_bits == b.total_bits
+
+    @pytest.mark.parametrize("gang", [False, True])
+    def test_server_run_equivalence(self, gang):
+        """Solo and gang server runs: identical flush-record keys, egress
+        frame bytes, dispatch counts and report aggregates whether driven
+        through StreamServer.run or Dispatcher handles."""
+        mix = ["tcomp32", "tcomp32", "rle", "adpcm"]
+        rate = rate_for_dataset(1)
+
+        def feeds_for(i):
+            vals = make_dataset("micro", n_tuples=2000).stream()[:2000]
+            return vals, zipf_timestamps(2000, rate, zipf_factor=0.7, seed=i)
+
+        srv = StreamServer(max_sessions=8, egress=True, gang=gang)
+        feeds = {}
+        for i, codec in enumerate(mix):
+            vals, ts = feeds_for(i)
+            srv.admit(
+                f"t{i}",
+                EngineConfig(codec=codec, micro_batch_bytes=1024, lanes=4),
+                sample=vals,
+            )
+            feeds[f"t{i}"] = (vals, ts)
+        srep = srv.run(feeds)
+
+        disp = cstream.Dispatcher(max_sessions=8, gang=gang)
+        for i, codec in enumerate(mix):
+            vals, ts = feeds_for(i)
+            cfg = EngineConfig(codec=codec, micro_batch_bytes=1024, lanes=4)
+            spec = cstream.JobSpec.from_engine_config(cfg, sample=vals).replace(
+                egress=True, gang=gang
+            )
+            disp.open(spec, topic=f"t{i}").push(vals, ts)
+        drep = disp.run()
+
+        assert drep.total_tuples == srep.total_tuples
+        assert drep.n_dispatches == srep.n_dispatches
+        assert drep.ratio == srep.ratio
+        for t in srv.sessions:
+            a, b = srv.sessions[t], disp.sessions[t]
+            assert [f.key() for f in a.flushes] == [f.key() for f in b.flushes], t
+            assert a.egress_frame().to_bytes() == b.egress_frame().to_bytes(), t
+            fa, wa, _ = a.egress_fidelity()
+            fb, wb, _ = b.egress_fidelity()
+            assert wa == wb and fa.max_abs == fb.max_abs, t
+
+    def test_gang_dispatcher_amortizes_via_handles(self):
+        """8 same-signature handles on a gang dispatcher issue <= 1/4 the
+        dispatches of a solo dispatcher — the gang claim through the new
+        surface alone."""
+        n, rate = 2048, rate_for_dataset(1)
+
+        def run(gang):
+            d = cstream.Dispatcher(max_sessions=16, gang=gang)
+            for i in range(8):
+                vals = make_dataset("micro", n_tuples=n).stream()[:n]
+                spec = cstream.JobSpec(
+                    codec="tcomp32", micro_batch_bytes=1024, gang=gang
+                )
+                d.open(spec, topic=f"s{i}").push(vals, uniform_timestamps(n, rate))
+            return d.run()
+
+        solo, gang = run(False), run(True)
+        assert solo.total_tuples == gang.total_tuples == 8 * n
+        assert gang.n_dispatches <= solo.n_dispatches / 4
+
+    def test_engine_shim_accepts_legacy_eager_scan_chunk(self):
+        """The old planner silently pinned eager execution to per-block
+        dispatch whatever scan_chunk said; the shim must keep accepting
+        that combination (the new surface rejects it at negotiation)."""
+        from repro.core.strategies import ExecutionStrategy
+
+        eng = CStreamEngine(
+            EngineConfig(
+                codec="tcomp32",
+                execution=ExecutionStrategy.EAGER,
+                scan_chunk=4,
+                micro_batch_bytes=1024,
+            )
+        )
+        assert eng.pipeline.plan.scan_chunk == 1
+
+    def test_dispatcher_auto_topic_skips_user_collisions(self):
+        d = cstream.Dispatcher(max_sessions=4)
+        d.open(cstream.JobSpec(codec="tcomp32"), topic="job-1")
+        a = d.open(cstream.JobSpec(codec="tcomp32"))  # auto: job-0
+        b = d.open(cstream.JobSpec(codec="tcomp32"))  # auto: must skip job-1
+        assert {a.topic, b.topic}.isdisjoint({None})
+        assert len(d.sessions) == 3
+
+    def test_open_gang_rejects_length_mismatch(self):
+        d = cstream.Dispatcher(gang=True)
+        specs = [cstream.JobSpec(codec="tcomp32")] * 3
+        with pytest.raises(cstream.NegotiationError, match="3 specs but 1 samples"):
+            d.open_gang(specs, samples=[None])
+        with pytest.raises(cstream.NegotiationError, match="3 specs but 2 topics"):
+            d.open_gang(specs, topics=["a", "b"])
+
+    def test_multi_segment_report_surfaces_worst_fidelity(self):
+        """An early out-of-bound segment must dominate the aggregate even
+        when later segments are clean."""
+        spec = cstream.JobSpec(
+            codec="uanuq", egress=True, params={"qbits": 8, "vmax": 1000.0}
+        )
+        h = cstream.open(spec)
+        h.push(np.full(600, 3_000_000, np.uint32))  # clips far past vmax
+        h.flush()
+        h.push(np.full(600, 900, np.uint32))  # in range
+        h.flush()
+        rep = h.close()
+        assert len(rep.roundtrips) == 2
+        assert rep.roundtrips[1].fidelity.within_bound
+        assert not rep.fidelity.within_bound
+
+    def test_shims_warn_and_new_surface_does_not(self):
+        vals = _stream(2000)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            CStreamEngine(EngineConfig(codec="tcomp32", micro_batch_bytes=1024))
+            StreamServer(max_sessions=2)
+        assert sum(issubclass(x.category, DeprecationWarning) for x in w) == 2
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            spec = cstream.JobSpec(codec="rle", micro_batch_bytes=1024, egress=True)
+            cstream.negotiate(spec)
+            with cstream.open(spec) as h:
+                h.push(vals)
+                h.flush()
+                assert h.frames()
+            d = cstream.Dispatcher(max_sessions=2)
+            hd = d.open(cstream.JobSpec(codec="tcomp32", micro_batch_bytes=1024))
+            hd.push(vals, uniform_timestamps(len(vals), 1e5))
+            d.run()
+            assert hd.report().n_tuples == len(vals)
+
+
+# ----------------------------------------------------------- handle smoke ----
+class TestStreamHandle:
+    @pytest.mark.parametrize("name", ALL_CODECS)
+    def test_open_push_flush_report_close_all_codecs(self, name):
+        """The acceptance smoke: every Table 1 codec drives through the ONE
+        handle surface with the egress fidelity contract honored."""
+        vals = _stream(2200, seed=7)
+        spec = cstream.JobSpec(codec=name, micro_batch_bytes=2048, egress=True)
+        with cstream.open(spec, sample=vals) as h:
+            h.push(vals)
+            res = h.flush()
+            rep = h.report()
+        assert res is not None and rep.n_tuples == vals.size
+        assert rep.n_frames == 1 and len(h.frames()) == 1
+        assert rep.fidelity is not None and rep.fidelity.within_bound
+
+    def test_offline_push_rejects_timestamps(self):
+        h = cstream.open(cstream.JobSpec(codec="tcomp32"))
+        with pytest.raises(ValueError, match="timestamps"):
+            h.push(_stream(100), np.zeros(100))
+
+    def test_session_push_requires_timestamps(self):
+        d = cstream.Dispatcher(max_sessions=2)
+        h = d.open(cstream.JobSpec(codec="tcomp32"))
+        with pytest.raises(ValueError, match="timestamps"):
+            h.push(_stream(100))
+
+    def test_closed_handle_refuses_work(self):
+        h = cstream.open(cstream.JobSpec(codec="tcomp32"))
+        h.push(_stream(128))
+        h.close()
+        with pytest.raises(ValueError, match="closed"):
+            h.push(_stream(128))
+
+    def test_empty_flush_returns_none(self):
+        h = cstream.open(cstream.JobSpec(codec="tcomp32"))
+        assert h.flush() is None
+        rep = h.close()
+        assert rep.n_tuples == 0 and rep.n_frames == 0
+
+    def test_dispatcher_close_drains_sessions(self):
+        d = cstream.Dispatcher(max_sessions=4, flush_timeout_s=1e9)
+        h = d.open(cstream.JobSpec(codec="tcomp32", flush_timeout_s=1e9))
+        vals = _stream(100)  # far below capacity: only a drain flushes it
+        h.push(vals, np.linspace(0.0, 0.001, 100))
+        rep = d.close()
+        assert rep.total_tuples == 100
+        assert h.report().session.n_flushes == 1
