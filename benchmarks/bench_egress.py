@@ -1,0 +1,173 @@
+"""Beyond-paper: the egress dataflow — device-resident frame compaction +
+async double-buffered fetch (DESIGN.md §13).
+
+What this bench earns (recorded in BENCH_egress.json so the perf
+trajectory has a baseline):
+  * D2H bytes vs wire bytes: the compacted path must move payload traffic
+    within 1.1x of `Frame.wire_bytes` (the legacy worst-case-buffer path
+    moves a ~3-11x multiple — the motivating gap);
+  * frames from both paths are byte-identical (`build_frame` is the oracle);
+  * the compaction adds no dispatches (it is fused into the scan jit);
+  * egress (compress + frame) throughput, measured end-to-end AND in the
+    transfer-bound regime the compaction targets.
+
+On measured walls, note the backend: on this CPU container a `jax` array
+and its host copy share memory, so the legacy path's worst-case-buffer
+"transfers" cost ~nothing and measured end-to-end lands near parity —
+there is no bus to win back. On a real device backend every fetched byte
+crosses an interconnect, and egress throughput approaches
+bytes / (compute + D2H_bytes/link_bw): the `xfer_bound_speedup` column
+(the D2H byte ratio) IS the throughput ratio once the link, not compute,
+is the bottleneck, and `modeled_mbps` prices both paths at a declared
+edge-uplink bandwidth (measured-vs-modeled split, DESIGN.md §2/§13).
+
+Correctness claims raise (failing the smoke gate); throughput claims are
+measured/modeled and WARN when below target.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import engine_cfg, fmt_table, stream_for
+from repro.core.pipeline import CompressionPipeline
+
+#: codec -> dataset (the bench_roundtrip workload pairs)
+CODEC_STREAMS = [
+    ("tcomp32", "micro"),
+    ("leb128", "micro"),
+    ("delta_leb128", "stock"),
+    ("tdic32", "rovio"),
+    ("rle", "sensor_runs"),
+    ("leb128_nuq", "micro"),
+    ("uanuq", "micro"),
+    ("adpcm", "ecg"),
+    ("uaadpcm", "ecg"),
+    ("pla", "ecg"),
+]
+#: --smoke / quick subset: one stateless, one stateful-replay, one
+#: stream-scope (flush mini-block), one quantized
+SMOKE_CODECS = {"tcomp32", "delta_leb128", "rle", "leb128_nuq"}
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "BENCH_egress.json")
+
+#: declared modeling constant for the transfer-bound pricing: an edge
+#: uplink / host-link in the 100 MB/s order (GbE / USB2 / PCIe-share on the
+#: paper's device class). The conclusion is insensitive to the exact value:
+#: it only sets where compute stops hiding the byte ratio.
+EDGE_LINK_BW = 100e6  # bytes/s
+
+
+def _stream(name: str, quick: bool) -> np.ndarray:
+    if name == "sensor_runs":  # heavy-runs stream so RLE has runs to merge
+        rng = np.random.default_rng(5)
+        n = (1 << 15) if quick else (1 << 17)
+        return np.repeat(
+            rng.integers(0, 256, size=n // 32 + 1).astype(np.uint32), 32
+        )[:n]
+    return stream_for(name, quick)
+
+
+def _best_of(k, fn):
+    best = float("inf")
+    out = None
+    for _ in range(k):
+        t0 = time.perf_counter()
+        res = fn()
+        wall = time.perf_counter() - t0
+        if wall < best:
+            best, out = wall, res
+    return best, out
+
+
+def run(quick: bool = True) -> dict:
+    pairs = [
+        (c, d) for c, d in CODEC_STREAMS if (not quick) or c in SMOKE_CODECS
+    ]
+    rows = []
+    for codec, ds in pairs:
+        stream = _stream(ds, quick)
+        pipe = CompressionPipeline(engine_cfg(codec, quick), sample=stream)
+        shaped = pipe.shape_blocks(stream)
+        mb = shaped.n_valid * 4 / 1e6
+
+        # compile everything outside the timed region
+        pipe.execute(shaped, collect_payload=True, compact=True)
+        pipe.execute(shaped, collect_payload=True, compact=False)
+        pipe.execute(shaped)
+
+        def egress(compact):
+            pipe.reset_d2h()
+            d0 = pipe.dispatches
+            res = pipe.execute(shaped, collect_payload=True, compact=compact)
+            frame = pipe.frame_from(shaped, res)
+            return frame, pipe.d2h_bytes, pipe.dispatches - d0
+
+        wall_c, (frame_c, d2h_c, disp_c) = _best_of(3, lambda: egress(True))
+        wall_l, (frame_l, d2h_l, disp_l) = _best_of(3, lambda: egress(False))
+
+        wire = frame_c.wire_bytes
+        # transfer-bound pricing: both paths pay their bytes at the link
+        modeled_c = wall_c + d2h_c / EDGE_LINK_BW
+        modeled_l = wall_l + d2h_l / EDGE_LINK_BW
+        rows.append({
+            "codec": codec,
+            "dataset": ds,
+            "wire_bytes": wire,
+            "d2h_bytes": d2h_c,
+            "d2h_over_wire": d2h_c / max(wire, 1),
+            "legacy_d2h_over_wire": d2h_l / max(wire, 1),
+            "egress_mbps": mb / max(wall_c, 1e-12),
+            "legacy_egress_mbps": mb / max(wall_l, 1e-12),
+            "e2e_speedup": wall_l / max(wall_c, 1e-12),
+            "xfer_bound_speedup": d2h_l / max(d2h_c, 1),
+            "modeled_mbps": mb / modeled_c,
+            "legacy_modeled_mbps": mb / modeled_l,
+            "modeled_speedup": modeled_l / modeled_c,
+            "frames_identical": frame_c.to_bytes() == frame_l.to_bytes(),
+            "dispatches_equal": disp_c == disp_l,
+        })
+
+    print(fmt_table(
+        rows,
+        ["codec", "dataset", "wire_bytes", "d2h_over_wire",
+         "legacy_d2h_over_wire", "egress_mbps", "legacy_egress_mbps",
+         "e2e_speedup", "xfer_bound_speedup", "modeled_speedup",
+         "frames_identical", "dispatches_equal"],
+        "egress: device-compacted vs legacy worst-case collection",
+    ))
+
+    correctness = {
+        "egress_frames_bit_identical": all(r["frames_identical"] for r in rows),
+        "d2h_within_1p1x_wire": all(r["d2h_over_wire"] <= 1.1 for r in rows),
+        "dispatch_count_unchanged": all(r["dispatches_equal"] for r in rows),
+    }
+    claims = dict(correctness)
+    # the acceptance target: >=1.5x egress throughput where the egress
+    # link is the bottleneck (the byte ratio IS the throughput ratio there)
+    claims["egress_1_5x_transfer_bound"] = (
+        float(np.median([r["xfer_bound_speedup"] for r in rows])) >= 1.5
+    )
+    claims["legacy_moved_3x_wire"] = (
+        float(np.median([r["legacy_d2h_over_wire"] for r in rows])) >= 3.0
+    )
+    print("   claims:", claims)
+
+    out = {"rows": rows, "claims": claims}
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print(f"   wrote {OUT_JSON}")
+
+    # correctness claims gate the smoke run: a miss here is a wire-format
+    # bug, not a perf regression — fail the module, not just the claim line
+    failed = [k for k, ok in correctness.items() if not ok]
+    if failed:
+        raise RuntimeError(f"egress correctness claims failed: {failed}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

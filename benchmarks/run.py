@@ -31,14 +31,18 @@ MODULES = [
     "bench_production_paths",  # beyond-paper
     "bench_server",            # beyond-paper: fused executor + StreamServer
     "bench_roundtrip",         # beyond-paper: egress/decode path + fidelity
+    "bench_egress",            # beyond-paper: frame compaction + D2H accounting
     "bench_roofline",          # dry-run aggregation
 ]
 
 #: --smoke: the fast subset CI runs on CPU — executor + runtime + egress claims
+#: (bench_egress's correctness claims RAISE on failure, gating the smoke run:
+#: bit-identical frames, D2H-bytes bound, dispatch count unchanged)
 SMOKE_MODULES = [
     "bench_execution",
     "bench_server",
     "bench_roundtrip",
+    "bench_egress",
 ]
 
 

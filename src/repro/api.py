@@ -570,15 +570,19 @@ def run_compress(
     max_blocks: Optional[int] = None,
     breakdown: bool = False,
     emit_frame: bool = False,
+    compact: bool = True,
 ) -> CompressResult:
     """One offline compression run: executor + schedule + latency layers.
 
     The ONE implementation behind both `StreamHandle.flush` (offline mode)
     and the `CStreamEngine.compress` shim — shim equivalence is by
-    construction, and the tests assert it anyway."""
+    construction, and the tests assert it anyway. With `emit_frame` the
+    egress defaults to the device-resident compaction path (DESIGN.md
+    §13); `compact=False` replays the legacy worst-case-buffer collection
+    (the bench baseline and `build_frame` oracle)."""
     shaped = pipe.shape_blocks(np.asarray(values, np.uint32), max_blocks=max_blocks)
 
-    res = pipe.execute(shaped, collect_payload=emit_frame)
+    res = pipe.execute(shaped, collect_payload=emit_frame, compact=compact)
     wall = res.wall_s
     per_block_bits = res.per_block_bits
     total_bits = float(per_block_bits.sum())
@@ -649,6 +653,7 @@ def run_gang_compress(
     spec: JobSpec,
     streams: Sequence[np.ndarray],
     emit_frames: bool = False,
+    compact: bool = True,
 ) -> GangCompressResult:
     """Offline gang execution over S same-geometry streams (DESIGN.md §11);
     shared by `gang_compress` and the `CStreamEngine.gang_compress` shim."""
@@ -656,7 +661,9 @@ def run_gang_compress(
         raise _err("gang compression needs at least one stream")
     shaped = [pipe.shape_blocks(np.asarray(v, np.uint32)) for v in streams]
     d0 = pipe.dispatches
-    exec_results, wall = pipe.execute_gang(shaped, collect_payload=emit_frames)
+    exec_results, wall = pipe.execute_gang(
+        shaped, collect_payload=emit_frames, compact=compact
+    )
     dispatches = pipe.dispatches - d0
 
     profile = spec.hardware()

@@ -12,6 +12,7 @@ package never requires jax_enable_x64.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -151,6 +152,85 @@ def unpack_symbols(words: jax.Array, bitlen: jax.Array):
     return extract_bits(words, offsets, bitlen), offsets
 
 
+def block_word_counts(nbits: jax.Array):
+    """Per-block used-word counts and exclusive prefix offsets.
+
+    `nbits` is int32[n] per-block bit counts; each block's payload occupies
+    `ceil(nbits/32)` words on the wire (blocks start word-aligned). The
+    exclusive cumsum of those counts is every block's word offset in the
+    compacted payload — the encode-side analogue of EDPC's decoupled offset
+    stream."""
+    nw = (nbits.astype(jnp.int32) + 31) // 32
+    offsets = jnp.cumsum(nw) - nw
+    return nw, offsets
+
+
+def compact_payload(words: jax.Array, nbits: jax.Array):
+    """Gather-compact per-block worst-case word buffers into one payload.
+
+    The device-side core of frame building (DESIGN.md §13): every scan step
+    emits a fixed worst-case buffer (`OW = lanes*B*2+2` words) of which only
+    the `ceil(nbits/32)`-word prefix is live. Scatter each block's live
+    prefix to its exclusive-prefix-sum offset so the payload leaves the
+    device already wire-shaped — the host then fetches `payload[:total]`
+    instead of `n * OW` worst-case words.
+
+    Args:
+      words: uint32[n, OW] — stacked worst-case per-block word buffers.
+      nbits: int32[n] — per-block bit counts.
+
+    Returns:
+      payload: uint32[n*OW] — compacted payload; the `total_words` prefix is
+        the wire bytes, the rest is zero.
+      total_words: int32 scalar.
+    """
+    n, ow = words.shape
+    nw, offsets = block_word_counts(nbits)
+    total = jnp.sum(nw)
+    cap = n * ow
+    # gather formulation (scatter-free): every output word binary-searches
+    # the offset stream for its source block — the same decoupled-offset
+    # dataflow EDPC uses for decode, applied to encode-side compaction.
+    # `side="right"` makes zero-width blocks transparent: equal offsets
+    # resolve to the last (the only word-owning) block at that position.
+    i = jnp.arange(cap, dtype=jnp.int32)
+    b = jnp.searchsorted(offsets, i, side="right").astype(jnp.int32) - 1
+    src = jnp.clip(b * ow + (i - offsets[b]), 0, cap - 1)
+    payload = jnp.where(i < total, words.reshape(-1)[src], jnp.uint32(0))
+    return payload, total.astype(jnp.int32)
+
+
+def pack_meta7(bitlen: jax.Array) -> jax.Array:
+    """Pack 0..64 bitlens at 7 bits each into uint32 words, on device.
+
+    The traced mirror of the host-side `_pack_bitlens` (bit-identical for
+    the same input), formulated scatter-free: 32 symbols occupy exactly
+    224 bits = 7 words, so the stream tiles into (unit, 32)-symbol groups
+    whose word contributions have STATIC shifts — each of a unit's 7 words
+    ORs together the <=6 symbols whose 7-bit fields overlap it. All uint32
+    math (no x64); a short stream pads with zero symbols, which contribute
+    no bits, then truncates to ceil(7S/32) words."""
+    s_count = bitlen.shape[0]
+    mw = (7 * s_count + 31) // 32
+    if s_count == 0:
+        return jnp.zeros((0,), U32)
+    units = (s_count + 31) // 32
+    v = jnp.zeros((units * 32,), U32)
+    v = v.at[:s_count].set(bitlen.astype(U32) & np.uint32(0x7F))
+    v = v.reshape(units, 32)
+    out = []
+    for w in range(7):
+        acc = jnp.zeros((units,), U32)
+        for j in range(32):
+            sh = 7 * j - 32 * w  # symbol j's bit offset within word w
+            if sh <= -7 or sh >= 32:
+                continue  # field [7j, 7j+7) does not overlap word w
+            col = v[:, j]
+            acc = acc | (col << sh if sh >= 0 else col >> -sh)
+        out.append(acc)
+    return jnp.stack(out, axis=1).reshape(units * 7)[:mw]
+
+
 def zigzag_encode(d: jax.Array) -> jax.Array:
     """Map signed int32 deltas to uint32 so small magnitudes are small."""
     d = d.astype(jnp.int32)
@@ -237,6 +317,11 @@ class Frame:
     block_valid: np.ndarray  # uint32[n_blocks]
     bitlen: np.ndarray  # int32[n_symbols], stream order
     payload: np.ndarray  # uint32[payload_words]
+    #: already-serialized 7-bit bitlen stream (uint32 words). Set when the
+    #: metadata arrived wire-shaped (device compaction, or `from_bytes`);
+    #: `to_bytes` then reuses it instead of re-packing `bitlen`. Must stay
+    #: consistent with `bitlen` — both come from the same source.
+    packed_meta: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------ shapes --
     @property
@@ -258,9 +343,9 @@ class Frame:
             self.n_full * self.per_lane + self.tail_per_lane + self.flush_slots
         )
 
-    def block_words(self):
-        """Word count of each block's payload segment."""
-        return [(int(b) + 31) // 32 for b in self.block_bits]
+    def block_words(self) -> np.ndarray:
+        """Word count of each block's payload segment (int64[n_blocks])."""
+        return (np.asarray(self.block_bits, np.int64) + 31) // 32
 
     @property
     def payload_bits(self) -> int:
@@ -276,7 +361,9 @@ class Frame:
     # ----------------------------------------------------------- serialize --
     def to_bytes(self) -> bytes:
         nb = self.n_blocks
-        meta = _pack_bitlens(self.bitlen)
+        meta = self.packed_meta
+        if meta is None:
+            meta = _pack_bitlens(self.bitlen)
         header = np.array(
             [
                 FRAME_MAGIC,
@@ -341,9 +428,88 @@ class Frame:
             )
         if (7 * frame.n_symbols + 31) // 32 != meta_words:
             raise ValueError("frame header inconsistent: bitlen metadata size")
-        if sum(frame.block_words()) != payload_words:
+        if int(frame.block_words().sum()) != payload_words:
             raise ValueError("frame header inconsistent: payload size")
         frame.bitlen = _unpack_bitlens(meta, frame.n_symbols)
+        frame.packed_meta = meta  # reserialization reuses the parsed stream
+        return frame
+
+    # ------------------------------------------------- compacted fast path --
+    @classmethod
+    def from_compacted(
+        cls,
+        *,
+        codec_id: int,
+        lanes: int,
+        per_lane: int,
+        n_full: int,
+        tail_per_lane: int,
+        flush_slots: int,
+        n_valid: int,
+        block_bits: np.ndarray,
+        block_valid: np.ndarray,
+        payload: np.ndarray,
+        bitlen: Optional[np.ndarray] = None,
+        packed_meta: Optional[np.ndarray] = None,
+    ) -> "Frame":
+        """Zero-copy framing for payloads that arrive already wire-shaped.
+
+        The device-resident compaction path (DESIGN.md §13) hands over the
+        exact concatenated payload words and (when geometry allows) the
+        7-bit-packed bitlen stream; this constructor does header math and
+        consistency checks ONLY — no per-block slicing or concatenation
+        loop (that is `build_frame`, which survives as the oracle the
+        equality tests compare against). Pass `packed_meta` to skip
+        metadata re-packing at serialization; `bitlen` is then unpacked
+        from it (one vectorized pass) for the decode side."""
+        frame = cls(
+            codec_id=codec_id,
+            lanes=lanes,
+            per_lane=per_lane,
+            n_full=n_full,
+            tail_per_lane=tail_per_lane,
+            flush_slots=flush_slots,
+            n_valid=n_valid,
+            block_bits=np.ascontiguousarray(block_bits, np.uint32),
+            block_valid=np.ascontiguousarray(block_valid, np.uint32),
+            bitlen=np.zeros(0, np.int32),
+            payload=np.ascontiguousarray(payload, np.uint32),
+            packed_meta=(
+                None if packed_meta is None
+                else np.ascontiguousarray(packed_meta, np.uint32)
+            ),
+        )
+        ns = frame.n_symbols
+        if bitlen is None:
+            if frame.packed_meta is None:
+                raise ValueError("from_compacted needs bitlen or packed_meta")
+            bitlen = _unpack_bitlens(frame.packed_meta, ns)
+        frame.bitlen = np.ascontiguousarray(bitlen, np.int32).ravel()
+        # consistency: the compacted parts must agree with the header math,
+        # exactly as from_bytes validates a parsed frame
+        if frame.block_bits.size != frame.n_blocks:
+            raise ValueError(
+                f"from_compacted: {frame.block_bits.size} block bit counts "
+                f"for {frame.n_blocks} blocks"
+            )
+        if frame.block_valid.size != frame.n_blocks:
+            raise ValueError(
+                f"from_compacted: {frame.block_valid.size} block valid counts "
+                f"for {frame.n_blocks} blocks"
+            )
+        if frame.bitlen.size != ns:
+            raise ValueError(
+                f"from_compacted: {frame.bitlen.size} bitlens for {ns} symbols"
+            )
+        if frame.packed_meta is not None and frame.packed_meta.size != (
+            7 * ns + 31
+        ) // 32:
+            raise ValueError("from_compacted: packed_meta size mismatch")
+        if int(frame.block_words().sum()) != frame.payload.size:
+            raise ValueError(
+                f"from_compacted: payload has {frame.payload.size} words, "
+                f"block bit counts imply {int(frame.block_words().sum())}"
+            )
         return frame
 
 
@@ -361,15 +527,28 @@ def build_frame(
 
     `words` may be the executor's fixed worst-case buffer; only the used
     prefix (ceil(nbits/32) words) enters the payload, so the wire carries
-    no worst-case padding."""
-    block_bits, block_valid, bitlens, segments = [], [], [], []
-    for words, nbits, bitlen, valid in blocks:
-        nbits = int(nbits)
-        used = (nbits + 31) // 32
-        segments.append(np.ascontiguousarray(words[:used], np.uint32))
-        block_bits.append(nbits)
-        block_valid.append(int(valid))
-        bitlens.append(np.ascontiguousarray(bitlen, np.int32).ravel())
+    no worst-case padding. Output arrays are pre-sized from the vectorized
+    count math and filled in place (no list-append + concatenate pass)."""
+    blocks = list(blocks)
+    block_bits = np.fromiter(
+        (int(b[1]) for b in blocks), np.uint32, count=len(blocks)
+    )
+    block_valid = np.fromiter(
+        (int(b[3]) for b in blocks), np.uint32, count=len(blocks)
+    )
+    used = (block_bits.astype(np.int64) + 31) // 32
+    word_off = np.concatenate([[0], np.cumsum(used)])
+    sym_counts = np.fromiter(
+        (np.asarray(b[2]).size for b in blocks), np.int64, count=len(blocks)
+    )
+    sym_off = np.concatenate([[0], np.cumsum(sym_counts)])
+    payload = np.zeros(int(word_off[-1]), np.uint32)
+    bitlen = np.zeros(int(sym_off[-1]), np.int32)
+    for b, (words, _, bl, _) in enumerate(blocks):
+        payload[word_off[b] : word_off[b + 1]] = np.asarray(
+            words[: used[b]], np.uint32
+        )
+        bitlen[sym_off[b] : sym_off[b + 1]] = np.asarray(bl, np.int32).ravel()
     return Frame(
         codec_id=codec_id,
         lanes=lanes,
@@ -378,12 +557,8 @@ def build_frame(
         tail_per_lane=tail_per_lane,
         flush_slots=flush_slots,
         n_valid=n_valid,
-        block_bits=np.asarray(block_bits, np.uint32),
-        block_valid=np.asarray(block_valid, np.uint32),
-        bitlen=(
-            np.concatenate(bitlens) if bitlens else np.zeros(0, np.int32)
-        ),
-        payload=(
-            np.concatenate(segments) if segments else np.zeros(0, np.uint32)
-        ),
+        block_bits=block_bits,
+        block_valid=block_valid,
+        bitlen=bitlen,
+        payload=payload,
     )

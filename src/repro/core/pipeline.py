@@ -166,6 +166,40 @@ class BlockPayload:
 
 
 @dataclasses.dataclass
+class CompactedPayload:
+    """One execution's egress, fetched wire-shaped (DESIGN.md §13).
+
+    The device compacts every block's live word prefix to its exclusive-
+    prefix-sum offset and packs the per-symbol bitlens at 7 bits/symbol, so
+    what crosses device->host is (within per-block word alignment and the
+    raw tail/flush metadata) exactly what `Frame.to_bytes` will emit —
+    `Frame.from_compacted` then does header math only."""
+
+    block_bits: np.ndarray  # int64[n_blocks (+tail +flush)]
+    block_valid: np.ndarray  # int64[n_blocks], real tuples per block
+    sym_counts: np.ndarray  # int64[n_blocks], symbol slots per block
+    payload: np.ndarray  # uint32 — exact wire payload, stream order
+    bitlen: np.ndarray  # int32[n_symbols] (decode-ready, unpacked)
+    packed_meta: Optional[np.ndarray]  # uint32 — wire 7-bit metadata stream
+    d2h_bytes: int  # payload+metadata bytes actually transferred
+
+    def block_payloads(self) -> List[BlockPayload]:
+        """Per-block view (numpy slices, no copies) for legacy consumers."""
+        used = (self.block_bits + 31) // 32
+        w_off = np.concatenate([[0], np.cumsum(used)]).astype(np.int64)
+        s_off = np.concatenate([[0], np.cumsum(self.sym_counts)]).astype(np.int64)
+        return [
+            BlockPayload(
+                self.payload[w_off[b] : w_off[b + 1]],
+                int(self.block_bits[b]),
+                self.bitlen[s_off[b] : s_off[b + 1]],
+                int(self.block_valid[b]),
+            )
+            for b in range(self.block_bits.size)
+        ]
+
+
+@dataclasses.dataclass
 class ExecutionResult:
     """What one execution pass produced: bits per block + measured wall."""
 
@@ -173,8 +207,19 @@ class ExecutionResult:
     wall_s: float
     n_tuples: int  # real tuples compressed
     state: Any  # final codec state (for session reuse)
-    payload: Optional[List[BlockPayload]] = None  # collect_payload=True only
+    compacted: Optional[CompactedPayload] = None  # compacted egress (default)
+    legacy_payload: Optional[List[BlockPayload]] = None  # compact=False path
     flush_slots: int = 0  # per-lane slots of the flush mini-block
+
+    @property
+    def payload(self) -> Optional[List[BlockPayload]]:
+        """Per-block wire contributions (either egress path), or None when
+        the run did not collect a payload."""
+        if self.legacy_payload is not None:
+            return self.legacy_payload
+        if self.compacted is not None:
+            return self.compacted.block_payloads()
+        return None
 
 
 @dataclasses.dataclass
@@ -184,6 +229,164 @@ class DecompressionResult:
     values: np.ndarray  # uint32[n_valid]
     wall_s: float
     n_tuples: int
+
+
+# ------------------------------------------------------------- egress sink --
+class _EgressSink:
+    """Assembles a `CompactedPayload` from double-buffered async D2H fetches.
+
+    `put_*` enqueues one unit's DEVICE handles and fetches the PREVIOUS
+    unit: by the time unit k's scalars force a sync, unit k+1's dispatch is
+    already in flight, so the device computes ahead of the host copies —
+    the async egress overlap that replaces the old per-execution
+    worst-case-buffer copy pass (DESIGN.md §13). Small arrays additionally
+    start `copy_to_host_async` at enqueue time where the backend offers it.
+
+    Stream-order contract: 7-bit-packed metadata units (full blocks) must
+    all arrive before raw-bitlen units (tail/flush), and every packed unit
+    must cover a multiple of 32 symbols, so the packed segments splice into
+    the frame's global metadata stream without re-alignment.
+    """
+
+    def __init__(self, pipe: "CompressionPipeline"):
+        self.pipe = pipe
+        self._pending = None
+        self.block_bits: List[int] = []
+        self.block_valid: List[int] = []
+        self.sym_counts: List[int] = []
+        self.segments: List[np.ndarray] = []
+        self.metas: List[np.ndarray] = []
+        self.meta_symbols = 0
+        self.raw_bitlens: List[np.ndarray] = []
+        self.d2h_bytes = 0
+
+    # ------------------------------------------------- low-level (host) adds
+    def add_unit(
+        self,
+        seg: np.ndarray,
+        bits_list,
+        valids,
+        syms: int,
+        meta: Optional[np.ndarray] = None,
+        raw: Optional[np.ndarray] = None,
+        extra_bytes: int = 0,
+    ) -> None:
+        """Record one fetched unit (`seg` exact payload words for `len(bits_list)`
+        blocks of `syms` symbols each, plus its packed or raw metadata)."""
+        self.segments.append(seg)
+        self.block_bits.extend(int(b) for b in bits_list)
+        self.block_valid.extend(int(v) for v in valids)
+        n = len(self.block_bits) - len(self.block_valid)
+        assert n == 0, "bits/valid counts diverged"
+        self.sym_counts.extend([syms] * len(bits_list))
+        meta_bytes = 0
+        if meta is not None:
+            assert not self.raw_bitlens, "packed metadata after raw metadata"
+            self.metas.append(meta.reshape(-1))
+            self.meta_symbols += syms * len(bits_list)
+            meta_bytes = meta.nbytes
+        if raw is not None:
+            r = np.asarray(raw, np.int32).reshape(-1)
+            self.raw_bitlens.append(r)
+            meta_bytes = r.nbytes
+        self.d2h_bytes += seg.nbytes + meta_bytes + extra_bytes
+        self.pipe.d2h_payload_bytes += seg.nbytes
+        self.pipe.d2h_meta_bytes += meta_bytes
+        self.pipe.d2h_ctrl_bytes += extra_bytes
+
+    # -------------------------------------------- double-buffered device puts
+    @staticmethod
+    def _start_host_copy(arrs) -> None:
+        for a in arrs:
+            if hasattr(a, "copy_to_host_async"):
+                a.copy_to_host_async()
+
+    def put_chunk(self, tb, payload, total, meta, packed: bool, syms: int, valid: int):
+        """One fused-scan chunk: tb int32[C], payload uint32[C*OW] (compacted,
+        `total` words live), meta uint32[C, MW] packed or int32[C, syms] raw."""
+        self._start_host_copy((tb, total, meta))
+        self._flip(("chunk", tb, payload, total, meta, packed, syms, valid))
+
+    def put_block(self, tb, words, blen, packed: bool, syms: int, valid: int):
+        """One single-block unit (eager block / tail / flush): tb scalar,
+        words uint32[OW] worst-case (host slices the live prefix), blen
+        packed uint32[MW] or raw int32[...]."""
+        self._start_host_copy((tb, blen))
+        self._flip(("block", tb, words, blen, packed, syms, valid))
+
+    def _flip(self, item) -> None:
+        prev, self._pending = self._pending, item
+        if prev is not None:
+            self._fetch(prev)
+
+    def flush_pending(self) -> None:
+        if self._pending is not None:
+            self._fetch(self._pending)
+            self._pending = None
+
+    def _fetch(self, item) -> None:
+        if item[0] == "chunk":
+            _, tb, payload, total, meta, packed, syms, valid = item
+            tw = int(jax.device_get(total))  # syncs THIS unit only
+            seg = np.asarray(payload[:tw])  # device slice: live words travel
+            tb_np = np.asarray(tb, np.int64)
+            meta_np = np.asarray(meta)
+            self.add_unit(
+                seg,
+                tb_np,
+                [valid] * tb_np.size,
+                syms,
+                meta=meta_np if packed else None,
+                raw=None if packed else meta_np,
+                extra_bytes=4 * tb_np.size + 4,
+            )
+        else:
+            _, tb, words, blen, packed, syms, valid = item
+            tbi = int(jax.device_get(tb))
+            seg = np.asarray(words[: (tbi + 31) // 32])
+            blen_np = np.asarray(blen)
+            self.add_unit(
+                seg,
+                [tbi],
+                [valid],
+                syms,
+                meta=blen_np if packed else None,
+                raw=None if packed else blen_np,
+                extra_bytes=4,
+            )
+
+    # ---------------------------------------------------------------- finish
+    def finish(self) -> CompactedPayload:
+        self.flush_pending()
+        payload = (
+            np.concatenate(self.segments) if self.segments else np.zeros(0, np.uint32)
+        )
+        raw = (
+            np.concatenate(self.raw_bitlens)
+            if self.raw_bitlens
+            else np.zeros(0, np.int32)
+        )
+        if self.metas:
+            meta_cat = np.concatenate(self.metas)
+            # packed units cover whole 32-symbol multiples, so the host-
+            # packed raw tail splices in word-aligned
+            assert self.meta_symbols % 32 == 0
+            packed_meta = np.concatenate([meta_cat, bits._pack_bitlens(raw)])
+            bitlen = np.concatenate(
+                [bits._unpack_bitlens(meta_cat, self.meta_symbols), raw]
+            )
+        else:
+            packed_meta = None
+            bitlen = raw
+        return CompactedPayload(
+            block_bits=np.asarray(self.block_bits, np.int64),
+            block_valid=np.asarray(self.block_valid, np.int64),
+            sym_counts=np.asarray(self.sym_counts, np.int64),
+            payload=payload,
+            bitlen=bitlen,
+            packed_meta=packed_meta,
+            d2h_bytes=self.d2h_bytes,
+        )
 
 
 # --------------------------------------------------------- blocked executor --
@@ -325,11 +528,32 @@ class CompressionPipeline(BlockedExecutor):
         super().__init__(config, sample=sample, codec=codec, plan=plan)
         self._step = jax.jit(self.step)
         self._masked_step = jax.jit(self.masked_step)
+        self._masked_meta7 = jax.jit(self.masked_step_meta7)
         self._flush_fn = None
         # probe once: does this codec emit trailing state symbols?
         probe = self.codec.flush(self.init_state())
         self._has_flush = probe is not None
         self._flush_slots = 0 if probe is None else int(probe.bitlen.shape[1])
+        #: full blocks' symbol count divides the word size, so per-block
+        #: 7-bit metadata packs on device and splices into the frame's
+        #: global stream without re-alignment (DESIGN.md §13); odd
+        #: geometries fall back to raw int32 bitlen transfer
+        self._meta7_ok = self.plan.block_tuples % 32 == 0
+        #: device->host egress traffic, by section (benchmarks and the
+        #: byte-accounting tests read these; `reset_d2h` zeroes them)
+        self.d2h_payload_bytes = 0
+        self.d2h_meta_bytes = 0
+        self.d2h_ctrl_bytes = 0
+
+    @property
+    def d2h_bytes(self) -> int:
+        """Total egress (payload + metadata + counters) bytes fetched."""
+        return self.d2h_payload_bytes + self.d2h_meta_bytes + self.d2h_ctrl_bytes
+
+    def reset_d2h(self) -> None:
+        self.d2h_payload_bytes = 0
+        self.d2h_meta_bytes = 0
+        self.d2h_ctrl_bytes = 0
 
     # -------------------------------------------------------------- core step
     def step(self, state: Any, block: jax.Array):
@@ -363,6 +587,65 @@ class CompressionPipeline(BlockedExecutor):
     def _scan_body_payload(self, state: Any, blk: jax.Array):
         state, words, tb, blen = self.step(state, blk)
         return state, (tb, words, blen)
+
+    def masked_step_meta7(self, state: Any, block: jax.Array, mask: Optional[jax.Array]):
+        """`masked_step` + on-device 7-bit metadata packing: the serving
+        runtime's egress flush — ONE dispatch whose outputs are already
+        wire-shaped (the host then fetches the live word prefix only)."""
+        state, words, tb, blen = self.masked_step(state, block, mask)
+        return state, words, tb, bits.pack_meta7(blen)
+
+    # ------------------------------------------------ compacted egress fns
+    def _egress_scan_fn(self, chunk_len: int):
+        """Jitted scan-with-compaction over `chunk_len` blocks: ONE
+        dispatch whose egress leaves the device wire-shaped.
+
+        The compaction rides in the scan CARRY: each step writes its
+        worst-case word buffer at the running word offset of a chunk-wide
+        buffer (`dynamic_update_slice`, in-place under XLA), and the next
+        step's live words overwrite the dead tail — so the per-block
+        worst-case buffers are never materialized as scan outputs at all.
+        The per-symbol bitlens scan out and 7-bit-pack in one vectorized
+        pass after the scan (`bits.pack_meta7`)."""
+        key = (chunk_len, "egress")
+        fn = self._scan_fns.get(key)
+        if fn is None:
+            meta7 = self._meta7_ok
+
+            def body(carry, blk):
+                state, buf, off = carry
+                state, words, tb, blen = self.step(state, blk)
+                buf = jax.lax.dynamic_update_slice(buf, words, (off,))
+                return (state, buf, off + (tb + 31) // 32), (tb, blen)
+
+            def scan_compact(state, blks):
+                n, lanes, per_lane = blks.shape
+                cap = n * (lanes * per_lane * 2 + 2)
+                carry0 = (state, jnp.zeros((cap,), jnp.uint32), jnp.int32(0))
+                (state, buf, total), (tb, blen) = jax.lax.scan(body, carry0, blks)
+                meta = jax.vmap(bits.pack_meta7)(blen) if meta7 else blen
+                return state, tb, buf, total, meta
+
+            fn = jax.jit(scan_compact)
+            self._scan_fns[key] = fn
+        return fn
+
+    def _egress_step_fn(self):
+        """Per-block egress step (eager strategy): step + metadata pack;
+        single blocks need no word compaction (the host fetch slices the
+        live prefix at the block's own offset 0)."""
+        fn = self._scan_fns.get("egress_step")
+        if fn is None:
+            meta7 = self._meta7_ok
+
+            def step_compact(state, blk):
+                state, words, tb, blen = self.step(state, blk)
+                meta = bits.pack_meta7(blen) if meta7 else blen
+                return state, words, tb, meta
+
+            fn = jax.jit(step_compact)
+            self._scan_fns["egress_step"] = fn
+        return fn
 
     # ------------------------------------------------------------- finalize
     def _flush_pack_body(self, state: Any):
@@ -441,28 +724,37 @@ class CompressionPipeline(BlockedExecutor):
         """Slice one gang member's state back out of the stacked pytree."""
         return jax.tree_util.tree_map(lambda x: x[i], states)
 
-    def _gang_step_fn(self):
+    def _gang_step_fn(self, meta7: bool = False):
         """Jitted vmapped masked step over a leading session axis: ONE
         dispatch compresses one micro-batch from EACH gang member. jit
         re-specializes per gang size automatically; every member keeps its
         own codec state, mask, and bitstream — the stacking is pure
         data parallelism across sessions (paper §3.4, applied ACROSS
-        streams instead of within one)."""
-        fn = self._scan_fns.get("gang_step")
+        streams instead of within one). `meta7=True` is the egress-wave
+        variant: the final output is the 7-bit-packed bitlen metadata
+        instead of raw int32 bitlens (same dispatch count, wire-width
+        transfer)."""
+        name = "gang_step_meta7" if meta7 else "gang_step"
+        fn = self._scan_fns.get(name)
         if fn is None:
-            fn = jax.jit(jax.vmap(self.masked_step))
-            self._scan_fns["gang_step"] = fn
+            body = self.masked_step_meta7 if meta7 else self.masked_step
+            fn = jax.jit(jax.vmap(body))
+            self._scan_fns[name] = fn
         return fn
 
-    def gang_step(self, states: Any, blocks: jax.Array, masks: jax.Array):
+    def gang_step(
+        self, states: Any, blocks: jax.Array, masks: jax.Array, meta7: bool = False
+    ):
         """One timed gang dispatch over stacked micro-batches.
 
         Args: stacked states (leading gang axis), blocks uint32[S, L, B],
         masks bool[S, L, B]. Returns (states, words[S, OW], total_bits[S],
-        bitlen[S, L*B], wall_s). The first call at a given gang size
-        compiles untimed (memoized), so measured costs stay compute."""
-        fn = self._gang_step_fn()
-        key = ("gang_step", tuple(blocks.shape))
+        meta[S, ...], wall_s) — `meta` is raw bitlens int32[S, L*B], or the
+        7-bit-packed uint32 stream per member when `meta7=True`. The first
+        call at a given gang size compiles untimed (memoized), so measured
+        costs stay compute."""
+        fn = self._gang_step_fn(meta7)
+        key = ("gang_step_meta7" if meta7 else "gang_step", tuple(blocks.shape))
         if key not in self._warmed:
             jax.block_until_ready(fn(states, blocks, masks))
             self._warmed.add(key)
@@ -479,6 +771,33 @@ class CompressionPipeline(BlockedExecutor):
         states, words, tb, blen = jax.vmap(self.step)(states, blks)
         return states, (tb, words, blen)
 
+    def _gang_egress_scan_fn(self, chunk_len: int):
+        """Gang mirror of `_egress_scan_fn`: scan the vmapped body over
+        `chunk_len` stream positions, then compact/pack PER MEMBER — each
+        member's payload and metadata leave the device wire-shaped, so the
+        per-member scatter slices compacted segments instead of copying
+        full (chunk, S, OW) worst-case buffers."""
+        key = (chunk_len, "gang_egress")
+        fn = self._scan_fns.get(key)
+        if fn is None:
+            meta7 = self._meta7_ok
+
+            def scan_compact(states, blks):
+                states, (tb, words, blen) = jax.lax.scan(
+                    self._gang_scan_body, states, blks
+                )
+                # (C, S, ·) -> (S, C, ·): compaction is per member
+                payload, total = jax.vmap(bits.compact_payload)(
+                    jnp.swapaxes(words, 0, 1), tb.T
+                )
+                mblen = jnp.swapaxes(blen, 0, 1)
+                meta = jax.vmap(jax.vmap(bits.pack_meta7))(mblen) if meta7 else mblen
+                return states, tb, payload, total, meta
+
+            fn = jax.jit(scan_compact)
+            self._scan_fns[key] = fn
+        return fn
+
     def _pack_flush_gang(self, states: Any):
         """Vmapped `_flush_pack_body` for stacked states."""
         fn = self._scan_fns.get("gang_flush")
@@ -494,6 +813,7 @@ class CompressionPipeline(BlockedExecutor):
         chunk: Optional[int] = None,
         finalize: bool = True,
         collect_payload: bool = False,
+        compact: bool = True,
     ) -> Tuple[List[ExecutionResult], float]:
         """Run S same-geometry streams through ONE gang-batched execution.
 
@@ -503,7 +823,13 @@ class CompressionPipeline(BlockedExecutor):
         block geometry (full-block count, tail shape); their values, masks
         and states are independent. Returns (per-member ExecutionResults,
         gang wall seconds); each member's `wall_s` is the gang wall split
-        evenly — the dispatch is shared, which is the whole point."""
+        evenly — the dispatch is shared, which is the whole point.
+
+        `collect_payload=True` defaults to the compacted egress: every
+        member's payload/metadata is compacted on device and fetched as
+        exact slices (no full (chunk, S, OW) worst-case copies);
+        `compact=False` keeps the legacy copy-everything collection as the
+        oracle baseline."""
         S = len(shaped_list)
         if S == 0:
             return [], 0.0
@@ -532,23 +858,26 @@ class CompressionPipeline(BlockedExecutor):
             states = [self.init_state() for _ in range(S)]
         stacked = self.stack_states(states)
 
-        # untimed compile pass (memoized per gang geometry)
+        # untimed compile pass (memoized per gang geometry and egress mode)
+        egress = collect_payload and compact
         wkey = (
             "gang",
             S,
             None if blocks_dev is None else tuple(blocks_dev.shape),
             None if tail_dev is None else tuple(tail_dev.shape),
             chunk,
+            egress,
         )
         if wkey not in self._warmed:
             if blocks_dev is not None:
                 warm_state = self.stack_states([self.init_state() for _ in range(S)])
                 for length in sorted({ln for _, ln in self._chunks(n_full, chunk)}):
-                    jax.block_until_ready(
-                        self._scan_fn(length, key="gang", body=self._gang_scan_body)(
-                            warm_state, blocks_dev[:length]
-                        )
+                    fn = (
+                        self._gang_egress_scan_fn(length)
+                        if egress
+                        else self._scan_fn(length, key="gang", body=self._gang_scan_body)
                     )
+                    jax.block_until_ready(fn(warm_state, blocks_dev[:length]))
             if tail_dev is not None:
                 jax.block_until_ready(
                     self._gang_step_fn()(stacked, tail_dev, mask_dev)
@@ -556,6 +885,12 @@ class CompressionPipeline(BlockedExecutor):
             if finalize and self._has_flush:
                 jax.block_until_ready(self._pack_flush_gang(stacked))
             self._warmed.add(wkey)
+
+        if egress:
+            return self._execute_gang_egress(
+                shaped_list, stacked, blocks_dev, tail_dev, mask_dev,
+                chunk, finalize, n_full,
+            )
 
         bits_acc: List[Any] = []  # each (chunk, S) / (S,)
         words_acc: List[Any] = []
@@ -587,9 +922,17 @@ class CompressionPipeline(BlockedExecutor):
 
         flush_slots = self.flush_slots if (finalize and self._has_flush) else 0
         # host copies once per device buffer (post-timing), then per-member
-        # slicing below is pure NumPy views
+        # slicing below is pure NumPy views. Bits always travel (the
+        # accounting needs them); the worst-case word/bitlen buffers cross
+        # only on the legacy collect path — the compacted path above fetches
+        # exact slices instead, and plain (non-collect) gang runs skip the
+        # payload copies entirely.
         host_chunks = [
-            (np.asarray(b, np.float64), np.asarray(w), np.asarray(bl, np.int32))
+            (
+                np.asarray(b, np.float64),
+                np.asarray(w) if collect_payload else None,
+                np.asarray(bl, np.int32) if collect_payload else None,
+            )
             for b, w, bl in zip(bits_acc[: len(words_acc)], words_acc, blen_acc)
         ]
         host_flush = None
@@ -607,12 +950,14 @@ class CompressionPipeline(BlockedExecutor):
             for b, w, bl in host_chunks:
                 if b.ndim == 2:  # fused chunk: (chunk, S)
                     member_bits.append(b[:, i])
-                    member_words.extend(w[:, i])
-                    member_blen.extend(bl[:, i])
+                    if collect_payload:
+                        member_words.extend(w[:, i])
+                        member_blen.extend(bl[:, i])
                 else:  # tail gang step: (S,)
                     member_bits.append(b[i : i + 1])
-                    member_words.append(w[i])
-                    member_blen.append(bl[i])
+                    if collect_payload:
+                        member_words.append(w[i])
+                        member_blen.append(bl[i])
             member_flush = None
             if host_flush is not None:
                 fw, fb, fblen = host_flush
@@ -638,10 +983,110 @@ class CompressionPipeline(BlockedExecutor):
                     wall_s=wall / S,
                     n_tuples=shaped_list[i].n_valid,
                     state=self.unstack_state(stacked, i),
-                    payload=payload,
+                    legacy_payload=payload,
                     flush_slots=flush_slots,
                 )
             )
+        return results, wall
+
+    def _execute_gang_egress(
+        self,
+        shaped_list: List[ShapedStream],
+        stacked: Any,
+        blocks_dev: Optional[jax.Array],
+        tail_dev: Optional[jax.Array],
+        mask_dev: Optional[jax.Array],
+        chunk: Optional[int],
+        finalize: bool,
+        n_full: int,
+    ) -> Tuple[List[ExecutionResult], float]:
+        """Gang execution with per-member device compaction (satellite of
+        DESIGN.md §13): each chunk's dispatch hands back every member's
+        payload already compacted, and the per-member scatter fetches
+        exact slices — double-buffered so chunk k+1 (and the tail/flush
+        dispatches) compute while chunk k's D2H drains."""
+        S = len(shaped_list)
+        bt = self.block_tuples
+        lanes = self.config.lanes
+        sinks = [_EgressSink(self) for _ in range(S)]
+        pending = None
+
+        def fetch(item) -> None:
+            tb, payload, total, meta = item
+            totals = np.asarray(total)
+            tbh = np.asarray(tb, np.int64)  # (C, S)
+            meta_np = np.asarray(meta)  # (S, C, MW packed | L*B raw)
+            n_chunk = tbh.shape[0]
+            for s in range(S):
+                seg = np.asarray(payload[s, : int(totals[s])])
+                sinks[s].add_unit(
+                    seg,
+                    tbh[:, s],
+                    [bt] * n_chunk,
+                    bt,
+                    meta=meta_np[s] if self._meta7_ok else None,
+                    raw=None if self._meta7_ok else meta_np[s],
+                    extra_bytes=4 * n_chunk + 4,
+                )
+
+        t0 = time.perf_counter()
+        if blocks_dev is not None:
+            for start, length in self._chunks(n_full, chunk):
+                self.dispatches += 1
+                out = self._gang_egress_scan_fn(length)(
+                    stacked, blocks_dev[start : start + length]
+                )
+                stacked = out[0]
+                prev, pending = pending, out[1:]
+                if prev is not None:
+                    fetch(prev)  # overlaps the chunk just dispatched
+        tail_out = None
+        if tail_dev is not None:
+            self.dispatches += 1
+            stacked, twords, tbv, tblen = self._gang_step_fn()(
+                stacked, tail_dev, mask_dev
+            )
+            tail_out = (twords, tbv, tblen)
+        if pending is not None:
+            fetch(pending)  # overlaps the tail/flush dispatches
+        if tail_out is not None:
+            twords, tbv, tblen = tail_out
+            tbh = np.asarray(tbv, np.int64)
+            tblen_np = np.asarray(tblen, np.int32)
+            tail_syms = int(tail_dev.shape[1] * tail_dev.shape[2])
+            for s in range(S):
+                rem = shaped_list[s].n_valid - n_full * bt
+                seg = np.asarray(twords[s, : (int(tbh[s]) + 31) // 32])
+                sinks[s].add_unit(
+                    seg, [int(tbh[s])], [rem], tail_syms,
+                    raw=tblen_np[s], extra_bytes=4,
+                )
+        flush_happened = finalize and self._has_flush
+        if flush_happened:
+            fw, fb, fblen = self._pack_flush_gang(stacked)
+            fbh = np.asarray(fb, np.int64)
+            fblen_np = np.asarray(fblen, np.int32)
+            for s in range(S):
+                seg = np.asarray(fw[s, : (int(fbh[s]) + 31) // 32])
+                sinks[s].add_unit(
+                    seg, [int(fbh[s])], [0], lanes * self._flush_slots,
+                    raw=fblen_np[s], extra_bytes=4,
+                )
+        comps = [sk.finish() for sk in sinks]
+        wall = time.perf_counter() - t0
+
+        flush_slots = self.flush_slots if flush_happened else 0
+        results = [
+            ExecutionResult(
+                per_block_bits=c.block_bits.astype(np.float64),
+                wall_s=wall / S,
+                n_tuples=shaped_list[i].n_valid,
+                state=self.unstack_state(stacked, i),
+                compacted=c,
+                flush_slots=flush_slots,
+            )
+            for i, c in enumerate(comps)
+        ]
         return results, wall
 
     def warmup(
@@ -652,6 +1097,7 @@ class CompressionPipeline(BlockedExecutor):
         fused: bool = True,
         chunk: Optional[int] = None,
         collect: bool = False,
+        compact: bool = False,
     ) -> None:
         """Compile every kernel an `execute` call will hit (untimed).
 
@@ -664,18 +1110,23 @@ class CompressionPipeline(BlockedExecutor):
             chunk,
             fused,
             collect,
+            compact,
         )
         if key in self._warmed:
             return
         state = self.init_state()
         if blocks_dev is not None and blocks_dev.shape[0] > 0:
             if fused:
-                body = self._scan_body_payload if collect else self._scan_body
-                skey = "payload" if collect else ""
                 for length in sorted({ln for _, ln in self._chunks(blocks_dev.shape[0], chunk)}):
-                    jax.block_until_ready(
-                        self._scan_fn(length, key=skey, body=body)(state, blocks_dev[:length])
-                    )
+                    if collect and compact:
+                        fn = self._egress_scan_fn(length)
+                    else:
+                        body = self._scan_body_payload if collect else self._scan_body
+                        skey = "payload" if collect else ""
+                        fn = self._scan_fn(length, key=skey, body=body)
+                    jax.block_until_ready(fn(state, blocks_dev[:length]))
+            elif collect and compact:
+                jax.block_until_ready(self._egress_step_fn()(state, blocks_dev[0]))
             else:
                 jax.block_until_ready(self._step(state, blocks_dev[0]))
         if tail is not None:
@@ -693,6 +1144,7 @@ class CompressionPipeline(BlockedExecutor):
         chunk: Optional[int] = None,
         finalize: bool = True,
         collect_payload: bool = False,
+        compact: bool = True,
     ) -> ExecutionResult:
         """Run one shaped stream through the codec; measure wall time.
 
@@ -702,8 +1154,11 @@ class CompressionPipeline(BlockedExecutor):
         fusion length. `finalize=True` closes the stream: `Codec.flush`'s
         trailing symbols (RLE's open run) are packed as a flush mini-block
         and counted. `collect_payload=True` additionally keeps every
-        block's packed words + bitlens (host copies made after timing) so
-        `frame_from` can build the wire frame."""
+        block's wire contribution so `frame_from` can build the frame —
+        by default via the device-resident compaction path (wire-shaped
+        double-buffered fetches, DESIGN.md §13); `compact=False` keeps the
+        legacy worst-case-buffer collection as the measurable baseline and
+        the `build_frame` oracle input."""
         if fused is True and chunk is None and self.plan.scan_chunk <= 1:
             # explicit fuse request against a per-block-dispatch plan (the
             # Fig 10b 'running' replay): the plan's chunk of 1 would just
@@ -711,6 +1166,11 @@ class CompressionPipeline(BlockedExecutor):
             chunk = _FORCED_FUSE_CHUNK
         if fused is None:
             fused = self.plan.execution == ExecutionStrategy.LAZY
+        if collect_payload and compact:
+            return self._execute_egress(
+                shaped, state=state, fused=fused, warmup=warmup, chunk=chunk,
+                finalize=finalize,
+            )
         blocks_dev = jnp.asarray(shaped.blocks) if len(shaped.blocks) else None
         tail_dev = jnp.asarray(shaped.tail) if shaped.tail is not None else None
         mask_dev = jnp.asarray(shaped.tail_mask) if shaped.tail is not None else None
@@ -760,7 +1220,87 @@ class CompressionPipeline(BlockedExecutor):
             wall_s=wall,
             n_tuples=shaped.n_valid,
             state=state,
-            payload=payload,
+            legacy_payload=payload,
+            flush_slots=flush_slots,
+        )
+
+    def _execute_egress(
+        self,
+        shaped: ShapedStream,
+        state: Any = None,
+        fused: bool = True,
+        warmup: bool = True,
+        chunk: Optional[int] = None,
+        finalize: bool = True,
+    ) -> ExecutionResult:
+        """`execute` with the device-resident compaction egress (the
+        default `collect_payload` path, DESIGN.md §13).
+
+        Each fused chunk (or eager block) leaves the device wire-shaped —
+        compacted payload words + 7-bit-packed bitlen metadata — and is
+        fetched through the double-buffered `_EgressSink`: chunk k+1's
+        dispatch is in flight before chunk k's D2H syncs, so there is no
+        per-chunk barrier and no worst-case-buffer host copy. The wall
+        includes the interleaved fetches (they ARE the egress) but the
+        dispatch count is unchanged versus the plain collect path: the
+        compaction runs inside the same jitted executions."""
+        blocks_dev = jnp.asarray(shaped.blocks) if len(shaped.blocks) else None
+        tail_dev = jnp.asarray(shaped.tail) if shaped.tail is not None else None
+        mask_dev = jnp.asarray(shaped.tail_mask) if shaped.tail is not None else None
+        if warmup:
+            self.warmup(
+                blocks_dev, tail_dev, mask_dev, fused=fused, chunk=chunk,
+                collect=True, compact=True,
+            )
+        if state is None:
+            state = self.init_state()
+        sink = _EgressSink(self)
+        bt = self.block_tuples
+        lanes = self.config.lanes
+        rem = shaped.n_valid - len(shaped.blocks) * bt
+
+        t0 = time.perf_counter()
+        if blocks_dev is not None:
+            if fused:
+                for start, length in self._chunks(blocks_dev.shape[0], chunk):
+                    self.dispatches += 1
+                    state, tb, payload, total, meta = self._egress_scan_fn(length)(
+                        state, blocks_dev[start : start + length]
+                    )
+                    sink.put_chunk(
+                        tb, payload, total, meta,
+                        packed=self._meta7_ok, syms=bt, valid=bt,
+                    )
+            else:
+                step = self._egress_step_fn()
+                for i in range(blocks_dev.shape[0]):
+                    self.dispatches += 1
+                    state, words, tb, meta = step(state, blocks_dev[i])
+                    sink.put_block(
+                        tb, words, meta, packed=self._meta7_ok, syms=bt, valid=bt
+                    )
+        if tail_dev is not None:
+            self.dispatches += 1
+            state, twords, tb, tblen = self._masked_step(state, tail_dev, mask_dev)
+            sink.put_block(
+                tb, twords, tblen, packed=False,
+                syms=int(tail_dev.shape[0] * tail_dev.shape[1]), valid=rem,
+            )
+        if finalize and self._has_flush:
+            fw, fb, fblen = self._pack_flush(state)
+            sink.put_block(
+                fb, fw, fblen, packed=False, syms=lanes * self._flush_slots, valid=0
+            )
+        comp = sink.finish()
+        wall = time.perf_counter() - t0
+
+        flush_slots = self.flush_slots if (finalize and self._has_flush) else 0
+        return ExecutionResult(
+            per_block_bits=comp.block_bits.astype(np.float64),
+            wall_s=wall,
+            n_tuples=shaped.n_valid,
+            state=state,
+            compacted=comp,
             flush_slots=flush_slots,
         )
 
@@ -768,7 +1308,13 @@ class CompressionPipeline(BlockedExecutor):
     def _collect_payload(
         self, shaped: ShapedStream, words_acc, blen_acc, per_block: np.ndarray, flush_out
     ) -> List[BlockPayload]:
-        """Host copies of every block's wire contribution (post-timing)."""
+        """Host copies of every block's wire contribution (post-timing).
+
+        This is the legacy (compact=False) egress: every block's FULL
+        worst-case word buffer and raw int32 bitlens cross device->host —
+        the ~5-6x traffic the compaction path eliminates. The same d2h
+        counters are charged here so the two paths compare under one
+        meter."""
         n_full = len(shaped.blocks)
         bt = self.block_tuples
         rem = shaped.n_valid - n_full * bt
@@ -778,6 +1324,8 @@ class CompressionPipeline(BlockedExecutor):
         for w, b in zip(words_acc, blen_acc):
             w = np.asarray(w)
             b = np.asarray(b, np.int32)
+            self.d2h_payload_bytes += w.nbytes
+            self.d2h_meta_bytes += b.nbytes
             if w.ndim == 2:  # one fused chunk: (chunk, OW) / (chunk, L*B)
                 words_np.extend(w)
                 blen_np.extend(b)
@@ -839,12 +1387,63 @@ class CompressionPipeline(BlockedExecutor):
             blocks=blocks,
         )
 
+    def marshal_compacted(
+        self,
+        *,
+        per_lane: int,
+        n_full: int,
+        tail_per_lane: int,
+        flush_slots: int,
+        n_valid: int,
+        block_bits,
+        block_valid,
+        payload,
+        bitlen=None,
+        packed_meta=None,
+    ) -> bits.Frame:
+        """`marshal_frame`'s compacted twin: codec id and lane count still
+        come from this pipeline's config; the caller hands over the
+        already-wire-shaped payload/metadata (`Frame.from_compacted`)."""
+        return bits.Frame.from_compacted(
+            codec_id=WIRE_CODEC_IDS[self.codec.name],
+            lanes=self.config.lanes,
+            per_lane=per_lane,
+            n_full=n_full,
+            tail_per_lane=tail_per_lane,
+            flush_slots=flush_slots,
+            n_valid=n_valid,
+            block_bits=block_bits,
+            block_valid=block_valid,
+            payload=payload,
+            bitlen=bitlen,
+            packed_meta=packed_meta,
+        )
+
     def frame_from(self, shaped: ShapedStream, result: ExecutionResult) -> bits.Frame:
-        """Assemble the wire-format frame from a `collect_payload` run."""
-        if result.payload is None:
+        """Assemble the wire-format frame from a `collect_payload` run.
+
+        Compacted results take the `Frame.from_compacted` fast path
+        (header math only — the payload and metadata already arrived
+        wire-shaped); legacy results go through `build_frame`, which
+        survives as the oracle the equality tests compare against."""
+        if result.compacted is not None:
+            c = result.compacted
+            return self.marshal_compacted(
+                per_lane=self.block_tuples // self.config.lanes,
+                n_full=len(shaped.blocks),
+                tail_per_lane=0 if shaped.tail is None else shaped.tail.shape[1],
+                flush_slots=result.flush_slots,
+                n_valid=shaped.n_valid,
+                block_bits=c.block_bits,
+                block_valid=c.block_valid,
+                payload=c.payload,
+                bitlen=c.bitlen,
+                packed_meta=c.packed_meta,
+            )
+        if result.legacy_payload is None:
             raise ValueError("execute(collect_payload=True) required for framing")
         return self.marshal_frame(
-            blocks=[(p.words, p.nbits, p.bitlen, p.valid) for p in result.payload],
+            blocks=[(p.words, p.nbits, p.bitlen, p.valid) for p in result.legacy_payload],
             per_lane=self.block_tuples // self.config.lanes,
             n_full=len(shaped.blocks),
             tail_per_lane=0 if shaped.tail is None else shaped.tail.shape[1],
@@ -852,14 +1451,16 @@ class CompressionPipeline(BlockedExecutor):
             n_valid=shaped.n_valid,
         )
 
-    def compress_to_frame(self, values: np.ndarray, state: Any = None) -> bits.Frame:
+    def compress_to_frame(
+        self, values: np.ndarray, state: Any = None, compact: bool = True
+    ) -> bits.Frame:
         """One-call egress: shape, execute (fused per plan), finalize, frame.
 
         For the full encode -> frame -> decode circle use
         `CStreamEngine.roundtrip`, which caches its `DecompressionPipeline`
         (a fresh one per call would pay XLA retracing every time)."""
         shaped = self.shape_blocks(values)
-        res = self.execute(shaped, state=state, collect_payload=True)
+        res = self.execute(shaped, state=state, collect_payload=True, compact=compact)
         return self.frame_from(shaped, res)
 
 

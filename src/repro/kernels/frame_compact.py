@@ -1,0 +1,115 @@
+"""Pallas TPU kernels: device-resident frame compaction (DESIGN.md §13).
+
+The egress mirror of kernels/bitpack.py: every scan step emits a fixed
+worst-case word buffer (`OW = 2*symbols + 2` uint32) of which only the
+`ceil(nbits/32)`-word prefix is live. These kernels turn the stacked
+per-block buffers into the two wire-shaped arrays a frame transfers:
+
+  * `compact_blocks` — exclusive-prefix-sum offsets over the per-block used
+    word counts, then a gather-compaction of every block's live prefix into
+    one contiguous payload. One grid step owns one block; each step's
+    dynamic store starts at its word offset, and because blocks are visited
+    in stream order the (zero-masked) dead tail of step b is overwritten by
+    step b+1's live words — the sequential-grid analogue of the carry-free
+    scatter in the jnp formulation (`bits.compact_payload`, the oracle).
+  * `pack_meta7_blocks` — per-block 7-bit bitlen packing (`bits.pack_meta7`
+    oracle): the per-symbol bit lengths leave the device at their wire
+    width (7 bits/symbol) instead of 32. 7-bit fields span at most two
+    adjacent words, so the in-block fold ORs a 2-word window per symbol,
+    mirroring the bitpack kernel's 3-word fold.
+
+As with the other kernels here, the executor's fused scans use the jnp
+formulations in `core/bits.py` (XLA fuses them into the scan dispatch); the
+Pallas forms are the TPU-kernel mirrors, validated bit-for-bit against the
+same oracles in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bits
+
+
+def _compact_kernel(nw_ref, off_ref, words_ref, out_ref, *, ow: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():  # the untouched tail beyond total_words must read as zero
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row = words_ref[...].reshape(-1)  # (OW,) uint32, this block's buffer
+    nw = nw_ref[i]
+    off = off_ref[i]
+    # zero the dead tail so the final block leaves zeros beyond total_words;
+    # interior blocks' zeroed tails are overwritten by the next block's live
+    # prefix (stores land at strictly increasing offsets, grid in order)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, ow), 1).reshape(-1)
+    out_ref[pl.ds(off, ow)] = jnp.where(lane < nw, row, jnp.uint32(0))
+
+
+def compact_blocks(
+    words: jax.Array, nbits: jax.Array, interpret: bool = False
+):
+    """Compact (n, OW) worst-case word buffers into one contiguous payload.
+
+    Returns (payload[(n*OW,)] uint32, total_words int32): the `total_words`
+    prefix is the wire payload (block b at word offset `sum_{j<b}
+    ceil(nbits[j]/32)`), the rest zeros.
+    """
+    n, ow = words.shape
+    nw, offs = bits.block_word_counts(nbits)
+    cap = n * ow
+    kernel = functools.partial(_compact_kernel, ow=ow)
+    payload = pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1, ow), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((cap,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((cap,), jnp.uint32),
+        interpret=interpret,
+    )(nw, offs, words)
+    return payload, jnp.sum(nw).astype(jnp.int32)
+
+
+def _meta7_kernel(blen_ref, out_ref, *, symbols: int, mw: int):
+    bl = blen_ref[...].reshape(-1)  # (symbols,) int32
+
+    def body(i, acc):
+        off = 7 * i
+        w = off // 32
+        s = off % 32
+        v = bl[i].astype(jnp.uint32) & jnp.uint32(0x7F)
+        lo = bits._safe_lshift(v, s)
+        hi = bits._safe_rshift(v, 32 - s)  # spill word (0 when s == 0)
+        cur = jax.lax.dynamic_slice(acc, (w,), (2,))
+        return jax.lax.dynamic_update_slice(acc, cur | jnp.stack([lo, hi]), (w,))
+
+    acc0 = jnp.zeros((mw + 1,), jnp.uint32)
+    acc = jax.lax.fori_loop(0, symbols, body, acc0)
+    out_ref[...] = acc[:mw][None, :]
+
+
+def pack_meta7_blocks(bitlen: jax.Array, interpret: bool = False) -> jax.Array:
+    """Pack (n, S) per-block bitlens at 7 bits/symbol into (n, ceil(7S/32))
+    uint32 words. When S % 32 == 0 the rows concatenate into the frame's
+    global metadata stream with no re-alignment (each block starts
+    word-aligned at 7S/32 words)."""
+    n, symbols = bitlen.shape
+    mw = (7 * symbols + 31) // 32
+    kernel = functools.partial(_meta7_kernel, symbols=symbols, mw=mw)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, symbols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, mw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, mw), jnp.uint32),
+        interpret=interpret,
+    )(bitlen)

@@ -15,6 +15,7 @@ from repro.kernels import bitpack as _bitpack
 from repro.kernels import bitunpack as _bitunpack
 from repro.kernels import delta_nuq as _delta_nuq
 from repro.kernels import dict_hash as _dict_hash
+from repro.kernels import frame_compact as _frame_compact
 
 
 def _interpret() -> bool:
@@ -30,6 +31,20 @@ def pack_blocks(codes, bitlen, block: int = _bitpack.DEFAULT_BLOCK):
 def unpack_blocks(words, bitlen, block: int = _bitunpack.DEFAULT_BLOCK):
     """Decode-side mirror of `pack_blocks` (kernels/bitunpack.py)."""
     return _bitunpack.unpack_blocks(words, bitlen, block=block, interpret=_interpret())
+
+
+@jax.jit
+def frame_compact(words, nbits):
+    """Gather-compact stacked worst-case word buffers into one wire-shaped
+    payload (kernels/frame_compact.py). Returns (payload, total_words)."""
+    return _frame_compact.compact_blocks(words, nbits, interpret=_interpret())
+
+
+@jax.jit
+def pack_meta7(bitlen):
+    """Pack (n, S) per-block bitlens at 7 bits/symbol into uint32 words
+    (kernels/frame_compact.py, decode-metadata mirror of the frame wire)."""
+    return _frame_compact.pack_meta7_blocks(bitlen, interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("qbits", "dmax", "mu", "sublanes", "t_tile"))

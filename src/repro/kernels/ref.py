@@ -38,6 +38,19 @@ def unpack_blocks_ref(words: jax.Array, bitlen: jax.Array, block: int):
     return codes.reshape(nblocks * block, 2)
 
 
+# ----------------------------------------------------------- frame_compact --
+def compact_blocks_ref(words: jax.Array, nbits: jax.Array):
+    """Oracle for kernels/frame_compact.py: the carry-free scatter
+    formulation the fused executor uses (`bits.compact_payload`)."""
+    return bits.compact_payload(words, nbits)
+
+
+def pack_meta7_ref(bitlen: jax.Array) -> jax.Array:
+    """Oracle for the 7-bit metadata packer: vmapped `bits.pack_meta7`
+    (itself bit-identical to the host serializer `bits._pack_bitlens`)."""
+    return jax.vmap(bits.pack_meta7)(bitlen)
+
+
 # --------------------------------------------------------------- delta_nuq --
 def delta_nuq_encode_ref(x: jax.Array, qbits: int, dmax: float, mu: float, t_tile: int):
     """Sequential-scan oracle with the same tile-local bootstrap semantics."""

@@ -150,10 +150,16 @@ class StreamSession:
         egress: bool = False,
         codec: Optional[Codec] = None,
         plan: Optional[ExecutionPlan] = None,
+        compact: bool = True,
     ):
         """`config` is any spec carrier with the EngineConfig attribute
         surface (EngineConfig or `repro.cstream.JobSpec`); a pre-negotiated
-        `codec`/`plan` (from `cstream.negotiate`) is consumed directly."""
+        `codec`/`plan` (from `cstream.negotiate`) is consumed directly.
+        `compact=True` (default) routes egress through the device-resident
+        compaction path (DESIGN.md §13): flush dispatches hand back the
+        exact live word prefix plus 7-bit-packed metadata, so per-session
+        egress transfers shrink to wire size; `compact=False` keeps the
+        legacy worst-case-buffer collection (the oracle baseline)."""
         self.topic = topic
         self.config = config
         self.pipeline = CompressionPipeline(config, sample=sample, codec=codec, plan=plan)
@@ -175,12 +181,20 @@ class StreamSession:
         self._arrivals = np.zeros(self.capacity, np.float64)
         self._count = 0
         self.flushes: List[FlushRecord] = []
-        #: egress=True keeps each flush's packed words + bitlens (and the fed
+        #: egress=True keeps each flush's wire contribution (and the fed
         #: values, for the fidelity check) so the session can be closed into
         #: one wire-format frame and decoded back — the per-session egress
         #: path. Off by default: the hot ingest path pays no host copies.
         self.egress = egress
-        self._egress_blocks: List[tuple] = []  # (words, nbits, bitlen, valid)
+        #: compacted egress: fetch exact word prefixes; device-pack the
+        #: 7-bit metadata only when session blocks splice word-aligned
+        #: into the frame's global bitlen stream (capacity % 32 == 0)
+        self._compact = compact
+        self._meta_packed = compact and (self.capacity % 32 == 0)
+        #: compact: (payload_exact, nbits, meta, valid) — meta is the packed
+        #: uint32 stream when `_meta_packed` else raw int32 bitlens;
+        #: legacy: (worst-case words, nbits, raw bitlens, valid)
+        self._egress_blocks: List[tuple] = []
         self._egress_values: List[np.ndarray] = []
         self._egress_cache: Optional[tuple] = None  # (n_blocks, fidelity triple)
         self._decompressor: Optional[DecompressionPipeline] = None
@@ -189,8 +203,16 @@ class StreamSession:
         zeros = jnp.zeros((self.lanes, self.capacity // self.lanes), jnp.uint32)
         mask = jnp.ones(zeros.shape, bool)
         jax.block_until_ready(
-            self.pipeline._masked_step(self.pipeline.init_state(), zeros, mask)
+            self._flush_step_fn()(self.pipeline.init_state(), zeros, mask)
         )
+
+    def _flush_step_fn(self):
+        """The jitted kernel one flush dispatch runs: the egress-compacted
+        variant additionally packs the bitlen metadata on device (same
+        dispatch count, wire-width transfer)."""
+        if self.egress and self._meta_packed:
+            return self.pipeline._masked_meta7
+        return self.pipeline._masked_step
 
     # ------------------------------------------------------------- ingest
     @property
@@ -328,24 +350,58 @@ class StreamSession:
         mask_dev = jnp.asarray(req.mask.reshape(self.lanes, -1))
         t0 = time.perf_counter()
         self.pipeline.dispatches += 1
-        state, words, total_bits, bitlen = jax.block_until_ready(
-            self.pipeline._masked_step(self.state, block, mask_dev)
+        state, words, total_bits, meta = jax.block_until_ready(
+            self._flush_step_fn()(self.state, block, mask_dev)
         )
         cost = time.perf_counter() - t0
-        return self.commit(req, state, words, total_bits, bitlen, cost)
+        return self.commit(
+            req, state, words, total_bits, meta, cost,
+            meta_packed=self.egress and self._meta_packed,
+        )
 
     def commit(
-        self, req: FlushRequest, state, words, total_bits, bitlen, cost_s: float
+        self,
+        req: FlushRequest,
+        state,
+        words,
+        total_bits,
+        meta,
+        cost_s: float,
+        meta_packed: bool = False,
     ) -> FlushRecord:
         """Install one compressed flush's results — shared by the inline
         path and the gang scatter. Ordering contract: a session's requests
         commit in flush order, each consuming the state the previous one
-        produced."""
+        produced.
+
+        `words` may be a device row: egress host copies happen here, after
+        the timed region, and on the compacted path only the live
+        `ceil(bits/32)`-word prefix crosses device->host. `meta` is raw
+        int32 bitlens, or (meta_packed=True) the 7-bit-packed uint32 stream
+        a wave/solo egress dispatch produced; commit converts to the form
+        this session stores, so mixed-mode gang waves stay consistent."""
         self.state = state
         if self.egress:  # host copies after the timed region
-            self._egress_blocks.append(
-                (np.asarray(words), int(total_bits), np.asarray(bitlen, np.int32), req.n)
-            )
+            tbi = int(total_bits)
+            meta_np = np.asarray(meta)
+            # the only possible mismatch: a wave ran the meta7 dispatch for
+            # an egress sibling, but THIS session stores raw bitlens (the
+            # reverse cannot occur — a packed-storing session's presence is
+            # exactly what makes a wave run meta7)
+            if meta_packed and not self._meta_packed:
+                meta_np = bits._unpack_bitlens(
+                    meta_np.astype(np.uint32), self.capacity
+                )
+            if not self._meta_packed:
+                meta_np = np.asarray(meta_np, np.int32).reshape(-1)
+            if self._compact:
+                payload = np.asarray(words[: (tbi + 31) // 32])
+            else:
+                payload = np.asarray(words)  # legacy: full worst-case buffer
+            self.pipeline.d2h_payload_bytes += payload.nbytes
+            self.pipeline.d2h_meta_bytes += meta_np.nbytes
+            self.pipeline.d2h_ctrl_bytes += 4
+            self._egress_blocks.append((payload, tbi, meta_np, req.n))
             self._egress_values.append(req.values[: req.n].copy())
         rec = FlushRecord(
             n_tuples=req.n,
@@ -374,19 +430,61 @@ class StreamSession:
         letting one frame grow without bound."""
         if not self.egress:
             raise RuntimeError("session was not created with egress=True")
-        blocks = list(self._egress_blocks)
         flush_entry = self.pipeline.flush_block_entry(self.state)
-        flush_slots = 0
+        flush_slots = 0 if flush_entry is None else self.pipeline.flush_slots
+        n_full = len(self._egress_blocks)
+        n_valid = sum(b[3] for b in self._egress_blocks)
+        per_lane = self.capacity // self.lanes
+        if not self._compact:
+            blocks = list(self._egress_blocks)
+            if flush_entry is not None:
+                blocks.append(flush_entry)
+            return self.pipeline.marshal_frame(
+                blocks,
+                per_lane=per_lane,
+                n_full=n_full,
+                tail_per_lane=0,
+                flush_slots=flush_slots,
+                n_valid=n_valid,
+            )
+        # compacted fast path: stored blocks are already wire-shaped —
+        # concatenate segments + splice the flush mini-block, header math only
+        segments = [b[0] for b in self._egress_blocks]
+        block_bits = [b[1] for b in self._egress_blocks]
+        block_valid = [b[3] for b in self._egress_blocks]
+        flush_raw = np.zeros(0, np.int32)
         if flush_entry is not None:
-            blocks.append(flush_entry)
-            flush_slots = self.pipeline.flush_slots
-        return self.pipeline.marshal_frame(
-            blocks,
-            per_lane=self.capacity // self.lanes,
-            n_full=len(self._egress_blocks),
+            fw, fb, fbl, _ = flush_entry
+            segments.append(np.asarray(fw[: (int(fb) + 31) // 32], np.uint32))
+            block_bits.append(int(fb))
+            block_valid.append(0)
+            flush_raw = np.asarray(fbl, np.int32).ravel()
+        payload = (
+            np.concatenate(segments) if segments else np.zeros(0, np.uint32)
+        )
+        bitlen = packed_meta = None
+        if self._meta_packed:
+            # session blocks splice word-aligned; the flush mini-block's raw
+            # bitlens host-pack onto the end (prefix symbols % 32 == 0)
+            packed_meta = np.concatenate(
+                [b[2] for b in self._egress_blocks]
+                + [bits._pack_bitlens(flush_raw)]
+            ) if self._egress_blocks or flush_raw.size else np.zeros(0, np.uint32)
+        else:
+            bitlen = np.concatenate(
+                [b[2] for b in self._egress_blocks] + [flush_raw]
+            ) if self._egress_blocks or flush_raw.size else np.zeros(0, np.int32)
+        return self.pipeline.marshal_compacted(
+            per_lane=per_lane,
+            n_full=n_full,
             tail_per_lane=0,
             flush_slots=flush_slots,
-            n_valid=sum(b[3] for b in self._egress_blocks),
+            n_valid=n_valid,
+            block_bits=np.asarray(block_bits, np.int64),
+            block_valid=np.asarray(block_valid, np.int64),
+            payload=payload,
+            bitlen=bitlen,
+            packed_meta=packed_meta,
         )
 
     def egress_fidelity(self):
@@ -556,7 +654,13 @@ class ServerCore:
         run ONE vmapped dispatch on the signature owner's pipeline, and
         scatter states, bitstreams and flush records back per member.
         Degenerate single-member waves take the inline solo path — exactly
-        what a non-gang server would have run."""
+        what a non-gang server would have run.
+
+        Egress scatter is compacted (DESIGN.md §13): only the per-member
+        bit counts always cross device->host; each egress member's commit
+        then slices its exact live word prefix (plus wire-width packed
+        metadata when the wave ran the meta7 dispatch) out of the device
+        rows — non-egress waves fetch no payload at all."""
         if len(wave) == 1:
             s, req = wave[0]
             s.compress_request(req)
@@ -564,6 +668,7 @@ class ServerCore:
         owner = self._gang_owner[sig]
         pipe = owner.pipeline
         lanes = owner.lanes
+        meta7 = any(s.egress and s._meta_packed for s, _ in wave)
         states = pipe.stack_states([s.state for s, _ in wave])
         blocks = jnp.asarray(
             np.stack([req.values.reshape(lanes, -1) for _, req in wave])
@@ -571,19 +676,20 @@ class ServerCore:
         masks = jnp.asarray(
             np.stack([req.mask.reshape(lanes, -1) for _, req in wave])
         )
-        states, words, tbs, bitlens, wall = pipe.gang_step(states, blocks, masks)
-        words_np = np.asarray(words)
+        states, words, tbs, metas, wall = pipe.gang_step(
+            states, blocks, masks, meta7=meta7
+        )
         tb_np = np.asarray(tbs)
-        bl_np = np.asarray(bitlens, np.int32)
         cost = wall / len(wave)  # the dispatch is shared; so is its cost
         for i, (s, req) in enumerate(wave):
             s.commit(
                 req,
                 pipe.unstack_state(states, i),
-                words_np[i],
+                words[i],
                 int(tb_np[i]),
-                bl_np[i],
+                metas[i],
                 cost,
+                meta_packed=meta7,
             )
 
     # -------------------------------------------------------------- admit
@@ -597,11 +703,13 @@ class ServerCore:
         egress: Optional[bool] = None,
         codec: Optional[Codec] = None,
         plan: Optional[ExecutionPlan] = None,
+        compact: bool = True,
     ) -> StreamSession:
         """Admit one session. `config` may be an `EngineConfig` or a
         `repro.cstream.JobSpec`; `egress=None` inherits the server default;
         a pre-negotiated `codec`/`plan` is consumed as-is (the Dispatcher
-        path, so negotiation happens exactly once)."""
+        path, so negotiation happens exactly once). `compact=False` opts a
+        session out of the compacted egress (the oracle baseline)."""
         if topic in self.sessions:
             raise ValueError(f"session {topic!r} already admitted")
         if len(self.sessions) >= self.max_sessions:
@@ -619,6 +727,7 @@ class ServerCore:
             egress=self.egress if egress is None else egress,
             codec=codec,
             plan=plan,
+            compact=compact,
         )
         self.sessions[topic] = session
         if self.gang:

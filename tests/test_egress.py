@@ -1,0 +1,271 @@
+"""Device-resident frame compaction + async egress (DESIGN.md §13).
+
+Contract under test, across every registered codec and the length corners
+of the property harness (empty / single tuple / sub-alignment / around one
+block / ragged multi-block):
+
+  * frames produced via the compacted egress are BYTE-identical to the
+    `build_frame` oracle (legacy worst-case collection) — solo offline,
+    eager dispatch, offline gang, and the serving runtime's solo and gang
+    wave paths;
+  * device->host payload traffic is exactly the wire payload (per-block
+    word alignment included), and total egress traffic stays within the
+    wire size plus the raw tail/flush metadata allowance — versus the
+    multiple-of-wire worst-case buffers the legacy path moves;
+  * the compaction adds no dispatches: it runs inside the same jitted
+    executions.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import bits
+from repro.core.algorithms import codec_names
+from repro.core.pipeline import CompressionPipeline, DecompressionPipeline
+from repro.core.strategies import EngineConfig
+from repro.runtime.server import ServerCore
+
+#: quantizer params pinned per codec (calibration off) so bounds hold over
+#: the generated value domain — mirrors tests/test_property_roundtrip.py
+CODEC_KWARGS = {
+    "uanuq": dict(qbits=12, vmax=65535.0),
+    "leb128_nuq": dict(qbits=12, vmax=65535.0),
+    "adpcm": dict(vmax=65535.0),
+    "uaadpcm": dict(vmax=65535.0),
+    "pla": dict(eps=8.0),
+}
+
+CODECS = sorted(codec_names())
+
+_PIPES: dict = {}
+
+
+def pipe_for(codec: str, **overrides) -> CompressionPipeline:
+    key = (codec, tuple(sorted(overrides.items())))
+    pipe = _PIPES.get(key)
+    if pipe is None:
+        kwargs = dict(
+            codec=codec,
+            codec_kwargs=dict(CODEC_KWARGS.get(codec, {})),
+            micro_batch_bytes=2048,
+            lanes=4,
+            calibrate=False,
+        )
+        kwargs.update(overrides)
+        cfg = EngineConfig(**kwargs)
+        pipe = CompressionPipeline(cfg)
+        _PIPES[key] = pipe
+    return pipe
+
+
+def lengths_for(pipe: CompressionPipeline):
+    bt = pipe.block_tuples
+    unit = pipe.config.lanes * pipe.align
+    return [0, 1, max(unit - 1, 1), bt - 1, bt, bt + 1, 3 * bt + unit + 3]
+
+
+def gen_values(n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.clip(
+        np.cumsum(rng.integers(-8, 9, size=n)) + 4096, 0, 65535
+    ).astype(np.uint32)
+
+
+def frames_both_paths(pipe: CompressionPipeline, values: np.ndarray, **kw):
+    """(compacted frame, legacy/build_frame oracle frame) for one stream."""
+    shaped = pipe.shape_blocks(values)
+    rc = pipe.execute(shaped, collect_payload=True, compact=True, **kw)
+    ro = pipe.execute(shaped, collect_payload=True, compact=False, **kw)
+    return pipe.frame_from(shaped, rc), pipe.frame_from(shaped, ro), rc, ro
+
+
+# ------------------------------------------------------ solo frame equality --
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("length_idx", [0, 1, 2, 5])
+def test_compacted_frame_bit_identical_solo(codec, length_idx):
+    pipe = pipe_for(codec)
+    n = lengths_for(pipe)[length_idx]
+    fc, fo, rc, ro = frames_both_paths(pipe, gen_values(n, 20 + length_idx))
+    assert fc.to_bytes() == fo.to_bytes(), (codec, n)
+    np.testing.assert_array_equal(rc.per_block_bits, ro.per_block_bits)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("codec", CODECS)
+@pytest.mark.parametrize("length_idx", [3, 4, 6])
+def test_compacted_frame_bit_identical_solo_full_grid(codec, length_idx):
+    """The remaining (multi-block) length corners — the heavyweight tier."""
+    pipe = pipe_for(codec)
+    n = lengths_for(pipe)[length_idx]
+    fc, fo, _, _ = frames_both_paths(pipe, gen_values(n, 40 + length_idx))
+    assert fc.to_bytes() == fo.to_bytes(), (codec, n)
+
+
+def test_compacted_frame_bit_identical_eager_dispatch():
+    """The per-block dispatch loop compacts identically to the fused scan."""
+    pipe = pipe_for("tcomp32")
+    values = gen_values(3 * pipe.block_tuples + 17, 5)
+    fc, fo, _, _ = frames_both_paths(pipe, values, fused=False)
+    ff, _, _, _ = frames_both_paths(pipe, values, fused=True)
+    assert fc.to_bytes() == fo.to_bytes()
+    assert fc.to_bytes() == ff.to_bytes()  # path-independent wire bytes
+
+
+def test_compacted_frame_decodes_and_reserializes():
+    pipe = pipe_for("delta_leb128")
+    values = gen_values(2 * pipe.block_tuples + 9, 6)
+    fc, _, _, _ = frames_both_paths(pipe, values)
+    # packed_meta survives the serialize -> parse -> reserialize circle
+    raw = fc.to_bytes()
+    back = bits.Frame.from_bytes(raw)
+    assert back.packed_meta is not None
+    assert back.to_bytes() == raw
+    dec = DecompressionPipeline(pipe.config, codec=pipe.codec)
+    np.testing.assert_array_equal(dec.decompress(fc).values, values)
+
+
+def test_unaligned_block_geometry_falls_back_to_raw_metadata():
+    """capacity % 32 != 0: payload still compacts; metadata ships raw and
+    the host packs it at frame build — bytes stay oracle-identical."""
+    pipe = pipe_for("tcomp32", micro_batch_bytes=176)  # 44 tuples/block
+    assert pipe.block_tuples % 32 != 0 and not pipe._meta7_ok
+    values = gen_values(5 * pipe.block_tuples + 3, 9)
+    fc, fo, rc, _ = frames_both_paths(pipe, values)
+    assert fc.to_bytes() == fo.to_bytes()
+    assert rc.compacted.packed_meta is None  # host-packed at serialize
+
+
+# ------------------------------------------------------ gang frame equality --
+@pytest.mark.parametrize("codec", ["tcomp32", "rle", "delta_leb128"])
+def test_compacted_frames_bit_identical_gang(codec):
+    pipe = pipe_for(codec)
+    bt = pipe.block_tuples
+    streams = [gen_values(3 * bt + 11, 60 + s) for s in range(3)]
+    shaped = [pipe.shape_blocks(v) for v in streams]
+    rc, _ = pipe.execute_gang(shaped, collect_payload=True, compact=True)
+    ro, _ = pipe.execute_gang(shaped, collect_payload=True, compact=False)
+    for s in range(3):
+        fc = pipe.frame_from(shaped[s], rc[s])
+        fo = pipe.frame_from(shaped[s], ro[s])
+        assert fc.to_bytes() == fo.to_bytes(), (codec, s)
+        np.testing.assert_array_equal(rc[s].per_block_bits, ro[s].per_block_bits)
+
+
+# ------------------------------------------------------- server wave paths --
+def _run_server(codec: str, compact: bool, gang: bool):
+    cfg = EngineConfig(
+        codec=codec,
+        codec_kwargs=dict(CODEC_KWARGS.get(codec, {})),
+        micro_batch_bytes=2048,
+        lanes=4,
+        calibrate=False,
+    )
+    rng = np.random.default_rng(13)
+    server = ServerCore(egress=True, gang=gang)
+    feeds = {}
+    for t in ("a", "b", "c"):
+        server.admit(t, cfg, compact=compact)
+        v = gen_values(2500, int(rng.integers(1 << 30)))
+        ts = np.cumsum(rng.exponential(0.001, size=v.size))
+        feeds[t] = (v, ts)
+    server.run(feeds)
+    return server
+
+
+@pytest.mark.parametrize("codec", ["tcomp32", "rle"])
+@pytest.mark.parametrize("gang", [False, True])
+def test_server_egress_frames_bit_identical(codec, gang):
+    sc = _run_server(codec, compact=True, gang=gang)
+    sl = _run_server(codec, compact=False, gang=gang)
+    for t in ("a", "b", "c"):
+        fc = sc.session(t).egress_frame()
+        fo = sl.session(t).egress_frame()
+        assert fc.to_bytes() == fo.to_bytes(), (codec, gang, t)
+        # and the keys (bits, waits) match — compaction changes no record
+        assert [r.key() for r in sc.session(t).flushes] == [
+            r.key() for r in sl.session(t).flushes
+        ]
+
+
+def test_server_egress_transfers_shrink_to_wire():
+    """Per-session egress D2H on the compacted path is wire-sized; the
+    legacy path moves a multiple of it (the ~5-6x the tentpole removes)."""
+    sc = _run_server("tcomp32", compact=True, gang=True)
+    sl = _run_server("tcomp32", compact=False, gang=True)
+    wire = sum(s.egress_frame().wire_bytes for s in sc.sessions.values())
+    d2h_c = sum(s.pipeline.d2h_bytes for s in sc.sessions.values())
+    d2h_l = sum(s.pipeline.d2h_bytes for s in sl.sessions.values())
+    assert d2h_c <= 1.1 * wire
+    assert d2h_l > 2.0 * d2h_c
+
+
+# --------------------------------------------------------- D2H accounting --
+def test_d2h_payload_bytes_exactly_wire_payload():
+    """The compacted path fetches exactly the frame's payload words (word
+    alignment is part of the wire format), plus metadata bounded by the
+    wire metadata + the raw tail/flush allowance."""
+    pipe = pipe_for("tcomp32")
+    bt = pipe.block_tuples
+    values = gen_values(6 * bt + 13, 77)
+    shaped = pipe.shape_blocks(values)
+    pipe.execute(shaped, collect_payload=True, warmup=True)  # compile first
+    pipe.reset_d2h()
+    res = pipe.execute(shaped, collect_payload=True)
+    frame = pipe.frame_from(shaped, res)
+    assert pipe.d2h_payload_bytes == 4 * frame.payload.size
+    # metadata: packed full blocks at wire width + raw int32 tail bitlens
+    tail_syms = frame.lanes * frame.tail_per_lane
+    flush_syms = frame.lanes * frame.flush_slots
+    full_meta_bytes = 4 * ((7 * pipe.config.lanes * frame.per_lane * frame.n_full + 31) // 32)
+    assert pipe.d2h_meta_bytes <= full_meta_bytes + 4 * (tail_syms + flush_syms) + 8
+    # total transfer vs wire: within 1.1x + the raw tail allowance
+    assert pipe.d2h_bytes <= 1.1 * frame.wire_bytes + 4 * (tail_syms + flush_syms)
+    assert res.compacted.d2h_bytes == pipe.d2h_bytes
+
+
+def test_legacy_path_moves_multiples_of_wire():
+    pipe = pipe_for("tcomp32")
+    values = gen_values(6 * pipe.block_tuples + 13, 78)
+    shaped = pipe.shape_blocks(values)
+    pipe.execute(shaped, collect_payload=True, compact=False, warmup=True)
+    pipe.reset_d2h()
+    res = pipe.execute(shaped, collect_payload=True, compact=False)
+    frame = pipe.frame_from(shaped, res)
+    pipe_legacy_bytes = pipe.d2h_bytes
+    pipe.reset_d2h()
+    pipe.execute(shaped, collect_payload=True)
+    assert pipe_legacy_bytes > 2.0 * pipe.d2h_bytes
+    assert pipe_legacy_bytes > 2.0 * frame.wire_bytes  # the motivating gap
+
+
+def test_compaction_adds_no_dispatches():
+    pipe = pipe_for("delta_leb128")
+    values = gen_values(4 * pipe.block_tuples + 5, 91)
+    shaped = pipe.shape_blocks(values)
+    for compact in (True, False):  # compile both paths outside the count
+        pipe.execute(shaped, collect_payload=True, compact=compact)
+    d0 = pipe.dispatches
+    pipe.execute(shaped, collect_payload=True, compact=True)
+    d_compact = pipe.dispatches - d0
+    pipe.execute(shaped, collect_payload=True, compact=False)
+    d_legacy = pipe.dispatches - d0 - d_compact
+    assert d_compact == d_legacy
+
+
+# ------------------------------------------------------- ExecutionResult API --
+def test_block_payloads_view_matches_legacy_collection():
+    """`ExecutionResult.payload` (the legacy consumer surface) reconstructs
+    identical per-block entries from the compacted form."""
+    pipe = pipe_for("rle")
+    values = np.repeat(np.arange(7, dtype=np.uint32), pipe.block_tuples // 2)
+    shaped = pipe.shape_blocks(values)
+    rc = pipe.execute(shaped, collect_payload=True, compact=True)
+    ro = pipe.execute(shaped, collect_payload=True, compact=False)
+    pc, po = rc.payload, ro.payload
+    assert len(pc) == len(po)
+    for a, b in zip(pc, po):
+        assert a.nbits == b.nbits and a.valid == b.valid
+        np.testing.assert_array_equal(a.bitlen, np.asarray(b.bitlen).ravel())
+        used = (a.nbits + 31) // 32
+        np.testing.assert_array_equal(a.words[:used], np.asarray(b.words[:used]))

@@ -58,6 +58,51 @@ def test_property_pack_extract_roundtrip(seed):
     assert int(total) == int(blen.sum())
 
 
+# ------------------------------------------------------------ frame_compact --
+@pytest.mark.parametrize("nblocks,ow", [(1, 34), (4, 130), (16, 258), (32, 66)])
+def test_frame_compact_matches_ref(nblocks, ow):
+    words = RNG.integers(0, 2**32, size=(nblocks, ow), dtype=np.uint64).astype(np.uint32)
+    # bit counts up to the worst case the executor can emit (OW-2 data words)
+    nbits = RNG.integers(0, 32 * (ow - 2) + 1, size=(nblocks,)).astype(np.int32)
+    pay_k, tot_k = ops.frame_compact(jnp.asarray(words), jnp.asarray(nbits))
+    pay_r, tot_r = ref.compact_blocks_ref(jnp.asarray(words), jnp.asarray(nbits))
+    np.testing.assert_array_equal(np.asarray(pay_k), np.asarray(pay_r))
+    assert int(tot_k) == int(tot_r)
+
+
+def test_frame_compact_payload_is_sliced_prefixes():
+    """The compacted prefix must be exactly the per-block used words, in
+    stream order — the device-side equivalent of build_frame's slicing."""
+    nblocks, ow = 6, 42
+    words = RNG.integers(0, 2**32, size=(nblocks, ow), dtype=np.uint64).astype(np.uint32)
+    nbits = np.array([0, 1, 31, 32, 33, 32 * (ow - 2)], np.int32)
+    pay, tot = ops.frame_compact(jnp.asarray(words), jnp.asarray(nbits))
+    expect = np.concatenate([w[: (int(b) + 31) // 32] for w, b in zip(words, nbits)])
+    assert int(tot) == expect.size
+    np.testing.assert_array_equal(np.asarray(pay)[: int(tot)], expect)
+    assert not np.asarray(pay)[int(tot):].any()  # zero beyond total_words
+
+
+@pytest.mark.parametrize("nblocks,symbols", [(1, 32), (4, 256), (8, 96), (3, 148)])
+def test_pack_meta7_matches_ref_and_host(nblocks, symbols):
+    bl = RNG.integers(0, 65, size=(nblocks, symbols)).astype(np.int32)
+    got_k = np.asarray(ops.pack_meta7(jnp.asarray(bl)))
+    got_r = np.asarray(ref.pack_meta7_ref(jnp.asarray(bl)))
+    np.testing.assert_array_equal(got_k, got_r)
+    # every row is bit-identical to the host wire serializer on that row
+    for row_k, row_bl in zip(got_k, bl):
+        np.testing.assert_array_equal(row_k, bits._pack_bitlens(row_bl))
+
+
+def test_pack_meta7_rows_concatenate_when_aligned():
+    """S % 32 == 0 rows concatenate into the global 7-bit stream exactly —
+    the invariant that lets per-chunk device metadata splice into a frame."""
+    nblocks, symbols = 5, 64
+    bl = RNG.integers(0, 65, size=(nblocks, symbols)).astype(np.int32)
+    rows = np.asarray(ops.pack_meta7(jnp.asarray(bl)))
+    np.testing.assert_array_equal(rows.reshape(-1), bits._pack_bitlens(bl.ravel()))
+
+
 # ---------------------------------------------------------------- delta_nuq --
 @pytest.mark.parametrize("s,t,sublanes,t_tile", [(8, 128, 8, 128), (16, 256, 8, 128), (32, 512, 16, 256)])
 @pytest.mark.parametrize("qbits", [4, 8])
