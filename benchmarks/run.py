@@ -32,12 +32,15 @@ MODULES = [
     "bench_server",            # beyond-paper: fused executor + StreamServer
     "bench_roundtrip",         # beyond-paper: egress/decode path + fidelity
     "bench_egress",            # beyond-paper: frame compaction + D2H accounting
+    "bench_fleet",             # beyond-paper: multi-device sharded gang waves
     "bench_roofline",          # dry-run aggregation
 ]
 
 #: --smoke: the fast subset CI runs on CPU — executor + runtime + egress claims
 #: (bench_egress's correctness claims RAISE on failure, gating the smoke run:
-#: bit-identical frames, D2H-bytes bound, dispatch count unchanged)
+#: bit-identical frames, D2H-bytes bound, dispatch count unchanged).
+#: bench_fleet is NOT here: it re-enters itself in subprocesses with
+#: simulated device counts, so CI runs it in its own `fleet` job.
 SMOKE_MODULES = [
     "bench_execution",
     "bench_server",

@@ -84,7 +84,49 @@ def smoke() -> int:
             failures.append(name)
             print(f"  [FAIL] {name}: {type(exc).__name__}: {exc}")
     print(f"api smoke: {len(names) - len(failures)}/{len(names)} codecs pass")
+    if _fleet_smoke():
+        failures.append("fleet")
     return 1 if failures else 0
+
+
+def _fleet_smoke() -> int:
+    """Fleet-surface gate (DESIGN.md §14), device-count independent: a
+    mesh-of-1 Dispatcher must negotiate `JobSpec.devices`, admit many
+    sessions through ONE negotiation (shared compiled pipeline), dispatch
+    them as gang waves, and report the per-signature breakdown."""
+    import numpy as np
+
+    from repro import cstream
+
+    try:
+        spec = cstream.JobSpec(codec="tcomp32", gang=True, devices=1, flush_tuples=128)
+        assert cstream.negotiate(spec).fleet is not None
+        try:
+            cstream.Dispatcher(mesh=1)  # mesh without gang must be refused
+        except cstream.NegotiationError:
+            pass
+        else:
+            raise AssertionError("Dispatcher(mesh=1) without gang=True passed")
+        with cstream.Dispatcher(gang=True, mesh=1, max_sessions=64) as d:
+            handles = d.open_many(spec, count=8)
+            assert len({id(h._session.pipeline) for h in handles}) == 1
+            for i, h in enumerate(handles):
+                h.push(
+                    np.arange(128, dtype=np.uint32),
+                    timestamps=np.full(128, 0.001 * i),
+                )
+            d.run()
+            rep = d.report()
+        assert rep.devices == 1 and rep.total_tuples == 8 * 128
+        assert rep.dispatch_stats and all(
+            s.sessions_dispatched > 0 for s in rep.dispatch_stats.values()
+        )
+        print("  [OK] fleet: mesh-of-1 dispatch, shared-pipeline admission, "
+              f"{sum(s.n_waves for s in rep.dispatch_stats.values())} waves")
+        return 0
+    except Exception as exc:  # noqa: BLE001 — same reporting as the codec loop
+        print(f"  [FAIL] fleet: {type(exc).__name__}: {exc}")
+        return 1
 
 
 def compress(codec: str, dataset: str, n: int) -> int:

@@ -58,16 +58,24 @@ from repro.core.strategies import (
     EngineConfig,
     ExecutionPlan,
     ExecutionStrategy,
+    FleetPlan,
     GangPlan,
     SchedulingStrategy,
     StateStrategy,
     block_costs,
     plan_execution,
+    plan_fleet,
     plan_gang,
     resolve_capacity,
     schedule_blocks,
 )
-from repro.runtime.server import ServerCore, ServerReport, SessionReport, StreamSession
+from repro.runtime.server import (
+    ServerCore,
+    ServerReport,
+    SessionReport,
+    SignatureStats,
+    StreamSession,
+)
 
 __all__ = [
     "JobSpec",
@@ -92,6 +100,7 @@ __all__ = [
     "SchedulingStrategy",
     "SessionReport",
     "ServerReport",
+    "SignatureStats",
 ]
 
 #: scalar parameter types a JobSpec may carry (hashable, JSON-serializable)
@@ -149,6 +158,10 @@ class JobSpec:
     gang: bool = False
     #: arrival rate for the end-to-end latency model (paper §4.1)
     arrival_rate_tps: Optional[float] = None
+    #: minimum device-mesh width this job's waves must shard over
+    #: (0 = wherever the dispatcher runs; >1 requires gang=True and a
+    #: Dispatcher(mesh=...) at least that wide — DESIGN.md §14)
+    devices: int = 0
 
     # ------------------------------------------------------------ validation
     def __post_init__(self) -> None:
@@ -170,6 +183,8 @@ class JobSpec:
             raise _err(f"JobSpec.max_abs_error must be >= 0 or None, got {self.max_abs_error!r}")
         if self.arrival_rate_tps is not None and not self.arrival_rate_tps > 0:
             raise _err(f"JobSpec.arrival_rate_tps must be > 0 or None, got {self.arrival_rate_tps!r}")
+        if not isinstance(self.devices, int) or self.devices < 0:
+            raise _err(f"JobSpec.devices must be an int >= 0 (0 = dispatcher-local), got {self.devices!r}")
 
     # ------------------------------------------------------------ accessors
     @property
@@ -217,6 +232,7 @@ class JobSpec:
             "strict_masking": self.strict_masking,
             "gang": self.gang,
             "arrival_rate_tps": self.arrival_rate_tps,
+            "devices": self.devices,
         }
 
     @classmethod
@@ -381,6 +397,8 @@ class Plan:
     capacity: int  # session flush capacity in tuples (unit-rounded)
     signature: Tuple[Any, ...]  # gang dispatch signature (codec+params+geometry)
     notes: Tuple[str, ...] = ()  # non-fatal negotiation outcomes
+    #: fleet wave sizing when the spec asked for a device mesh (devices >= 1)
+    fleet: Optional[FleetPlan] = None
 
     @property
     def block_tuples(self) -> int:
@@ -452,6 +470,20 @@ def negotiate(spec: JobSpec) -> Plan:
             f"shared state is a no-op for {spec.codec!r} (state_kind="
             f"{cap.state_kind!r}); only dictionary codecs merge tables"
         )
+    if spec.devices > 1 and not spec.gang:
+        raise _err(
+            f"JobSpec.devices={spec.devices} shards gang waves over a device "
+            "mesh, but gang=False keeps every flush a solo device-local "
+            "dispatch; set gang=True (and open on a Dispatcher(mesh=...))"
+        )
+    if spec.devices >= 1:
+        avail = jax.device_count()
+        if spec.devices > avail:
+            raise _err(
+                f"JobSpec.devices={spec.devices} exceeds the {avail} visible "
+                "device(s); launch with XLA_FLAGS=--xla_force_host_platform_"
+                f"device_count={spec.devices} (or shrink devices)"
+            )
 
     align = codec_align(codec)
     exec_plan = plan_execution(spec, codec_align=align)
@@ -480,6 +512,7 @@ def negotiate(spec: JobSpec) -> Plan:
         capacity=capacity,
         signature=signature,
         notes=tuple(notes),
+        fleet=plan_fleet(gang_plan, spec.devices) if spec.devices >= 1 else None,
     )
 
 
@@ -1064,7 +1097,14 @@ class Dispatcher:
 
     Flush policy is per-JOB: `open(spec)` applies the spec's
     `flush_tuples`/`flush_timeout_s` to its session; the constructor's
-    `flush_timeout_s` is only the core default for legacy `admit` paths."""
+    `flush_timeout_s` is only the core default for legacy `admit` paths.
+
+    `mesh=N` (requires `gang=True`) shards every gang wave over an N-wide
+    pure-data device mesh (DESIGN.md §14): one dispatch covers N x max_gang
+    sessions, and a device loss mid-wave re-meshes onto the survivors and
+    replays the wave from its members' last committed FlushRecords —
+    `fault_injector`/`heartbeat` wire the chaos-drill and liveness hooks
+    through to the server core."""
 
     def __init__(
         self,
@@ -1076,27 +1116,45 @@ class Dispatcher:
         gang_quantum_s: Optional[float] = None,
         max_gang: Optional[int] = None,
         gang_budget: Optional[int] = None,
+        mesh: Optional[int] = None,
+        fault_injector: Any = None,
+        heartbeat: Any = None,
     ):
         if profile not in PROFILES:
             raise _err(
                 f"unknown hardware profile {profile!r}; "
                 f"available: {', '.join(sorted(PROFILES))}"
             )
-        self._core = ServerCore(
-            profile=profile,
-            scheduling=SchedulingStrategy(scheduling),
-            max_sessions=max_sessions,
-            flush_timeout_s=flush_timeout_s,
-            gang=gang,
-            gang_quantum_s=gang_quantum_s,
-            max_gang=max_gang,
-            gang_budget=gang_budget,
-        )
+        try:
+            self._core = ServerCore(
+                profile=profile,
+                scheduling=SchedulingStrategy(scheduling),
+                max_sessions=max_sessions,
+                flush_timeout_s=flush_timeout_s,
+                gang=gang,
+                gang_quantum_s=gang_quantum_s,
+                max_gang=max_gang,
+                gang_budget=gang_budget,
+                mesh=mesh,
+                fault_injector=fault_injector,
+                heartbeat=heartbeat,
+            )
+        except NegotiationError:
+            raise
+        except ValueError as exc:  # core mesh validation -> negotiation error
+            raise _err(str(exc)) from exc
         self._handles: Dict[str, StreamHandle] = {}
 
     @property
     def gang(self) -> bool:
         return self._core.gang
+
+    @property
+    def devices(self) -> int:
+        """Current fleet mesh width (1 = device-local dispatch; shrinks
+        when a device loss re-meshes onto the survivors)."""
+        fleet = self._core.fleet
+        return fleet.n_devices if fleet is not None else 1
 
     @property
     def sessions(self) -> Dict[str, StreamSession]:
@@ -1114,6 +1172,41 @@ class Dispatcher:
             spec = spec.calibrated(sample)
         return self._open_negotiated(spec, negotiate(spec), topic)
 
+    def open_many(
+        self,
+        spec: JobSpec,
+        count: Optional[int] = None,
+        topics: Optional[Sequence[str]] = None,
+        sample: Optional[np.ndarray] = None,
+    ) -> List[StreamHandle]:
+        """Admit many same-spec sessions with ONE negotiation.
+
+        The fleet-scale admission path: 10k sessions negotiate once and
+        share the signature owner's compiled pipeline (codec state stays
+        per-session), so admission is seconds, not 10k codec builds +
+        probe compiles. Pass `count` for auto-named topics or an explicit
+        `topics` list (exactly one of the two)."""
+        if (count is None) == (topics is None):
+            raise _err(
+                "open_many needs exactly one of count= (auto-named topics) "
+                "or topics= (explicit names)"
+            )
+        if topics is None:
+            if count < 1:
+                raise _err(f"open_many count must be >= 1, got {count}")
+            names: List[str] = []
+            n = len(self._core.sessions)
+            while len(names) < count:
+                candidate = f"job-{n}"
+                n += 1
+                if candidate not in self._core.sessions:
+                    names.append(candidate)
+            topics = names
+        if sample is not None:
+            spec = spec.calibrated(sample)
+        plan = negotiate(spec)
+        return [self._open_negotiated(spec, plan, t) for t in topics]
+
     def _open_negotiated(
         self, spec: JobSpec, plan: Plan, topic: Optional[str]
     ) -> StreamHandle:
@@ -1121,6 +1214,13 @@ class Dispatcher:
             raise _err(
                 "spec.gang=True but this dispatcher was built with gang=False; "
                 "construct Dispatcher(gang=True) to gang-dispatch sessions"
+            )
+        if spec.devices > self.devices:
+            raise _err(
+                f"JobSpec.devices={spec.devices} but this dispatcher runs a "
+                f"{self.devices}-device mesh; construct "
+                f"Dispatcher(gang=True, mesh={spec.devices}) (or lower "
+                "spec.devices)"
             )
         if topic is None:
             n = len(self._core.sessions)

@@ -3,11 +3,16 @@
 `jax.shard_map` graduated from `jax.experimental.shard_map` only in newer
 jax releases, and its keyword surface changed (`check_rep`/`auto` became
 `check_vma`/`axis_names`). Import `shard_map` from here — call sites use
-the NEW spelling and this module translates for the old one.
+the NEW spelling and this module translates for the old one. `make_mesh`
+wraps `jax.make_mesh` (added in 0.4.35) with a `jax.sharding.Mesh`
+fallback, and accepts an explicit device subset — the fleet re-mesh path
+builds meshes over the SURVIVING devices, which is never a prefix of
+`jax.devices()`.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 try:
     shard_map = jax.shard_map
@@ -50,3 +55,17 @@ except AttributeError:
         return _experimental_shard_map(
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
         )
+
+
+def make_mesh(shape, names, devices=None):
+    """Build a device mesh; `devices=None` uses the first prod(shape) visible
+    devices. Tolerates jax versions predating `jax.make_mesh`."""
+    if devices is not None:
+        devices = np.asarray(devices, dtype=object).reshape(shape)
+    try:
+        return jax.make_mesh(tuple(shape), tuple(names), devices=devices)
+    except AttributeError:
+        if devices is None:
+            n = int(np.prod(shape))
+            devices = np.asarray(jax.devices()[:n], dtype=object).reshape(shape)
+        return jax.sharding.Mesh(devices, tuple(names))

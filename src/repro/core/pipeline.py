@@ -724,7 +724,7 @@ class CompressionPipeline(BlockedExecutor):
         """Slice one gang member's state back out of the stacked pytree."""
         return jax.tree_util.tree_map(lambda x: x[i], states)
 
-    def _gang_step_fn(self, meta7: bool = False):
+    def _gang_step_fn(self, meta7: bool = False, mesh: Any = None):
         """Jitted vmapped masked step over a leading session axis: ONE
         dispatch compresses one micro-batch from EACH gang member. jit
         re-specializes per gang size automatically; every member keeps its
@@ -733,17 +733,45 @@ class CompressionPipeline(BlockedExecutor):
         streams instead of within one). `meta7=True` is the egress-wave
         variant: the final output is the 7-bit-packed bitlen metadata
         instead of raw int32 bitlens (same dispatch count, wire-width
-        transfer)."""
+        transfer).
+
+        `mesh` (a pure `("data",)` fleet mesh, DESIGN.md §14) additionally
+        shards the session axis over the mesh devices via `compat.shard_map`:
+        the vmapped body runs per shard over its local session slice, so one
+        dispatch covers devices x gang sessions. The body is closed over —
+        per-session state (including the shared-dictionary LWW merge, which
+        acts WITHIN a session's lanes) never crosses a shard boundary, which
+        is exactly why the sharded wave stays bit-identical to solo runs."""
         name = "gang_step_meta7" if meta7 else "gang_step"
-        fn = self._scan_fns.get(name)
+        key = name if mesh is None else (name, mesh)
+        fn = self._scan_fns.get(key)
         if fn is None:
             body = self.masked_step_meta7 if meta7 else self.masked_step
-            fn = jax.jit(jax.vmap(body))
-            self._scan_fns[name] = fn
+            fn = jax.vmap(body)
+            if mesh is not None:
+                from jax.sharding import PartitionSpec
+
+                from repro import compat
+
+                spec = PartitionSpec("data")
+                fn = compat.shard_map(
+                    fn,
+                    mesh=mesh,
+                    in_specs=spec,
+                    out_specs=spec,
+                    check_vma=False,
+                )
+            fn = jax.jit(fn)
+            self._scan_fns[key] = fn
         return fn
 
     def gang_step(
-        self, states: Any, blocks: jax.Array, masks: jax.Array, meta7: bool = False
+        self,
+        states: Any,
+        blocks: jax.Array,
+        masks: jax.Array,
+        meta7: bool = False,
+        mesh: Any = None,
     ):
         """One timed gang dispatch over stacked micro-batches.
 
@@ -752,9 +780,20 @@ class CompressionPipeline(BlockedExecutor):
         meta[S, ...], wall_s) — `meta` is raw bitlens int32[S, L*B], or the
         7-bit-packed uint32 stream per member when `meta7=True`. The first
         call at a given gang size compiles untimed (memoized), so measured
-        costs stay compute."""
-        fn = self._gang_step_fn(meta7)
-        key = ("gang_step_meta7" if meta7 else "gang_step", tuple(blocks.shape))
+        costs stay compute.
+
+        With `mesh` set the session axis shards over the mesh's "data" axis;
+        the caller pads S to a multiple of `mesh.size` (the fleet dispatcher
+        replicates a member into the pad slots and discards their outputs)."""
+        if mesh is not None and getattr(mesh, "size", 1) <= 1:
+            mesh = None  # a 1-device mesh IS the plain vmapped dispatch
+        if mesh is not None and blocks.shape[0] % mesh.size != 0:
+            raise ValueError(
+                f"sharded gang wave of {blocks.shape[0]} sessions does not "
+                f"divide the {mesh.size}-device mesh; pad the wave first"
+            )
+        fn = self._gang_step_fn(meta7, mesh=mesh)
+        key = ("gang_step_meta7" if meta7 else "gang_step", tuple(blocks.shape), mesh)
         if key not in self._warmed:
             jax.block_until_ready(fn(states, blocks, masks))
             self._warmed.add(key)

@@ -211,6 +211,34 @@ def plan_gang(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetPlan:
+    """A signature's GangPlan scaled out over a device mesh (DESIGN.md §14).
+
+    One sharded wave covers `max_wave = devices x max_gang` sessions: each
+    mesh shard runs up to `max_gang` members (the cache-aware per-DEVICE
+    bound — sharding does not change any one device's working set), and the
+    per-signature admission budget scales the same way so backpressure fires
+    at fleet scale instead of throttling the queue to one device's budget."""
+
+    devices: int
+    max_wave: int  # sessions per sharded dispatch
+    budget: int  # fleet-wide per-signature backpressure budget
+    quantum_s: float
+
+
+def plan_fleet(gang: GangPlan, devices: int) -> FleetPlan:
+    """Scale one dispatch signature's gang sizing across `devices` shards."""
+    if devices < 1:
+        raise ValueError(f"fleet needs >= 1 device, got {devices}")
+    return FleetPlan(
+        devices=devices,
+        max_wave=gang.max_gang * devices,
+        budget=gang.budget * devices,
+        quantum_s=gang.quantum_s,
+    )
+
+
 def resolve_capacity(
     block_tuples: int, lanes: int, align: int, flush_tuples: int = 0
 ) -> int:

@@ -25,7 +25,7 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Callable, Deque, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -100,6 +100,38 @@ class FaultInjector:
         if step in self.fail_at_steps and step not in self.fired:
             self.fired.add(step)
             raise RuntimeError(f"injected node failure at step {step}")
+
+
+class DeviceLoss(RuntimeError):
+    """A device dropped out of the serving mesh mid-wave (DESIGN.md §14).
+
+    Carries which mesh slot died and during which wave, so the fleet
+    dispatcher can re-mesh onto the survivors and replay the wave — wave
+    results only commit AFTER a dispatch completes, so the lost wave's
+    sessions are still at their last committed FlushRecord and the replay
+    is exact (zero acknowledged frames lost)."""
+
+    def __init__(self, device_index: int, wave: int = -1):
+        super().__init__(f"device {device_index} lost during wave {wave}")
+        self.device_index = device_index
+        self.wave = wave
+
+
+@dataclasses.dataclass
+class DeviceLossInjector:
+    """Deterministic kill-a-device schedule for fleet chaos drills.
+
+    `fail_at_waves` maps wave index -> mesh slot to kill; each scheduled
+    loss fires exactly once (the retried wave must SUCCEED on the shrunk
+    mesh, like `FaultInjector`'s once-per-step contract)."""
+
+    fail_at_waves: Dict[int, int] = dataclasses.field(default_factory=dict)
+    fired: set = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, wave: int):
+        if wave in self.fail_at_waves and wave not in self.fired:
+            self.fired.add(wave)
+            raise DeviceLoss(self.fail_at_waves[wave], wave)
 
 
 def run_with_restarts(

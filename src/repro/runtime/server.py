@@ -31,9 +31,10 @@ wall clock measures only compression compute, never the synthetic waiting.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 import warnings
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,18 +46,26 @@ from repro.core.energy import PROFILES, edge_energy_j
 from repro.core.pipeline import (
     CompressionPipeline,
     DecompressionPipeline,
+    codec_align,
     dispatch_signature,
 )
 from repro.core.strategies import (
     EngineConfig,  # noqa: F401  (re-exported for legacy callers)
     ExecutionPlan,
+    FleetPlan,
     GangPlan,
     SchedulingStrategy,
     SpecLike,
+    plan_fleet,
     plan_gang,
     resolve_capacity,
     schedule_blocks,
 )
+from repro.runtime.fault import DeviceLoss, HeartbeatMonitor
+
+# NOTE: repro.runtime.elastic (the fleet mesh planner) is imported lazily in
+# `ServerCore.__init__` — it pulls the LM sharding policy module tree in, and
+# only fleet-mode servers need it.
 
 
 @dataclasses.dataclass
@@ -122,6 +131,42 @@ class SessionReport:
 
 
 @dataclasses.dataclass
+class SignatureStats:
+    """Per-signature dispatch accounting (gang/fleet waves, DESIGN.md §14).
+
+    Lets benches attribute throughput: how many sessions rode each wave,
+    how much of the sharded device grid carried real work (`occupancy` —
+    pad replicas burned to fill mesh shards dilute it), and how often the
+    dispatcher degenerated to solo launches."""
+
+    codec: str
+    lanes: int
+    per_lane: int
+    n_sessions: int = 0  # sessions admitted under this signature
+    n_waves: int = 0  # multi-member (vmapped/sharded) dispatches
+    n_solo: int = 0  # degenerate single-member dispatches
+    sessions_dispatched: int = 0  # real wave members across all dispatches
+    max_wave: int = 0  # largest wave observed
+    padded_slots: int = 0  # pad replicas burned to fill mesh shards
+
+    @property
+    def label(self) -> str:
+        return f"{self.codec}/{self.lanes}x{self.per_lane}"
+
+    @property
+    def mean_wave(self) -> float:
+        n = self.n_waves + self.n_solo
+        return self.sessions_dispatched / n if n else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Real members / dispatch slots (1.0 = every sharded slot did
+        useful work; solo launches count as fully occupied)."""
+        slots = self.sessions_dispatched + self.padded_slots
+        return self.sessions_dispatched / slots if slots else 1.0
+
+
+@dataclasses.dataclass
 class ServerReport:
     sessions: Dict[str, SessionReport]
     n_sessions: int
@@ -135,6 +180,20 @@ class ServerReport:
     energy_j: float
     aggregate_mbps: float  # input bytes over modeled makespan
     n_dispatches: int = 0  # kernel launches issued (gangs amortize these)
+    # ---- fleet accounting (gang servers; devices > 1 = sharded waves) ----
+    devices: int = 1  # current mesh width (shrinks after a device loss)
+    #: per-signature dispatch breakdown keyed by `SignatureStats.label`
+    dispatch_stats: Dict[str, SignatureStats] = dataclasses.field(
+        default_factory=dict
+    )
+    #: device-loss recoveries this server survived ({wave, device, n_devices})
+    fault_events: List[dict] = dataclasses.field(default_factory=list)
+    #: modeled per-device busy time: each sharded wave's measured wall is
+    #: charged at shard width (wall x shard/padded slots) — the fleet
+    #: analogue of `makespan_s`'s modeled-profile convention, and exactly
+    #: `compute_s` on a 1-device mesh
+    device_makespan_s: float = 0.0
+    fleet_mbps: float = 0.0  # input bytes over modeled device makespan
 
 
 class StreamSession:
@@ -151,6 +210,7 @@ class StreamSession:
         codec: Optional[Codec] = None,
         plan: Optional[ExecutionPlan] = None,
         compact: bool = True,
+        pipeline: Optional[CompressionPipeline] = None,
     ):
         """`config` is any spec carrier with the EngineConfig attribute
         surface (EngineConfig or `repro.cstream.JobSpec`); a pre-negotiated
@@ -159,10 +219,21 @@ class StreamSession:
         compaction path (DESIGN.md §13): flush dispatches hand back the
         exact live word prefix plus 7-bit-packed metadata, so per-session
         egress transfers shrink to wire size; `compact=False` keeps the
-        legacy worst-case-buffer collection (the oracle baseline)."""
+        legacy worst-case-buffer collection (the oracle baseline).
+
+        `pipeline` shares a sibling session's compiled pipeline instead of
+        building one: safe whenever the dispatch signature matches (the gang
+        dispatcher already runs every member through the signature owner's
+        pipeline — sharing merely extends that to solo flushes), and the
+        difference between admitting 10k sessions in seconds vs. compiling
+        10k identical flush kernels. Codec STATE stays per-session."""
         self.topic = topic
         self.config = config
-        self.pipeline = CompressionPipeline(config, sample=sample, codec=codec, plan=plan)
+        self.pipeline = (
+            pipeline
+            if pipeline is not None
+            else CompressionPipeline(config, sample=sample, codec=codec, plan=plan)
+        )
         self.capacity = resolve_capacity(
             self.pipeline.plan.block_tuples,
             config.lanes,
@@ -199,12 +270,20 @@ class StreamSession:
         self._egress_cache: Optional[tuple] = None  # (n_blocks, fidelity triple)
         self._decompressor: Optional[DecompressionPipeline] = None
         # compile the flush kernel up front so per-flush timings are compute,
-        # not compilation (throwaway state: warmup must not advance the codec)
-        zeros = jnp.zeros((self.lanes, self.capacity // self.lanes), jnp.uint32)
-        mask = jnp.ones(zeros.shape, bool)
-        jax.block_until_ready(
-            self._flush_step_fn()(self.pipeline.init_state(), zeros, mask)
+        # not compilation (throwaway state: warmup must not advance the
+        # codec). Memoized on the shared pipeline: sessions admitted onto a
+        # sibling's pipeline find their kernel already compiled and warmed.
+        warm_key = (
+            "solo_meta7" if (self.egress and self._meta_packed) else "solo",
+            (self.lanes, self.capacity // self.lanes),
         )
+        if warm_key not in self.pipeline._warmed:
+            zeros = jnp.zeros((self.lanes, self.capacity // self.lanes), jnp.uint32)
+            mask = jnp.ones(zeros.shape, bool)
+            jax.block_until_ready(
+                self._flush_step_fn()(self.pipeline.init_state(), zeros, mask)
+            )
+            self.pipeline._warmed.add(warm_key)
 
     def _flush_step_fn(self):
         """The jitted kernel one flush dispatch runs: the egress-compacted
@@ -579,6 +658,9 @@ class ServerCore:
         gang_quantum_s: Optional[float] = None,
         max_gang: Optional[int] = None,
         gang_budget: Optional[int] = None,
+        mesh: Optional[Union[int, "ElasticSession"]] = None,
+        fault_injector: Any = None,
+        heartbeat: Optional[HeartbeatMonitor] = None,
     ):
         self.profile = PROFILES[profile]
         self.scheduling = scheduling
@@ -599,6 +681,49 @@ class ServerCore:
         #: per-signature session whose (compiled) pipeline runs the gangs
         self._gang_owner: Dict[tuple, StreamSession] = {}
         self._gang_plans: Dict[tuple, GangPlan] = {}
+        # ---- fleet dispatcher state (DESIGN.md §14) ------------------------
+        #: `mesh` shards gang waves over a pure ("data",) device mesh: an int
+        #: builds an ElasticSession over the first N visible devices; a
+        #: prebuilt cstream-profile ElasticSession is consumed as-is
+        self.fleet: Optional["ElasticSession"] = None
+        #: injector with a `maybe_fail(wave)` raising DeviceLoss (chaos
+        #: drills); real device loss surfaces the same way once mapped
+        self.fault_injector = fault_injector
+        #: serving-liveness heartbeat: beaten after every completed wave and
+        #: after every device-loss recovery
+        self.heartbeat = heartbeat
+        self.fault_events: List[dict] = []
+        self._wave_counter = 0
+        self._device_busy_s = 0.0
+        self._fleet_plans: Dict[tuple, FleetPlan] = {}
+        self._stats: Dict[tuple, SignatureStats] = {}
+        if mesh is not None:
+            if not gang:
+                raise ValueError(
+                    "mesh shards gang waves over devices; construct the "
+                    "server with gang=True to use a fleet mesh"
+                )
+            from repro.runtime.elastic import ElasticSession as _ElasticSession
+
+            if isinstance(mesh, _ElasticSession):
+                self.fleet = mesh
+            else:
+                n = int(mesh)
+                avail = jax.device_count()
+                if n < 1:
+                    raise ValueError(f"mesh must be >= 1 device, got {n}")
+                if n > avail:
+                    raise ValueError(
+                        f"mesh={n} exceeds the {avail} visible device(s); "
+                        "launch with XLA_FLAGS=--xla_force_host_platform_"
+                        f"device_count={n} or shrink the mesh"
+                    )
+                self.fleet = _ElasticSession(n_devices=n, profile="cstream")
+            if tuple(self.fleet.mesh.axis_names) != ("data",):
+                raise ValueError(
+                    "fleet mesh must be a pure ('data',) axis — build it "
+                    "with ElasticSession(profile='cstream')"
+                )
 
     # ------------------------------------------------------ gang dispatcher
     def _enqueue_flush(self, session: StreamSession, req: FlushRequest) -> None:
@@ -611,8 +736,12 @@ class ServerCore:
         sig = session.signature
         q = self._queues.setdefault(sig, [])
         q.append((session, req))
-        plan = self._gang_plans[sig]
-        budget = self.gang_budget if self.gang_budget is not None else plan.budget
+        if self.gang_budget is not None:
+            budget = self.gang_budget
+        elif sig in self._fleet_plans:
+            budget = self._fleet_plans[sig].budget
+        else:
+            budget = self._gang_plans[sig].budget
         if len(q) >= budget:
             self._dispatch_signature(sig)
 
@@ -631,6 +760,9 @@ class ServerCore:
             return
         plan = self._gang_plans[sig]
         cap = self.max_gang if self.max_gang is not None else plan.max_gang
+        if self.fleet is not None:
+            # one sharded wave carries max_gang sessions PER DEVICE
+            cap *= self.fleet.n_devices
         while q:
             # one wave: the oldest pending request of each distinct session,
             # up to the planned gang size. A session with several queued
@@ -650,38 +782,109 @@ class ServerCore:
     def _execute_wave(
         self, sig: tuple, wave: List[Tuple[StreamSession, FlushRequest]]
     ) -> None:
+        """Run one wave, surviving device loss (DESIGN.md §14).
+
+        The recovery invariant: session state and flush records mutate ONLY
+        in `commit`, after the dispatch completed — so when a device dies
+        mid-wave, every member is still at its last committed FlushRecord
+        and the wave replays exactly on the shrunk mesh. Orphaned sessions
+        are re-admitted by re-running the same wave; nothing acknowledged
+        is ever lost."""
+        wave_idx = self._wave_counter
+        self._wave_counter += 1
+        while True:
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector.maybe_fail(wave_idx)
+                self._run_wave(sig, wave)
+                if self.heartbeat is not None:
+                    self.heartbeat.beat()
+                return
+            except DeviceLoss as loss:
+                self._on_device_loss(loss)
+
+    def _on_device_loss(self, loss: DeviceLoss) -> None:
+        """Re-mesh onto the surviving devices and re-plan wave sizing.
+
+        The lost wave's members replay from their last committed
+        FlushRecord (the caller retries the wave); fleet budgets/caps
+        shrink with the mesh so backpressure keeps holding."""
+        if self.fleet is None:
+            raise loss  # not a fleet server: nothing to re-mesh
+        devs = list(np.asarray(self.fleet.mesh.devices).ravel())
+        if loss.device_index >= len(devs):
+            return  # stale report: that mesh slot is already gone
+        healthy = [d for i, d in enumerate(devs) if i != loss.device_index]
+        if not healthy:
+            raise loss  # no survivors to re-admit the orphans onto
+        self.fault_events.append(
+            {
+                "wave": loss.wave,
+                "device": str(devs[loss.device_index]),
+                "n_devices": len(healthy),
+            }
+        )
+        self.fleet.resize(len(healthy), devices=healthy)
+        for s, gp in self._gang_plans.items():
+            self._fleet_plans[s] = plan_fleet(gp, self.fleet.n_devices)
+        if self.heartbeat is not None:
+            self.heartbeat.beat()  # recovery progress counts as liveness
+
+    def _run_wave(
+        self, sig: tuple, wave: List[Tuple[StreamSession, FlushRequest]]
+    ) -> None:
         """Compress one gang wave: stack members' batches/masks/states,
         run ONE vmapped dispatch on the signature owner's pipeline, and
         scatter states, bitstreams and flush records back per member.
         Degenerate single-member waves take the inline solo path — exactly
         what a non-gang server would have run.
 
+        On a fleet server the stacked session axis additionally shards over
+        the mesh's data axis: the wave is padded to a multiple of the mesh
+        width by replicating member 0 (pad outputs are discarded before
+        commit), each shard compresses its local session slice, and egress
+        compaction stays per-shard — commits slice exact live word prefixes
+        out of the sharded rows, so D2H stays wire-width per member.
+
         Egress scatter is compacted (DESIGN.md §13): only the per-member
         bit counts always cross device->host; each egress member's commit
         then slices its exact live word prefix (plus wire-width packed
         metadata when the wave ran the meta7 dispatch) out of the device
         rows — non-egress waves fetch no payload at all."""
+        stats = self._stats.get(sig)
         if len(wave) == 1:
             s, req = wave[0]
-            s.compress_request(req)
+            rec = s.compress_request(req)
+            self._device_busy_s += rec.cost_s
+            if stats is not None:
+                stats.n_solo += 1
+                stats.sessions_dispatched += 1
+                stats.max_wave = max(stats.max_wave, 1)
             return
         owner = self._gang_owner[sig]
         pipe = owner.pipeline
         lanes = owner.lanes
         meta7 = any(s.egress and s._meta_packed for s, _ in wave)
-        states = pipe.stack_states([s.state for s, _ in wave])
+        mesh = None
+        members = wave
+        pad = 0
+        if self.fleet is not None and self.fleet.n_devices > 1:
+            mesh = self.fleet.mesh
+            pad = (-len(wave)) % self.fleet.n_devices
+            members = wave + [wave[0]] * pad
+        states = pipe.stack_states([s.state for s, _ in members])
         blocks = jnp.asarray(
-            np.stack([req.values.reshape(lanes, -1) for _, req in wave])
+            np.stack([req.values.reshape(lanes, -1) for _, req in members])
         )
         masks = jnp.asarray(
-            np.stack([req.mask.reshape(lanes, -1) for _, req in wave])
+            np.stack([req.mask.reshape(lanes, -1) for _, req in members])
         )
         states, words, tbs, metas, wall = pipe.gang_step(
-            states, blocks, masks, meta7=meta7
+            states, blocks, masks, meta7=meta7, mesh=mesh
         )
         tb_np = np.asarray(tbs)
         cost = wall / len(wave)  # the dispatch is shared; so is its cost
-        for i, (s, req) in enumerate(wave):
+        for i, (s, req) in enumerate(wave):  # pad slots sit past len(wave)
             s.commit(
                 req,
                 pipe.unstack_state(states, i),
@@ -691,6 +894,16 @@ class ServerCore:
                 cost,
                 meta_packed=meta7,
             )
+        # modeled per-device time: the measured wall covers ALL padded
+        # slots' work serialized; one device carried slots/mesh-width of it
+        total_slots = len(members)
+        shard_slots = total_slots // mesh.size if mesh is not None else total_slots
+        self._device_busy_s += wall * (shard_slots / total_slots)
+        if stats is not None:
+            stats.n_waves += 1
+            stats.sessions_dispatched += len(wave)
+            stats.max_wave = max(stats.max_wave, len(wave))
+            stats.padded_slots += pad
 
     # -------------------------------------------------------------- admit
     def admit(
@@ -716,6 +929,20 @@ class ServerCore:
             raise RuntimeError(
                 f"server full: {len(self.sessions)}/{self.max_sessions} sessions"
             )
+        # gang admission with a pre-negotiated codec+plan knows the dispatch
+        # signature BEFORE building the session, so same-signature sessions
+        # share the owner's compiled pipeline (codec state stays per-session;
+        # waves already run on the owner's pipeline regardless) — admitting
+        # 10k sessions compiles one flush kernel, not 10k
+        shared: Optional[CompressionPipeline] = None
+        if self.gang and codec is not None and plan is not None:
+            cap = resolve_capacity(
+                plan.block_tuples, config.lanes, codec_align(codec), flush_tuples
+            )
+            sig = dispatch_signature(codec, config.lanes, cap // config.lanes)
+            owner = self._gang_owner.get(sig)
+            if owner is not None and owner.capacity == cap:
+                shared = owner.pipeline
         session = StreamSession(
             topic,
             config,
@@ -728,6 +955,7 @@ class ServerCore:
             codec=codec,
             plan=plan,
             compact=compact,
+            pipeline=shared,
         )
         self.sessions[topic] = session
         if self.gang:
@@ -742,6 +970,16 @@ class ServerCore:
                     self.profile,
                     flush_timeout_s=session.flush_timeout_s,
                 )
+                self._stats[sig] = SignatureStats(
+                    codec=session.pipeline.codec.name,
+                    lanes=session.lanes,
+                    per_lane=session.capacity // session.lanes,
+                )
+                if self.fleet is not None:
+                    self._fleet_plans[sig] = plan_fleet(
+                        self._gang_plans[sig], self.fleet.n_devices
+                    )
+            self._stats[sig].n_sessions += 1
         return session
 
     def session(self, topic: str) -> StreamSession:
@@ -802,6 +1040,20 @@ class ServerCore:
                     self._dispatch_signature(sig)
                     next_edges[sig] = (np.floor(now / q_s) + 1.0) * q_s
 
+        # deadline heap: only sessions whose flush timer can actually fire
+        # are examined per clock step. Entries are (deadline, topic index)
+        # pushed whenever a session buffers; stale entries (the batch
+        # already flushed, so the live deadline moved) are dropped on pop.
+        # Replaces the poll-every-session sweep, which made the replay
+        # quadratic in the session count — at 10k+ fleet sessions that
+        # sweep WAS the server.
+        pending: List[Tuple[float, int]] = []
+
+        def _note(k: int) -> None:
+            d = sess[k].flush_deadline
+            if d is not None:
+                heapq.heappush(pending, (d, k))
+
         # walk the merged order in runs of equal topic so full batches move
         # through offer_many; timeout flushes fire as the clock advances
         i, n = 0, len(order)
@@ -813,8 +1065,12 @@ class ServerCore:
             run_idx = within[order[i:j]]
             now = float(all_ts[order[j - 1]])
             sess[tpi].offer_many(values[tpi][run_idx], tss[tpi][run_idx])
-            for s in sess:
-                s.poll(now)
+            _note(tpi)
+            while pending and pending[0][0] <= now:
+                d, k = heapq.heappop(pending)
+                if sess[k].flush_deadline == d:  # else stale: batch moved on
+                    sess[k].poll(now)
+                    _note(k)
             if self.gang:
                 _poll_gang_edges(now)
             i = j
@@ -848,8 +1104,21 @@ class ServerCore:
         output_bytes = sum(r.output_bytes for r in reports.values())
         # over ALL admitted sessions, not just the reported topics: gang
         # waves count on the signature owner's pipeline, and the owner may
-        # not be among the fed topics
-        n_dispatches = sum(s.pipeline.dispatches for s in self.sessions.values())
+        # not be among the fed topics. Deduplicate by pipeline identity —
+        # same-signature sessions SHARE the owner's pipeline, and summing
+        # per session would count each shared launch once per member.
+        pipes = {id(s.pipeline): s.pipeline for s in self.sessions.values()}
+        n_dispatches = sum(p.dispatches for p in pipes.values())
+        dispatch_stats = {}
+        for st in self._stats.values():
+            label = st.label
+            while label in dispatch_stats:  # same codec+geometry, other params
+                label += "'"
+            dispatch_stats[label] = st
+        # fleet throughput model: per-device busy time accumulated at wave
+        # execution (wall x shard/padded slots). On a 1-device mesh (or no
+        # mesh) it degenerates to compute_s exactly.
+        device_makespan = self._device_busy_s if self.gang else total_cost
         return ServerReport(
             sessions=reports,
             n_sessions=len(sess),
@@ -863,6 +1132,11 @@ class ServerCore:
             energy_j=energy,
             aggregate_mbps=input_bytes / 1e6 / max(makespan, 1e-12),
             n_dispatches=n_dispatches,
+            devices=self.fleet.n_devices if self.fleet is not None else 1,
+            dispatch_stats=dispatch_stats,
+            fault_events=list(self.fault_events),
+            device_makespan_s=device_makespan,
+            fleet_mbps=input_bytes / 1e6 / max(device_makespan, 1e-12),
         )
 
 

@@ -162,3 +162,98 @@ else:  # keep the skip visible in environments without hypothesis
     @given()
     def test_roundtrip_property():
         pass
+
+
+# ------------------------------------------------------ fleet gang property --
+# DESIGN.md §14: sharding a gang wave over a device mesh must change NOTHING
+# observable — every session's FlushRecord keys and egress frame bytes stay
+# identical to the unsharded gang — under a 1-device mesh (always runnable),
+# a multi-shard mesh, and a post-resize mesh (a device killed mid-run). The
+# multi-device variants need simulated devices (the count is fixed at jax
+# init): CI's fleet job runs this file under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8.
+import jax
+
+from repro.core.strategies import StateStrategy
+from repro.data.stream import rate_for_dataset, zipf_timestamps
+from repro.runtime.fault import DeviceLossInjector
+from repro.runtime.server import StreamServer
+
+#: rle carries open runs, tdic32 runs the shared-dictionary LWW merge INSIDE
+#: the (sharded) dispatch — state bugs corrupt every later micro-batch
+FLEET_MIX = ("tcomp32", "rle", "tdic32")
+
+
+def _fleet_run(mesh=None, fault=None, n_sessions=3, n=1200, seed=101, dist="walk"):
+    rate = rate_for_dataset(1)
+    server = StreamServer(
+        max_sessions=16, egress=True, gang=True, mesh=mesh, fault_injector=fault
+    )
+    feeds = {}
+    for i in range(n_sessions):
+        codec = FLEET_MIX[i % len(FLEET_MIX)]
+        cfg = EngineConfig(
+            codec=codec,
+            micro_batch_bytes=2048,
+            lanes=4,
+            state=StateStrategy.SHARED if codec == "tdic32" else StateStrategy.PRIVATE,
+        )
+        topic = f"{codec}-{i}"
+        server.admit(topic, cfg)
+        feeds[topic] = (
+            gen_values(dist, n, seed + i),
+            zipf_timestamps(n, rate, zipf_factor=0.7, seed=seed + i),
+        )
+    server.run(feeds)
+    return {
+        t: (tuple(f.key() for f in s.flushes), s.egress_frame().to_bytes())
+        for t, s in sorted(server.sessions.items())
+    }
+
+
+def test_fleet_mesh1_identical_to_gang():
+    """The 1-device fleet is the degenerate shard: byte-identical always."""
+    assert _fleet_run(mesh=1) == _fleet_run()
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >= 2 simulated devices (XLA_FLAGS=--xla_force_host_"
+    "platform_device_count=N before jax init)",
+)
+def test_fleet_multishard_identical_to_gang():
+    """Waves split across 2 shards (with pad slots on odd waves): identical."""
+    assert _fleet_run(mesh=2, n_sessions=5) == _fleet_run(n_sessions=5)
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >= 2 simulated devices (XLA_FLAGS=--xla_force_host_"
+    "platform_device_count=N before jax init)",
+)
+def test_fleet_postresize_identical_to_gang():
+    """A device killed at wave 1 re-meshes 2 -> 1 mid-run; the replayed wave
+    and everything after it stay byte-identical — zero acknowledged frames
+    lost."""
+    chaos = _fleet_run(mesh=2, n_sessions=5, fault=DeviceLossInjector({1: 1}))
+    assert chaos == _fleet_run(n_sessions=5)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=4, deadline=None, derandomize=True)
+    @given(
+        dist=st.sampled_from(("walk", "runs", "const")),
+        seed=st.integers(min_value=0, max_value=2**16 - 1),
+    )
+    def test_fleet_property(dist, seed):
+        """Derandomized sweep over arrival/value shapes: the mesh-of-1 fleet
+        tracks the gang byte-for-byte for every drawn workload."""
+        kw = dict(n_sessions=3, n=900, seed=seed, dist=dist)
+        assert _fleet_run(mesh=1, **kw) == _fleet_run(**kw)
+
+else:
+
+    @given()
+    def test_fleet_property():
+        pass
