@@ -1,0 +1,144 @@
+"""Beyond-paper: the device-side interleaved rANS entropy stage
+(DESIGN.md §15) — wire-bytes uplift vs compress-throughput cost across the
+codec registry on the zipf/sensor workload pairs.
+
+Claims this stage must earn (all three RAISE on miss, gating the smoke
+run like bench_egress's correctness claims — recorded in BENCH_rans.json):
+  * >= 10% MEDIAN wire-bytes reduction across the registry on its
+    zipf/sensor workloads (measured headroom is far larger: the packed
+    7-bit bitlen metadata and low-entropy payload bytes are exactly what
+    a byte-wise order-0 model squeezes);
+  * < 20% median compress-throughput cost — the chunked 8-lane
+    interleaving bounds the encode scan at ROWS=512 steps per vmapped
+    chunk, so the stage rides the same fused dispatch;
+  * bit-exact roundtrip: every entropy frame reparses from bytes to the
+    SAME raw payload/metadata sections as its entropy-off twin.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_table, job_spec, stream_for
+from repro.core import bits
+
+#: codec -> dataset (the bench_roundtrip zipf/sensor workload pairs)
+CODEC_STREAMS = [
+    ("tcomp32", "micro"),
+    ("leb128", "micro"),
+    ("delta_leb128", "stock"),
+    ("tdic32", "rovio"),
+    ("rle", "sensor_runs"),
+    ("leb128_nuq", "micro"),
+    ("uanuq", "micro"),
+    ("adpcm", "ecg"),
+    ("uaadpcm", "ecg"),
+    ("pla", "ecg"),
+]
+#: --smoke / quick subset: one per payload shape — dense 32-bit, varint,
+#: run-length, quantized varint
+SMOKE_CODECS = {"tcomp32", "delta_leb128", "rle", "leb128_nuq"}
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "BENCH_rans.json")
+
+
+def _stream(name: str, quick: bool) -> np.ndarray:
+    if name == "sensor_runs":  # heavy-runs stream so RLE has runs to merge
+        rng = np.random.default_rng(5)
+        n = (1 << 15) if quick else (1 << 17)
+        return np.repeat(
+            rng.integers(0, 256, size=n // 32 + 1).astype(np.uint32), 32
+        )[:n]
+    return stream_for(name, quick)
+
+
+def _measure(spec, stream) -> tuple:
+    """(frame, best-of-3 push+flush wall) with compile warmed outside."""
+    from repro import cstream
+
+    with cstream.open(spec, sample=stream) as h:
+        frame = h.push(stream).flush().frame
+    best = float("inf")
+    for _ in range(3):
+        h = cstream.open(spec, sample=stream)
+        t0 = time.perf_counter()
+        h.push(stream)
+        h.flush()
+        best = min(best, time.perf_counter() - t0)
+        h.close()
+    return frame, best
+
+
+def run(quick: bool = True) -> dict:
+    pairs = [
+        (c, d) for c, d in CODEC_STREAMS if (not quick) or c in SMOKE_CODECS
+    ]
+    rows = []
+    for codec, ds in pairs:
+        stream = _stream(ds, quick)
+        base = job_spec(codec, quick, egress=True)
+        plain, wall_p = _measure(base, stream)
+        coded, wall_c = _measure(base.replace(entropy="rans"), stream)
+
+        # bit-exact roundtrip THROUGH the serialized bytes: the entropy
+        # frame must decode back to the identical raw wire sections
+        back = bits.Frame.from_bytes(coded.to_bytes())
+        exact = (
+            np.array_equal(back.payload, plain.payload)
+            and np.array_equal(back.bitlen, plain.bitlen)
+            and back.to_bytes() == coded.to_bytes()
+        )
+
+        mb = len(stream) * 4 / 1e6
+        rows.append({
+            "codec": codec,
+            "dataset": ds,
+            "wire_bytes": plain.wire_bytes,
+            "rans_wire_bytes": coded.wire_bytes,
+            "reduction": 1.0 - coded.wire_bytes / max(plain.wire_bytes, 1),
+            "enc_mbps": mb / max(wall_p, 1e-12),
+            "rans_enc_mbps": mb / max(wall_c, 1e-12),
+            "throughput_cost": wall_c / max(wall_p, 1e-12) - 1.0,
+            "roundtrip_exact": exact,
+        })
+
+    print(fmt_table(
+        rows,
+        ["codec", "dataset", "wire_bytes", "rans_wire_bytes", "reduction",
+         "enc_mbps", "rans_enc_mbps", "throughput_cost", "roundtrip_exact"],
+        "rANS entropy stage: wire uplift vs compress cost",
+    ))
+
+    med_red = float(np.median([r["reduction"] for r in rows]))
+    med_cost = float(np.median([r["throughput_cost"] for r in rows]))
+    claims = {
+        "rans_roundtrip_bit_exact": all(r["roundtrip_exact"] for r in rows),
+        "median_wire_reduction_ge_10pct": med_red >= 0.10,
+        "median_throughput_cost_lt_20pct": med_cost < 0.20,
+    }
+    print(f"   median reduction {med_red:.1%}, median cost {med_cost:+.1%}")
+    print("   claims:", claims)
+
+    out = {
+        "rows": rows,
+        "median_reduction": med_red,
+        "median_throughput_cost": med_cost,
+        "claims": claims,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print(f"   wrote {OUT_JSON}")
+
+    # every claim is an acceptance gate: ratio uplift and bounded cost are
+    # the stage's reason to exist, not best-effort perf color
+    failed = [k for k, ok in claims.items() if not ok]
+    if failed:
+        raise RuntimeError(f"rans entropy claims failed: {failed}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

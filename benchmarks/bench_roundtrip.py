@@ -8,12 +8,22 @@ Claims this PR must earn:
   * the decode path runs through the fused chunked-scan executor, so decode
     throughput is the same order as encode (asymmetry bounded), not a
     per-block dispatch crawl.
+
+A second pass repeats the roundtrip with the rANS entropy stage on
+(DESIGN.md §15) — the roofline rows for ratio-vs-throughput with the wire
+sections recoded; the stage's hard acceptance gates live in bench_rans.
+Results land in BENCH_roundtrip.json (a CI artifact).
 """
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
 from benchmarks.common import fmt_table, job_spec, stream_for
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "BENCH_roundtrip.json")
 
 
 #: codec -> dataset it suits (paper Fig 5: no codec wins everywhere)
@@ -44,11 +54,13 @@ def run(quick: bool = True) -> dict:
 
     rows = []
     for codec, ds in CODEC_STREAMS:
+      for ent in (None, "rans"):
         stream = _stream(ds, quick)
         # calibrate on the WHOLE stream: the quantizer's error bound only
         # holds for in-range values; a prefix sample would let later values
         # clip past vmax and void the contract this bench is checking
-        handle = cstream.open(job_spec(codec, quick, egress=True), sample=stream)
+        spec = job_spec(codec, quick, egress=True).replace(entropy=ent)
+        handle = cstream.open(spec, sample=stream)
         handle.push(stream)
         handle.flush()  # warmups inside; walls measure compute
         rt = handle.close().roundtrips[0]
@@ -59,6 +71,7 @@ def run(quick: bool = True) -> dict:
         rows.append({
             "codec": codec,
             "dataset": ds,
+            "entropy": ent or "off",
             "ratio": rt.compress.stats.ratio,
             "wire_ratio": (fid.n_tuples * 4) / max(rt.wire_bytes, 1),
             "enc_mbps": mb / max(enc_s, 1e-12),
@@ -74,15 +87,22 @@ def run(quick: bool = True) -> dict:
 
     print(fmt_table(
         rows,
-        ["codec", "dataset", "ratio", "wire_ratio", "enc_mbps", "dec_mbps",
-         "dec_over_enc", "bit_exact", "max_abs", "bound", "nrmse"],
-        "roundtrip through the wire frame: fidelity + decode throughput",
+        ["codec", "dataset", "entropy", "ratio", "wire_ratio", "enc_mbps",
+         "dec_mbps", "dec_over_enc", "bit_exact", "max_abs", "bound", "nrmse"],
+        "roundtrip through the wire frame: fidelity + decode throughput "
+        "(entropy off/on roofline)",
     ))
 
     lossless = [r for r in rows if not r["lossy"]]
     lossy = [r for r in rows if r["lossy"]]
     bounded = [r for r in lossy if r["bound"] is not None]
     asym = [r["dec_over_enc"] for r in rows]
+    # the entropy roofline: per-codec wire-ratio uplift at its enc cost
+    by_key = {(r["codec"], r["entropy"]): r for r in rows}
+    uplift = [
+        by_key[(c, "rans")]["wire_ratio"] / max(by_key[(c, "off")]["wire_ratio"], 1e-12)
+        for c, _ in CODEC_STREAMS if (c, "rans") in by_key
+    ]
     claims = {
         "all_lossless_bit_exact": all(r["bit_exact"] for r in lossless),
         "bounded_lossy_within_bound": all(r["within_bound"] for r in bounded),
@@ -90,9 +110,16 @@ def run(quick: bool = True) -> dict:
         # fused decode: median decompress within ~6x of compress (same order;
         # ADPCM's sequential reconstruction scan is the honest outlier)
         "decode_same_order_as_encode": float(np.median(asym)) < 6.0,
+        # the rANS stage must never lose wire ratio (hard gates: bench_rans)
+        "entropy_never_reduces_wire_ratio": all(u >= 0.999 for u in uplift),
     }
     print("   claims:", claims)
-    return {"rows": rows, "claims": claims}
+    out = {"rows": rows, "claims": claims,
+           "median_entropy_wire_uplift": float(np.median(uplift)) if uplift else None}
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print(f"   wrote {OUT_JSON}")
+    return out
 
 
 if __name__ == "__main__":

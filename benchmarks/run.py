@@ -32,13 +32,15 @@ MODULES = [
     "bench_server",            # beyond-paper: fused executor + StreamServer
     "bench_roundtrip",         # beyond-paper: egress/decode path + fidelity
     "bench_egress",            # beyond-paper: frame compaction + D2H accounting
+    "bench_rans",              # beyond-paper: interleaved rANS entropy stage
     "bench_fleet",             # beyond-paper: multi-device sharded gang waves
     "bench_roofline",          # dry-run aggregation
 ]
 
 #: --smoke: the fast subset CI runs on CPU — executor + runtime + egress claims
 #: (bench_egress's correctness claims RAISE on failure, gating the smoke run:
-#: bit-identical frames, D2H-bytes bound, dispatch count unchanged).
+#: bit-identical frames, D2H-bytes bound, dispatch count unchanged; ALL of
+#: bench_rans's claims raise: ratio uplift, bounded cost, exact roundtrip).
 #: bench_fleet is NOT here: it re-enters itself in subprocesses with
 #: simulated device counts, so CI runs it in its own `fleet` job.
 SMOKE_MODULES = [
@@ -46,6 +48,7 @@ SMOKE_MODULES = [
     "bench_server",
     "bench_roundtrip",
     "bench_egress",
+    "bench_rans",
 ]
 
 

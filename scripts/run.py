@@ -23,7 +23,7 @@ def list_codecs() -> int:
 
     cols = [
         "name", "table1", "wire", "lossy", "stateful", "kind", "scope",
-        "maskable", "aligned", "bound", "params",
+        "maskable", "aligned", "entropy", "bound", "params",
     ]
     rows = []
     for c in cstream.capabilities():
@@ -31,6 +31,7 @@ def list_codecs() -> int:
             "name": c.name,
             "table1": c.paper_name or "-",
             "wire": str(c.wire_id) if c.wire_id is not None else "-",
+            "entropy": ",".join(c.entropy) or "-",
             "lossy": "lossy" if c.lossy else "lossless",
             "stateful": "yes" if c.stateful else "no",
             "kind": c.state_kind,
@@ -86,7 +87,45 @@ def smoke() -> int:
     print(f"api smoke: {len(names) - len(failures)}/{len(names)} codecs pass")
     if _fleet_smoke():
         failures.append("fleet")
+    if _entropy_smoke():
+        failures.append("entropy")
     return 1 if failures else 0
+
+
+def _entropy_smoke() -> int:
+    """Entropy-stage gate (DESIGN.md §15): negotiate/open/roundtrip a
+    JobSpec with entropy='rans', and check the invalid combination fails
+    with a single-line NegotiationError."""
+    import numpy as np
+
+    from repro import cstream
+    from repro.core import bits
+
+    try:
+        try:  # entropy without egress must be refused, on one line
+            cstream.negotiate(cstream.JobSpec(codec="rle", entropy="rans"))
+        except cstream.NegotiationError as exc:
+            assert "\n" not in str(exc), "multi-line NegotiationError"
+        else:
+            raise AssertionError("entropy without egress negotiated")
+        spec = cstream.JobSpec(
+            codec="rle", egress=True, entropy="rans", micro_batch_bytes=2048
+        )
+        plan = cstream.negotiate(spec)
+        assert plan.entropy is not None and plan.entropy.kind == "rans"
+        rng = np.random.default_rng(0)
+        values = np.repeat(rng.integers(0, 64, size=512).astype(np.uint32), 8)
+        with cstream.open(spec, sample=values) as h:
+            seg = h.push(values).flush()
+            rep = h.report()
+        assert rep.fidelity.bit_exact
+        frame = bits.Frame.from_bytes(seg.frame.to_bytes())  # wire-parseable
+        assert frame.n_valid == values.size
+        print(f"  [OK] entropy: rans roundtrip, wire {seg.frame.wire_bytes}B")
+        return 0
+    except Exception as exc:  # noqa: BLE001 — same reporting as the codec loop
+        print(f"  [FAIL] entropy: {type(exc).__name__}: {exc}")
+        return 1
 
 
 def _fleet_smoke() -> int:

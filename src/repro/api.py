@@ -36,6 +36,7 @@ import jax
 import numpy as np
 
 from repro.core import bits, metrics
+from repro.core import entropy as entropy_stage
 from repro.core.algorithms import (
     PAPER_TABLE1,
     WIRE_CODEC_IDS,
@@ -81,6 +82,7 @@ __all__ = [
     "JobSpec",
     "Plan",
     "CodecCapability",
+    "EntropyCapability",
     "NegotiationError",
     "negotiate",
     "negotiate_gang",
@@ -154,6 +156,10 @@ class JobSpec:
     max_abs_error: Optional[float] = None
     #: require pad symbols never to reach the wire (maskable codecs only)
     strict_masking: bool = False
+    #: optional stage-2 entropy coder over the frame's wire bytes
+    #: (None = off, "rans" = interleaved rANS, DESIGN.md §15); requires
+    #: egress — the stage exists on the wire, not in the decode executor
+    entropy: Optional[str] = None
     #: this job must be gang-dispatchable (Dispatcher(gang=True))
     gang: bool = False
     #: arrival rate for the end-to-end latency model (paper §4.1)
@@ -185,6 +191,8 @@ class JobSpec:
             raise _err(f"JobSpec.arrival_rate_tps must be > 0 or None, got {self.arrival_rate_tps!r}")
         if not isinstance(self.devices, int) or self.devices < 0:
             raise _err(f"JobSpec.devices must be an int >= 0 (0 = dispatcher-local), got {self.devices!r}")
+        if self.entropy not in (None, "rans"):
+            raise _err(f"JobSpec.entropy must be None or 'rans', got {self.entropy!r}")
 
     # ------------------------------------------------------------ accessors
     @property
@@ -230,6 +238,7 @@ class JobSpec:
             "egress": self.egress,
             "max_abs_error": self.max_abs_error,
             "strict_masking": self.strict_masking,
+            "entropy": self.entropy,
             "gang": self.gang,
             "arrival_rate_tps": self.arrival_rate_tps,
             "devices": self.devices,
@@ -338,6 +347,20 @@ class CodecCapability:
     aligned: bool  # byte-aligned symbol output
     accepted_params: Tuple[str, ...]
     default_error_bound: Optional[float]  # at default params; None = unbounded
+    #: stage-2 entropy coders this codec's frames compose with. The stage
+    #: operates on serialized wire sections, so every codec with a wire id
+    #: gets it for free; codecs without egress support offer none.
+    entropy: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class EntropyCapability:
+    """The negotiated stage-2 entropy coder (DESIGN.md §15)."""
+
+    kind: str  # "rans"
+    lanes: int  # interleaved decoder lanes per chunk
+    prob_bits: int  # frequency-table denominator = 2**prob_bits
+    chunk_bytes: int  # bytes per independently-decodable chunk
 
 
 #: (name, factory) -> capability; keyed on the factory object so a
@@ -368,6 +391,7 @@ def capability(name: str) -> CodecCapability:
         aligned=meta.aligned,
         accepted_params=tuple(accepted_params(name)),
         default_error_bound=inst.error_bound(),
+        entropy=("rans",) if WIRE_CODEC_IDS.get(name) is not None else (),
     )
     _CAP_CACHE[key] = cap
     return cap
@@ -399,6 +423,8 @@ class Plan:
     notes: Tuple[str, ...] = ()  # non-fatal negotiation outcomes
     #: fleet wave sizing when the spec asked for a device mesh (devices >= 1)
     fleet: Optional[FleetPlan] = None
+    #: resolved stage-2 entropy coder (spec.entropy="rans"); None = off
+    entropy: Optional[EntropyCapability] = None
 
     @property
     def block_tuples(self) -> int:
@@ -451,6 +477,17 @@ def negotiate(spec: JobSpec) -> Plan:
             f"codec {spec.codec!r} has no wire-format id, so egress frames "
             f"cannot be built; drop egress or pick one of: {', '.join(wired)}"
         )
+    if spec.entropy is not None and not spec.egress:
+        raise _err(
+            f"JobSpec.entropy={spec.entropy!r} codes the serialized wire "
+            "sections, which only exist on egress frames; set egress=True "
+            "or drop entropy"
+        )
+    if spec.entropy is not None and spec.entropy not in cap.entropy:
+        raise _err(
+            f"codec {spec.codec!r} offers no {spec.entropy!r} entropy stage "
+            f"(its frames have no wire sections to code); drop entropy"
+        )
     if spec.max_abs_error is not None:
         bound = codec.error_bound()
         if bound is None:
@@ -494,7 +531,10 @@ def negotiate(spec: JobSpec) -> Plan:
         exec_plan, spec.hardware(), flush_timeout_s=spec.flush_timeout_s
     )
     try:
-        signature = dispatch_signature(codec, spec.lanes, capacity // spec.lanes)
+        signature = dispatch_signature(
+            codec, spec.lanes, capacity // spec.lanes,
+            entropy=spec.entropy or "none",
+        )
     except TypeError as exc:
         if spec.gang:
             raise _err(
@@ -513,6 +553,16 @@ def negotiate(spec: JobSpec) -> Plan:
         signature=signature,
         notes=tuple(notes),
         fleet=plan_fleet(gang_plan, spec.devices) if spec.devices >= 1 else None,
+        entropy=(
+            EntropyCapability(
+                kind="rans",
+                lanes=entropy_stage.N_LANES,
+                prob_bits=entropy_stage.PROB_BITS,
+                chunk_bytes=entropy_stage.CHUNK_BYTES,
+            )
+            if spec.entropy == "rans"
+            else None
+        ),
     )
 
 

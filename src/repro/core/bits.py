@@ -261,6 +261,12 @@ def zigzag_decode(z: jax.Array) -> jax.Array:
 FRAME_MAGIC = 0x43535746  # "CSWF"
 FRAME_VERSION = 1
 _HDR_WORDS = 12
+#: header word 1 = version (low 16 bits) | feature bits (high 16 bits).
+#: A frame without features serializes word 1 as exactly FRAME_VERSION,
+#: byte-identical to pre-feature builds; decoders reject unknown bits
+#: instead of mis-parsing the body they gate.
+FEATURE_ENTROPY = 1 << 16  # body is [counts | entropy blob], not [counts | meta | payload]
+_KNOWN_FEATURES = FEATURE_ENTROPY
 
 
 def _pack_bitlens(bitlen: np.ndarray) -> np.ndarray:
@@ -322,6 +328,12 @@ class Frame:
     #: `to_bytes` then reuses it instead of re-packing `bitlen`. Must stay
     #: consistent with `bitlen` — both come from the same source.
     packed_meta: Optional[np.ndarray] = None
+    #: rANS stage-2 blob (uint32 words, `core.entropy.encode_blob`). When
+    #: set, serialization carries the blob INSTEAD of the raw metadata +
+    #: payload sections and raises FEATURE_ENTROPY in the version word;
+    #: the in-memory fields above always stay in raw form so decoders and
+    #: the executor never see entropy-coded bytes.
+    entropy: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------ shapes --
     @property
@@ -353,14 +365,60 @@ class Frame:
 
     @property
     def wire_bytes(self) -> int:
-        """Total serialized size (header + metadata + payload), computed in
-        O(1) — must equal len(self.to_bytes())."""
+        """Total serialized size (header + metadata + payload, or header +
+        entropy blob), computed in O(1) — must equal len(self.to_bytes())."""
+        if self.entropy is not None:
+            return 4 * (_HDR_WORDS + 2 * self.n_blocks + self.entropy.size)
         meta_words = (7 * self.n_symbols + 31) // 32
         return 4 * (_HDR_WORDS + 2 * self.n_blocks + meta_words + self.payload.size)
+
+    # ------------------------------------------------------- entropy stage --
+    def apply_entropy(self) -> "Frame":
+        """Attach the rANS stage-2 blob (DESIGN.md §15), in place.
+
+        Entropy-codes the 7-bit metadata stream and the compacted payload
+        into `self.entropy`; the raw fields are kept untouched so the
+        decode executor is oblivious to the stage. Idempotent."""
+        if self.entropy is None:
+            from repro.core import entropy as _entropy
+
+            meta = self.packed_meta
+            if meta is None:
+                meta = _pack_bitlens(self.bitlen)
+                self.packed_meta = meta
+            self.entropy = _entropy.encode_blob(
+                meta, np.ascontiguousarray(self.payload, np.uint32)
+            )
+        return self
 
     # ----------------------------------------------------------- serialize --
     def to_bytes(self) -> bytes:
         nb = self.n_blocks
+        if self.entropy is not None:
+            header = np.array(
+                [
+                    FRAME_MAGIC,
+                    FRAME_VERSION | FEATURE_ENTROPY,
+                    self.codec_id,
+                    self.lanes,
+                    self.per_lane,
+                    self.n_full,
+                    self.tail_per_lane,
+                    self.flush_slots,
+                    self.n_valid,
+                    nb,
+                    self.entropy.size,
+                    0,  # no raw payload section follows
+                ],
+                np.uint32,
+            )
+            parts = [
+                header,
+                np.ascontiguousarray(self.block_bits, np.uint32),
+                np.ascontiguousarray(self.block_valid, np.uint32),
+                np.ascontiguousarray(self.entropy, np.uint32),
+            ]
+            return b"".join(p.astype("<u4").tobytes() for p in parts)
         meta = self.packed_meta
         if meta is None:
             meta = _pack_bitlens(self.bitlen)
@@ -395,10 +453,27 @@ class Frame:
         head = np.frombuffer(buf[: 4 * _HDR_WORDS], dtype="<u4")
         if head.size < _HDR_WORDS or int(head[0]) != FRAME_MAGIC:
             raise ValueError("not a CStream frame (bad magic)")
-        if int(head[1]) != FRAME_VERSION:
-            raise ValueError(f"unsupported frame version {int(head[1])}")
+        version = int(head[1]) & 0xFFFF
+        features = int(head[1]) & 0xFFFF0000
+        if version != FRAME_VERSION:
+            raise ValueError(f"unsupported frame version {version}")
+        unknown = features & ~_KNOWN_FEATURES
+        if unknown:
+            raise ValueError(
+                f"frame uses unknown feature bits 0x{unknown:08x} (this "
+                f"build understands 0x{_KNOWN_FEATURES:08x}: entropy); "
+                "decode with a newer build"
+            )
+        has_entropy = bool(features & FEATURE_ENTROPY)
         nb, meta_words, payload_words = int(head[9]), int(head[10]), int(head[11])
         body = np.frombuffer(buf[4 * _HDR_WORDS :], dtype="<u4")
+        # with FEATURE_ENTROPY, header word 10 is the blob size and word 11
+        # must be zero: the raw sections are inside the blob
+        if has_entropy and payload_words != 0:
+            raise ValueError(
+                "frame header inconsistent: entropy frames carry no raw "
+                "payload section"
+            )
         if body.size != 2 * nb + meta_words + payload_words:
             raise ValueError("frame length mismatch")
         block_bits = body[:nb].astype(np.uint32)
@@ -426,9 +501,19 @@ class Frame:
                 f"frame header inconsistent: {nb} blocks declared, shape "
                 f"fields imply {frame.n_blocks}"
             )
-        if (7 * frame.n_symbols + 31) // 32 != meta_words:
+        if has_entropy:
+            from repro.core import entropy as _entropy
+
+            blob = meta  # word-10 section is the blob on this path
+            meta, frame.payload = _entropy.decode_blob(
+                blob,
+                (7 * frame.n_symbols + 31) // 32,
+                int(frame.block_words().sum()),
+            )
+            frame.entropy = blob
+        elif (7 * frame.n_symbols + 31) // 32 != meta_words:
             raise ValueError("frame header inconsistent: bitlen metadata size")
-        if int(frame.block_words().sum()) != payload_words:
+        elif int(frame.block_words().sum()) != payload_words:
             raise ValueError("frame header inconsistent: payload size")
         frame.bitlen = _unpack_bitlens(meta, frame.n_symbols)
         frame.packed_meta = meta  # reserialization reuses the parsed stream

@@ -78,14 +78,19 @@ def codec_align(codec: Codec) -> int:
 
 
 def dispatch_signature(
-    codec: Codec, lanes: int, per_lane: int, dtype: str = "uint32"
+    codec: Codec,
+    lanes: int,
+    per_lane: int,
+    dtype: str = "uint32",
+    entropy: str = "none",
 ) -> Tuple[Any, ...]:
     """Gang dispatch signature: streams/sessions stack into one vmapped
     dispatch only when codec (including resolved/calibrated parameters),
-    block geometry, and dtype all match — anything else would run a member
-    under the wrong kernel or the wrong quantizer. Used by the serving
-    runtime's gang queues and the job API's gang negotiation."""
-    parts: List[Any] = [codec.name, lanes, per_lane, dtype]
+    block geometry, dtype, and entropy stage all match — anything else
+    would run a member under the wrong kernel, the wrong quantizer, or
+    marshal its frames under the wrong wire feature set. Used by the
+    serving runtime's gang queues and the job API's gang negotiation."""
+    parts: List[Any] = [codec.name, lanes, per_lane, dtype, entropy]
     for k, v in sorted(vars(codec).items()):
         if isinstance(v, (bool, int, float, str)):
             parts.append((k, v))
@@ -423,6 +428,9 @@ class BlockedExecutor:
             plan if plan is not None else plan_execution(config, codec_align=align)
         )
         self._align = align
+        #: stage-2 entropy coder applied at frame marshal ("none" | "rans");
+        #: legacy EngineConfig carriers predate the field, hence getattr
+        self.entropy: str = getattr(config, "entropy", None) or "none"
         self._scan_fns: Dict[int, Any] = {}  # chunk length -> jitted scan
         self._warmed: set = set()  # (shapes, chunk, ...) already compiled
         #: kernel dispatches issued on timed paths (scan chunks, per-block
@@ -1403,6 +1411,17 @@ class CompressionPipeline(BlockedExecutor):
             return None
         return self._flush_entry(self._pack_flush(state))
 
+    def _maybe_entropy(self, frame: bits.Frame) -> bits.Frame:
+        """Apply the negotiated stage-2 entropy coder at marshal time.
+
+        Every egress path — solo fused/eager, gang, server waves, legacy
+        compact=False — funnels through `marshal_frame`/`marshal_compacted`,
+        so hooking here composes the stage with all of them (DESIGN.md §15).
+        The frame keeps its raw fields; only serialization changes."""
+        if self.entropy == "rans":
+            frame.apply_entropy()
+        return frame
+
     def marshal_frame(
         self,
         blocks,
@@ -1415,7 +1434,7 @@ class CompressionPipeline(BlockedExecutor):
         """Single authority for frame marshalling: codec id and lane count
         come from this pipeline's config, callers only supply the block
         geometry and the (words, nbits, bitlen, valid) entries."""
-        return bits.build_frame(
+        return self._maybe_entropy(bits.build_frame(
             codec_id=WIRE_CODEC_IDS[self.codec.name],
             lanes=self.config.lanes,
             per_lane=per_lane,
@@ -1424,7 +1443,7 @@ class CompressionPipeline(BlockedExecutor):
             flush_slots=flush_slots,
             n_valid=n_valid,
             blocks=blocks,
-        )
+        ))
 
     def marshal_compacted(
         self,
@@ -1443,7 +1462,7 @@ class CompressionPipeline(BlockedExecutor):
         """`marshal_frame`'s compacted twin: codec id and lane count still
         come from this pipeline's config; the caller hands over the
         already-wire-shaped payload/metadata (`Frame.from_compacted`)."""
-        return bits.Frame.from_compacted(
+        return self._maybe_entropy(bits.Frame.from_compacted(
             codec_id=WIRE_CODEC_IDS[self.codec.name],
             lanes=self.config.lanes,
             per_lane=per_lane,
@@ -1456,7 +1475,7 @@ class CompressionPipeline(BlockedExecutor):
             payload=payload,
             bitlen=bitlen,
             packed_meta=packed_meta,
-        )
+        ))
 
     def frame_from(self, shaped: ShapedStream, result: ExecutionResult) -> bits.Frame:
         """Assemble the wire-format frame from a `collect_payload` run.

@@ -47,6 +47,26 @@ def pack_meta7(bitlen):
     return _frame_compact.pack_meta7_blocks(bitlen, interpret=_interpret())
 
 
+@jax.jit
+def rans_encode(syms, mask, freqs):
+    """Interleaved rANS encode of one chunk's (T, 8) byte grid
+    (kernels/rans.py). Returns (states, flags, vals)."""
+    from repro.kernels import rans as _rans
+
+    return _rans.encode_rows(syms, mask, freqs, interpret=_interpret())
+
+
+@jax.jit
+def rans_decode(stream, freqs, states, offsets, mask):
+    """Forward interleaved rANS decode of one chunk (kernels/rans.py):
+    lanes start in parallel from the decoupled offset stream."""
+    from repro.kernels import rans as _rans
+
+    return _rans.decode_rows(
+        stream, freqs, states, offsets, mask, interpret=_interpret()
+    )
+
+
 @partial(jax.jit, static_argnames=("qbits", "dmax", "mu", "sublanes", "t_tile"))
 def adpcm_encode(x, qbits: int = 8, dmax: float = 1.0, mu: float = 255.0,
                  sublanes: int = _delta_nuq.DEFAULT_SUBLANES,

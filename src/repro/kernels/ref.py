@@ -51,6 +51,33 @@ def pack_meta7_ref(bitlen: jax.Array) -> jax.Array:
     return jax.vmap(bits.pack_meta7)(bitlen)
 
 
+# -------------------------------------------------------------------- rans --
+def rans_encode_ref(syms: jax.Array, mask: jax.Array, freqs: jax.Array):
+    """Oracle for kernels/rans.py encode: the one-chunk interleaved scan
+    the production entropy stage runs (`core.entropy.encode_rows`)."""
+    from repro.core import entropy
+
+    return entropy.encode_rows(
+        syms.astype(jnp.uint32), mask.astype(bool), freqs
+    )
+
+
+def rans_decode_ref(
+    stream: jax.Array,
+    freqs: jax.Array,
+    states: jax.Array,
+    offsets: jax.Array,
+    mask: jax.Array,
+):
+    """Oracle for kernels/rans.py decode (`core.entropy.decode_rows`)."""
+    from repro.core import entropy
+
+    return entropy.decode_rows(
+        stream, freqs, states, offsets, mask.astype(bool),
+        entropy.slot_table(freqs),
+    )
+
+
 # --------------------------------------------------------------- delta_nuq --
 def delta_nuq_encode_ref(x: jax.Array, qbits: int, dmax: float, mu: float, t_tile: int):
     """Sequential-scan oracle with the same tile-local bootstrap semantics."""

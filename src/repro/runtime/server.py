@@ -322,7 +322,8 @@ class StreamSession:
         every flush)."""
         if self._signature is None:
             self._signature = dispatch_signature(
-                self.pipeline.codec, self.lanes, self.capacity // self.lanes
+                self.pipeline.codec, self.lanes, self.capacity // self.lanes,
+                entropy=self.pipeline.entropy,
             )
         return self._signature
 
@@ -939,7 +940,10 @@ class ServerCore:
             cap = resolve_capacity(
                 plan.block_tuples, config.lanes, codec_align(codec), flush_tuples
             )
-            sig = dispatch_signature(codec, config.lanes, cap // config.lanes)
+            sig = dispatch_signature(
+                codec, config.lanes, cap // config.lanes,
+                entropy=getattr(config, "entropy", None) or "none",
+            )
             owner = self._gang_owner.get(sig)
             if owner is not None and owner.capacity == cap:
                 shared = owner.pipeline

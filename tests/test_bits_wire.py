@@ -139,6 +139,87 @@ def test_frame_rejects_garbage():
         bits.Frame.from_bytes(b"\x00" * 64)
 
 
+# ------------------------------------------------- forward compatibility --
+def _tiny_frame() -> bits.Frame:
+    """Deterministic 2-block frame (seeded independently of module RNG)."""
+    rng = np.random.default_rng(1234)
+    blocks = []
+    for _ in range(2):
+        blen = rng.integers(0, 33, size=64).astype(np.int32)
+        nbits = int(blen.sum())
+        words = rng.integers(0, 2**32, size=(2 * 64 + 2,), dtype=np.uint64)
+        blocks.append((words.astype(np.uint32), nbits, blen, 64))
+    return bits.build_frame(
+        codec_id=7, lanes=4, per_lane=16, n_full=2, tail_per_lane=0,
+        flush_slots=0, n_valid=128, blocks=blocks,
+    )
+
+
+#: golden serialization of `_tiny_frame()`'s header, frozen at the PR 6
+#: layout. Pre-entropy frames must keep producing EXACTLY these bytes —
+#: the feature-bit mechanism must not disturb version-1 output.
+_GOLDEN_HEADER = bytes.fromhex(
+    "46575343" "01000000" "07000000" "04000000"  # magic, ver=1, codec, lanes
+    "10000000" "02000000" "00000000" "00000000"  # per_lane, n_full, tail, flush
+    "80000000" "02000000" "1c000000"             # n_valid, nb, meta_words=28
+)
+
+
+def test_frame_golden_bytes_pre_entropy_layout():
+    """Regression: entropy-off frames are byte-identical to the PR 6 wire
+    format — version word exactly 1 (no feature bits), raw sections."""
+    frame = _tiny_frame()
+    buf = frame.to_bytes()
+    assert buf[: len(_GOLDEN_HEADER)] == _GOLDEN_HEADER
+    head = np.frombuffer(buf[: 4 * 12], "<u4")
+    assert int(head[1]) == bits.FRAME_VERSION  # no feature bits raised
+    # and the frame parses back to the same bytes
+    assert bits.Frame.from_bytes(buf).to_bytes() == buf
+
+
+def test_frame_rejects_unknown_feature_bits():
+    """Unknown feature bits must raise a single-line actionable error, not
+    silently mis-parse the body they gate."""
+    buf = bytearray(_tiny_frame().to_bytes())
+    buf[4:8] = (bits.FRAME_VERSION | (1 << 17)).to_bytes(4, "little")
+    with pytest.raises(ValueError, match="unknown feature bits") as ei:
+        bits.Frame.from_bytes(bytes(buf))
+    assert "\n" not in str(ei.value)
+
+
+def test_frame_rejects_future_version():
+    buf = bytearray(_tiny_frame().to_bytes())
+    buf[4:8] = (2).to_bytes(4, "little")
+    with pytest.raises(ValueError, match="unsupported frame version 2"):
+        bits.Frame.from_bytes(bytes(buf))
+
+
+def test_frame_entropy_roundtrip_and_reserialize():
+    """FEATURE_ENTROPY frames parse back to the same raw payload/bitlen as
+    their plain twin, and reserialize byte-identically."""
+    plain = _tiny_frame()
+    plain_buf = plain.to_bytes()
+    coded = bits.Frame.from_bytes(plain_buf).apply_entropy()
+    buf = coded.to_bytes()
+    assert coded.wire_bytes == len(buf)
+    head = np.frombuffer(buf[:8], "<u4")
+    assert int(head[1]) == bits.FRAME_VERSION | bits.FEATURE_ENTROPY
+    back = bits.Frame.from_bytes(buf)
+    np.testing.assert_array_equal(back.payload, plain.payload)
+    np.testing.assert_array_equal(back.bitlen, plain.bitlen)
+    np.testing.assert_array_equal(back.block_bits, plain.block_bits)
+    assert back.to_bytes() == buf  # parsed entropy frames reserialize exactly
+
+
+def test_frame_entropy_empty_frame():
+    empty = bits.build_frame(
+        codec_id=3, lanes=4, per_lane=0, n_full=0, tail_per_lane=0,
+        flush_slots=0, n_valid=0, blocks=[],
+    ).apply_entropy()
+    back = bits.Frame.from_bytes(empty.to_bytes())
+    assert back.n_symbols == 0 and back.payload.size == 0
+
+
 def test_frame_rejects_inconsistent_header():
     """A tampered header (inflated lanes / block counts) must fail with the
     parser's ValueError contract, never an uncontrolled IndexError."""

@@ -1,0 +1,182 @@
+"""Device-side interleaved rANS entropy stage (DESIGN.md §15): frequency
+quantization invariants, section/blob wire roundtrips (empty, constant,
+skewed, incompressible), the raw-section fallback, truncation errors, and
+the negotiation surface (EntropyCapability, signature separation)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import cstream
+from repro.core import bits, entropy
+from repro.core.algorithms import WIRE_CODEC_IDS
+
+RNG = np.random.default_rng(15)
+
+
+# ------------------------------------------------------- quantize_freqs ----
+def _quantized(hist: np.ndarray) -> np.ndarray:
+    return np.asarray(entropy.quantize_freqs(jnp.asarray(hist, jnp.int32)))
+
+
+@pytest.mark.parametrize(
+    "hist",
+    [
+        np.bincount(RNG.integers(0, 256, size=5000), minlength=256),
+        np.bincount((RNG.zipf(1.4, size=5000) - 1).clip(0, 255), minlength=256),
+        np.eye(256, dtype=np.int64)[3] * 10**9,  # one symbol, huge count
+        np.ones(256, np.int64),
+        np.full(256, 2**30, np.int64),  # total far beyond int32 scaling
+    ],
+    ids=["uniform", "zipf", "single", "ones", "huge"],
+)
+def test_quantize_freqs_sums_to_scale_and_keeps_present(hist):
+    q = _quantized(hist)
+    assert q.sum() == entropy.PROB_SCALE
+    assert (q[hist > 0] >= 1).all()  # present symbols never rounded to zero
+    assert (q[hist == 0] == 0).all()
+
+
+def test_quantize_freqs_empty_histogram():
+    q = _quantized(np.zeros(256, np.int64))
+    assert q.sum() == entropy.PROB_SCALE  # degenerate table is still valid
+
+
+# ------------------------------------------------------- section roundtrip --
+def _section_roundtrip(raw: np.ndarray):
+    sec = entropy.encode_section(raw)
+    back, consumed = entropy.decode_section(sec, raw.size)
+    assert consumed == sec.size  # decoder consumes exactly what encode wrote
+    np.testing.assert_array_equal(back, raw)
+    return sec
+
+
+@pytest.mark.parametrize(
+    "raw",
+    [
+        np.zeros(0, np.uint32),
+        np.array([0xDEADBEEF], np.uint32),
+        np.zeros(4000, np.uint32),
+        np.repeat(RNG.integers(0, 16, size=500).astype(np.uint32), 8)[:4000],
+        RNG.integers(0, 2**32, size=5000, dtype=np.uint64).astype(np.uint32),
+        (RNG.zipf(1.3, size=3000) - 1).clip(0, 2**20).astype(np.uint32),
+    ],
+    ids=["empty", "one", "const", "runs", "random", "zipf"],
+)
+def test_section_roundtrip_bit_exact(raw):
+    _section_roundtrip(raw)
+
+
+def test_section_compresses_skewed_and_falls_back_on_random():
+    skew = np.repeat(RNG.integers(0, 8, size=500).astype(np.uint32), 8)[:4000]
+    sec = _section_roundtrip(skew)
+    assert int(sec[0]) == entropy.ENTROPY_KIND_RANS
+    assert sec.size < skew.size  # genuinely smaller on compressible input
+    rand = RNG.integers(0, 2**32, size=4000, dtype=np.uint64).astype(np.uint32)
+    sec = _section_roundtrip(rand)
+    assert int(sec[0]) == 0  # raw fallback: flag word + verbatim words
+    assert sec.size == rand.size + 1  # bounded inflation: exactly one word
+
+
+def test_section_chunking_covers_multi_chunk_streams():
+    """> CHUNK_BYTES of payload spans several vmapped chunks; the decoupled
+    offsets must splice the per-chunk lane streams back exactly."""
+    n = 3 * entropy.CHUNK_BYTES // 4 + 17  # 3+ chunks, ragged tail
+    raw = np.repeat(RNG.integers(0, 32, size=n // 3 + 1).astype(np.uint32), 3)[:n]
+    sec = _section_roundtrip(raw)
+    assert int(sec[2]) >= 3  # n_chunks recorded in the section header
+
+
+@pytest.mark.parametrize("cut", [1, 3, 50])
+def test_section_rejects_truncation(cut):
+    raw = np.repeat(RNG.integers(0, 8, size=500).astype(np.uint32), 8)[:4000]
+    sec = entropy.encode_section(raw)
+    assert int(sec[0]) == entropy.ENTROPY_KIND_RANS
+    with pytest.raises(ValueError):
+        entropy.decode_section(sec[:-cut], raw.size)
+
+
+def test_section_rejects_corrupt_table():
+    raw = np.repeat(RNG.integers(0, 8, size=500).astype(np.uint32), 8)[:4000]
+    sec = entropy.encode_section(raw).copy()
+    sec[3] = 0xFFFFFFFF  # first packed frequency pair: table sum breaks
+    with pytest.raises(ValueError, match="frequency"):
+        entropy.decode_section(sec, raw.size)
+
+
+# ---------------------------------------------------------- blob roundtrip --
+def test_blob_roundtrip_and_validation():
+    meta = RNG.integers(0, 2**32, size=300, dtype=np.uint64).astype(np.uint32)
+    pay = np.repeat(RNG.integers(0, 64, size=400).astype(np.uint32), 4)[:1600]
+    blob = entropy.encode_blob(meta, pay)
+    m, p = entropy.decode_blob(blob, meta.size, pay.size)
+    np.testing.assert_array_equal(m, meta)
+    np.testing.assert_array_equal(p, pay)
+    with pytest.raises(ValueError):
+        entropy.decode_blob(blob[:-2], meta.size, pay.size)
+    bad = blob.copy()
+    bad[0] = 99  # unknown blob kind
+    with pytest.raises(ValueError, match="kind"):
+        entropy.decode_blob(bad, meta.size, pay.size)
+
+
+def test_blob_empty_sections():
+    blob = entropy.encode_blob(np.zeros(0, np.uint32), np.zeros(0, np.uint32))
+    m, p = entropy.decode_blob(blob, 0, 0)
+    assert m.size == 0 and p.size == 0
+
+
+# ------------------------------------------------------------- negotiation --
+WIRED = sorted(n for n, i in WIRE_CODEC_IDS.items() if i is not None)
+
+
+def test_jobspec_rejects_unknown_entropy_kind():
+    with pytest.raises(ValueError, match="entropy"):
+        cstream.JobSpec(entropy="huffman")
+
+
+def test_entropy_requires_egress_single_line():
+    with pytest.raises(cstream.NegotiationError, match="egress") as ei:
+        cstream.negotiate(cstream.JobSpec(codec="rle", entropy="rans"))
+    assert "\n" not in str(ei.value)
+
+
+@pytest.mark.parametrize("codec", WIRED[:3])
+def test_plan_carries_entropy_capability_and_signature(codec):
+    spec = cstream.JobSpec(codec=codec, egress=True, entropy="rans")
+    plan = cstream.negotiate(spec)
+    cap = plan.entropy
+    assert cap is not None and cap.kind == "rans"
+    assert cap.lanes == entropy.N_LANES and cap.prob_bits == entropy.PROB_BITS
+    # entropy participates in gang-compatibility signatures
+    off = cstream.negotiate(cstream.JobSpec(codec=codec, egress=True))
+    assert plan.signature != off.signature
+    assert off.entropy is None
+
+
+def test_capability_advertises_entropy_only_for_wire_codecs():
+    for cap in cstream.capabilities():
+        if WIRE_CODEC_IDS.get(cap.name) is not None:
+            assert cap.entropy == ("rans",)
+        else:
+            assert cap.entropy == ()
+
+
+# ----------------------------------------------------------- end to end ----
+def test_open_with_entropy_reduces_skewed_wire_bytes():
+    """Full-stack check: a JobSpec with entropy='rans' produces a smaller
+    frame than the same job without it on run-heavy data, and the frame
+    survives serialize -> parse -> decode."""
+    vals = np.repeat(
+        RNG.integers(0, 64, size=1500).astype(np.uint32), 4
+    )[:6000]
+    plain_spec = cstream.JobSpec(codec="rle", egress=True, lanes=4,
+                                 micro_batch_bytes=2048)
+    with cstream.open(plain_spec) as h:
+        plain = h.push(vals).flush()
+    with cstream.open(plain_spec.replace(entropy="rans")) as h:
+        coded = h.push(vals).flush()
+        rep = h.report()
+    assert coded.frame.wire_bytes < plain.frame.wire_bytes
+    back = bits.Frame.from_bytes(coded.frame.to_bytes())
+    np.testing.assert_array_equal(back.payload, plain.frame.payload)
+    assert rep.fidelity.bit_exact

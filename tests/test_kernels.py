@@ -103,6 +103,73 @@ def test_pack_meta7_rows_concatenate_when_aligned():
     np.testing.assert_array_equal(rows.reshape(-1), bits._pack_bitlens(bl.ravel()))
 
 
+# --------------------------------------------------------------------- rans --
+def _rans_chunk(rng, t_rows, fill, skew=1.6):
+    """One chunk's (T, 8) byte grid + mask with `fill` valid bytes, plus a
+    quantized frequency table built the way the production stage builds it."""
+    from repro.core import entropy
+
+    syms = np.zeros((t_rows, entropy.N_LANES), np.uint32)
+    mask = np.zeros((t_rows, entropy.N_LANES), bool)
+    flat = (rng.zipf(skew, size=fill).astype(np.int64) - 1).clip(0, 255)
+    syms.reshape(-1)[:fill] = flat
+    mask.reshape(-1)[:fill] = True
+    hist = np.bincount(flat, minlength=256) if fill else np.zeros(256, np.int64)
+    freqs = np.asarray(entropy.quantize_freqs(jnp.asarray(hist, jnp.int32)))
+    return jnp.asarray(syms), jnp.asarray(mask), jnp.asarray(freqs)
+
+
+@pytest.mark.parametrize(
+    "t_rows,fill",
+    [(0, 0), (1, 1), (1, 8), (16, 100), (64, 512), (512, 4096), (512, 4001)],
+)
+def test_rans_encode_kernel_matches_ref(t_rows, fill):
+    syms, mask, freqs = _rans_chunk(np.random.default_rng(fill + 1), t_rows, fill)
+    st_k, fl_k, va_k = ops.rans_encode(syms, mask, freqs)
+    st_r, fl_r, va_r = ref.rans_encode_ref(syms, mask, freqs)
+    np.testing.assert_array_equal(np.asarray(st_k), np.asarray(st_r))
+    np.testing.assert_array_equal(np.asarray(fl_k), np.asarray(fl_r))
+    np.testing.assert_array_equal(np.asarray(va_k), np.asarray(va_r))
+
+
+@pytest.mark.parametrize("t_rows,fill", [(1, 8), (16, 100), (512, 4096)])
+def test_rans_decode_kernel_matches_ref_and_inverts_encode(t_rows, fill):
+    """Kernel decode == oracle decode == the original bytes, driven by the
+    decoupled offset stream built from the encoder's emission flags."""
+    syms, mask, freqs = _rans_chunk(np.random.default_rng(fill + 7), t_rows, fill)
+    states, flags, vals = ref.rans_encode_ref(syms, mask, freqs)
+    flags_n = np.asarray(flags)
+    counts = flags_n.sum(axis=0)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
+    # scatter each lane's emitted u16s at offset + per-row emission rank
+    rank = np.cumsum(flags_n, axis=0) - flags_n
+    stream = np.zeros(max(int(counts.sum()), 1), np.uint32)
+    pos = offsets[None, :] + rank
+    stream[pos[flags_n > 0]] = np.asarray(vals)[flags_n > 0]
+    got_k = ops.rans_decode(
+        jnp.asarray(stream), freqs, states, jnp.asarray(offsets), mask
+    )
+    got_r = ref.rans_decode_ref(
+        jnp.asarray(stream), freqs, states, jnp.asarray(offsets), mask
+    )
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(got_r))
+    np.testing.assert_array_equal(np.asarray(got_k)[np.asarray(mask)],
+                                  np.asarray(syms)[np.asarray(mask)])
+
+
+def test_rans_constant_stream_emits_nothing():
+    """A single-symbol chunk gets f=4096 and never renorms: the whole chunk
+    costs only its states (the table amortizes across the section)."""
+    from repro.core import entropy
+
+    syms = jnp.zeros((64, entropy.N_LANES), jnp.uint32)
+    mask = jnp.ones((64, entropy.N_LANES), bool)
+    hist = jnp.zeros(256, jnp.int32).at[0].set(512)
+    freqs = entropy.quantize_freqs(hist)
+    _, flags, _ = ops.rans_encode(syms, mask, freqs)
+    assert int(jnp.asarray(flags).sum()) == 0
+
+
 # ---------------------------------------------------------------- delta_nuq --
 @pytest.mark.parametrize("s,t,sublanes,t_tile", [(8, 128, 8, 128), (16, 256, 8, 128), (32, 512, 16, 256)])
 @pytest.mark.parametrize("qbits", [4, 8])

@@ -164,6 +164,67 @@ else:  # keep the skip visible in environments without hypothesis
         pass
 
 
+# -------------------------------------------------------- entropy stage grid --
+# DESIGN.md §15: the optional rANS stage recodes the serialized sections
+# only — decode output must be bit-identical to the entropy-off frame for
+# every codec and length corner, and entropy-off frames must keep the
+# pre-entropy wire format exactly (version word 1, no feature bits).
+from repro import cstream
+
+WIRE_CODECS = [c for c in CODECS if WIRE_CODEC_IDS.get(c) is not None]
+
+#: (length index, distribution, seed) — empty, single tuple, sub-alignment,
+#: multi-block ragged tail; runs/uniform pick compressible + incompressible
+ENTROPY_CORNERS = [
+    (0, "walk", 21),
+    (1, "runs", 22),
+    (2, "runs", 23),
+    (6, "uniform16", 24),
+]
+
+
+def _spec_for(codec: str, entropy=None) -> "cstream.JobSpec":
+    cfg = EngineConfig(
+        codec=codec,
+        codec_kwargs=dict(CODEC_KWARGS.get(codec, {})),
+        micro_batch_bytes=2048,
+        lanes=4,
+        calibrate=False,
+    )
+    return cstream.JobSpec.from_engine_config(cfg).replace(
+        egress=True, entropy=entropy
+    )
+
+
+@pytest.mark.parametrize("codec", WIRE_CODECS)
+def test_entropy_grid_decode_identity_and_off_bytes(codec):
+    eng = engine_for(codec)
+    for length_idx, dist, seed in ENTROPY_CORNERS:
+        n = lengths_for(codec)[length_idx]
+        values = gen_values(dist, n, seed)
+        with cstream.open(_spec_for(codec)) as h:
+            plain = h.push(values).flush()
+        with cstream.open(_spec_for(codec, entropy="rans")) as h:
+            coded = h.push(values).flush()
+        plain_buf = plain.frame.to_bytes()
+        # entropy-off keeps the pre-entropy wire format bit-for-bit
+        assert int(np.frombuffer(plain_buf[:8], "<u4")[1]) == bits.FRAME_VERSION
+        buf = coded.frame.to_bytes()
+        assert (
+            int(np.frombuffer(buf[:8], "<u4")[1])
+            == bits.FRAME_VERSION | bits.FEATURE_ENTROPY
+        )
+        # the entropy frame parses back to the SAME raw sections...
+        back = bits.Frame.from_bytes(buf)
+        np.testing.assert_array_equal(back.payload, plain.frame.payload)
+        np.testing.assert_array_equal(back.bitlen, plain.frame.bitlen)
+        # ...so the decode executor reconstructs identical tuples
+        np.testing.assert_array_equal(
+            eng.decompress(back),
+            eng.decompress(bits.Frame.from_bytes(plain_buf)),
+        )
+
+
 # ------------------------------------------------------ fleet gang property --
 # DESIGN.md §14: sharding a gang wave over a device mesh must change NOTHING
 # observable — every session's FlushRecord keys and egress frame bytes stay
