@@ -34,6 +34,7 @@ MODULES = [
     "bench_egress",            # beyond-paper: frame compaction + D2H accounting
     "bench_rans",              # beyond-paper: interleaved rANS entropy stage
     "bench_fleet",             # beyond-paper: multi-device sharded gang waves
+    "bench_adaptive",          # beyond-paper: adaptive tier controller sweep
     "bench_roofline",          # dry-run aggregation
 ]
 
@@ -49,6 +50,7 @@ SMOKE_MODULES = [
     "bench_roundtrip",
     "bench_egress",
     "bench_rans",
+    "bench_adaptive",
 ]
 
 

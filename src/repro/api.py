@@ -48,6 +48,13 @@ from repro.core.algorithms import (
     make_codec,
 )
 from repro.core.calibration import calibrated_kwargs
+from repro.core.controller import (
+    AdaptiveController,
+    ModeledLink,
+    ScriptedController,
+    TierSpec,
+    resolve_ladder,
+)
 from repro.core.energy import PROFILES, HardwareProfile, edge_energy_j
 from repro.core.pipeline import (
     CompressionPipeline,
@@ -90,6 +97,10 @@ __all__ = [
     "capabilities",
     "open",
     "gang_compress",
+    "AdaptiveController",
+    "ModeledLink",
+    "ScriptedController",
+    "TierSpec",
     "StreamHandle",
     "Dispatcher",
     "JobReport",
@@ -160,6 +171,12 @@ class JobSpec:
     #: (None = off, "rans" = interleaved rANS, DESIGN.md §15); requires
     #: egress — the stage exists on the wire, not in the decode executor
     entropy: Optional[str] = None
+    #: closed-loop adaptive tier selection (DESIGN.md §16): the session's
+    #: controller re-decides {bypass, cheap, heavy} per flush; `codec` names
+    #: the CHEAP tier (must be lossless with a wire id), the bypass tier is
+    #: raw32, the heavy tier is delta_leb128 + rANS. Requires egress=True;
+    #: the controller owns the entropy stage, so `entropy` must stay None
+    adaptive: bool = False
     #: this job must be gang-dispatchable (Dispatcher(gang=True))
     gang: bool = False
     #: arrival rate for the end-to-end latency model (paper §4.1)
@@ -193,6 +210,8 @@ class JobSpec:
             raise _err(f"JobSpec.devices must be an int >= 0 (0 = dispatcher-local), got {self.devices!r}")
         if self.entropy not in (None, "rans"):
             raise _err(f"JobSpec.entropy must be None or 'rans', got {self.entropy!r}")
+        if not isinstance(self.adaptive, bool):
+            raise _err(f"JobSpec.adaptive must be a bool, got {self.adaptive!r}")
 
     # ------------------------------------------------------------ accessors
     @property
@@ -239,6 +258,7 @@ class JobSpec:
             "max_abs_error": self.max_abs_error,
             "strict_masking": self.strict_masking,
             "entropy": self.entropy,
+            "adaptive": self.adaptive,
             "gang": self.gang,
             "arrival_rate_tps": self.arrival_rate_tps,
             "devices": self.devices,
@@ -425,6 +445,10 @@ class Plan:
     fleet: Optional[FleetPlan] = None
     #: resolved stage-2 entropy coder (spec.entropy="rans"); None = off
     entropy: Optional[EntropyCapability] = None
+    #: adaptive tier ladder (spec.adaptive=True): one (TierSpec, Plan) per
+    #: rung, every rung individually negotiated and capacity-matched; the
+    #: session's controller switches between them at flush boundaries
+    tiers: Optional[Tuple[Tuple[TierSpec, "Plan"], ...]] = None
 
     @property
     def block_tuples(self) -> int:
@@ -542,6 +566,7 @@ def negotiate(spec: JobSpec) -> Plan:
             ) from exc
         signature = ("ungangable", spec.codec, id(codec))
         notes.append(f"gang disabled for {spec.codec!r}: {exc}")
+    tiers = _negotiate_tiers(spec, capacity) if spec.adaptive else None
     return Plan(
         spec=spec,
         codec=codec,
@@ -563,7 +588,59 @@ def negotiate(spec: JobSpec) -> Plan:
             if spec.entropy == "rans"
             else None
         ),
+        tiers=tiers,
     )
+
+
+def _negotiate_tiers(
+    spec: JobSpec, capacity: int
+) -> Tuple[Tuple[TierSpec, Plan], ...]:
+    """Resolve and negotiate the adaptive tier ladder (spec.adaptive=True).
+
+    The spec's codec is the CHEAP rung; bypass is raw32 and heavy is
+    delta_leb128 + rANS (`core.controller.resolve_ladder` validates every
+    rung against the registry: lossless, wire id). Each rung negotiates as
+    its own non-adaptive spec, and every rung must resolve the SAME flush
+    capacity — tier switches land at flush boundaries, so the batch
+    geometry cannot move with the rung."""
+    if not spec.egress:
+        raise _err(
+            "JobSpec.adaptive=True switches wire codecs at flush boundaries, "
+            "which needs self-describing egress frames; set egress=True"
+        )
+    if spec.entropy is not None:
+        raise _err(
+            f"JobSpec.adaptive=True owns the entropy stage (the heavy tier "
+            f"applies rans per flush); drop entropy={spec.entropy!r}"
+        )
+    if spec.devices >= 1:
+        raise _err(
+            f"JobSpec.adaptive=True cannot shard over a device mesh yet "
+            f"(fleet wave replay assumes a stable dispatch signature); drop "
+            f"devices={spec.devices}"
+        )
+    try:
+        ladder = resolve_ladder(cheap=spec.codec)
+    except ValueError as exc:
+        raise _err(f"adaptive ladder: {exc}") from exc
+    out: List[Tuple[TierSpec, Plan]] = []
+    for tier in ladder:
+        tier_spec = spec.replace(
+            codec=tier.codec,
+            params=(spec.params if tier.codec == spec.codec else tier.kwargs_dict),
+            entropy=(tier.entropy if tier.entropy != "none" else None),
+            adaptive=False,
+        )
+        tier_plan = negotiate(tier_spec)
+        if tier_plan.capacity != capacity:
+            raise _err(
+                f"adaptive tier {tier.name!r} ({tier.codec!r}) resolves flush "
+                f"capacity {tier_plan.capacity} != the session's {capacity}; "
+                "set JobSpec.flush_tuples to a common multiple of every "
+                "tier's block alignment"
+            )
+        out.append((tier, tier_plan))
+    return tuple(out)
 
 
 def negotiate_gang(specs: Sequence[JobSpec]) -> List[Plan]:
@@ -877,6 +954,7 @@ class StreamHandle:
         plan: Plan,
         session: Optional[StreamSession] = None,
         dispatcher: Optional["Dispatcher"] = None,
+        controller: Any = None,
     ):
         self.spec = spec
         self.plan = plan
@@ -884,14 +962,49 @@ class StreamHandle:
         self._dispatcher = dispatcher
         self._closed = False
         if session is None:
-            self._pipe = CompressionPipeline(spec, codec=plan.codec, plan=plan.execution)
-            self._decomp: Optional[DecompressionPipeline] = None
             self._buffer: List[np.ndarray] = []
             self._segments: List[CompressResult] = []
             self._roundtrips: List[RoundtripResult] = []
+            self._decomp: Optional[DecompressionPipeline] = None
+            if spec.adaptive:
+                # offline adaptive: each flush is an independent segment, so
+                # the controller decides a rung per segment and the segment
+                # compresses/decodes under that rung's own negotiated plan
+                assert plan.tiers is not None  # negotiate() built the ladder
+                self._tier_plans: Dict[str, Tuple[TierSpec, Plan]] = {
+                    t.name: (t, p) for t, p in plan.tiers
+                }
+                self._controller = controller or AdaptiveController(
+                    ladder=tuple(t for t, _ in plan.tiers), profile=spec.profile
+                )
+                self._tier_pipes: Dict[str, CompressionPipeline] = {}
+                self._tier_decomps: Dict[str, DecompressionPipeline] = {}
+                self.tier_log: List[str] = []  # rung used per segment
+                self._pipe = self._tier_pipe("cheap")
+            else:
+                self._controller = None
+                self._pipe = CompressionPipeline(
+                    spec, codec=plan.codec, plan=plan.execution
+                )
         else:
             self._staged_values: List[np.ndarray] = []
             self._staged_ts: List[np.ndarray] = []
+
+    def _tier_pipe(self, name: str) -> CompressionPipeline:
+        pipe = self._tier_pipes.get(name)
+        if pipe is None:
+            _, p = self._tier_plans[name]
+            pipe = CompressionPipeline(p.spec, codec=p.codec, plan=p.execution)
+            self._tier_pipes[name] = pipe
+        return pipe
+
+    def _tier_decompressor(self, name: str) -> DecompressionPipeline:
+        decomp = self._tier_decomps.get(name)
+        if decomp is None:
+            _, p = self._tier_plans[name]
+            decomp = DecompressionPipeline(p.spec, codec=p.codec, plan=p.execution)
+            self._tier_decomps[name] = decomp
+        return decomp
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -965,6 +1078,26 @@ class StreamHandle:
                 return None
             values = np.concatenate(self._buffer)
             self._buffer.clear()
+            if self._controller is not None:
+                # adaptive: the controller picks this segment's rung BEFORE
+                # compression (decisions are for the next batch, made from
+                # previous outcomes), then observes the realized payload
+                tier = self._controller.decide()
+                tspec = self._tier_plans[tier.name][1].spec
+                rt = run_roundtrip(
+                    self._tier_pipe(tier.name),
+                    self._tier_decompressor(tier.name),
+                    tspec, values,
+                    arrival_rate_tps=self.spec.arrival_rate_tps,
+                )
+                self._controller.observe(
+                    tier.name, rt.compress.n_tuples, int(rt.compress.total_bits)
+                )
+                self.tier_log.append(tier.name)
+                self._pipe = self._tier_pipes[tier.name]
+                self._roundtrips.append(rt)
+                self._segments.append(rt.compress)
+                return rt.compress
             emit = self.spec.egress
             if emit:
                 rt = run_roundtrip(
@@ -1004,7 +1137,9 @@ class StreamHandle:
             ]
         if not self._session.flushes:
             return []
-        return [self._session.egress_frame()]
+        # sealed adaptive tier segments + the open segment; static sessions
+        # yield exactly their one closing frame
+        return self._session.egress_frames()
 
     # ---------------------------------------------------------------- report
     def report(self) -> JobReport:
@@ -1023,7 +1158,7 @@ class StreamHandle:
                 makespan_s=server_rep.makespan_s,
                 energy_j=sess.energy_j,
                 latency_s=sess.mean_latency_s,
-                n_frames=1 if (self.spec.egress and self._session.flushes) else 0,
+                n_frames=self._session.n_segments if self.spec.egress else 0,
                 fidelity=sess.fidelity,
                 wire_bytes=sess.wire_bytes,
                 session=sess,
@@ -1098,14 +1233,17 @@ def open(
     sample: Optional[np.ndarray] = None,
     dispatcher: Optional["Dispatcher"] = None,
     topic: Optional[str] = None,
+    controller: Any = None,
 ) -> StreamHandle:
     """Negotiate a JobSpec and open the StreamHandle that drives it.
 
     `sample` bakes calibration into the spec first (`JobSpec.calibrated`).
     With `dispatcher` the handle is a server session on that dispatcher —
-    sugar for `dispatcher.open(spec, topic, sample)`."""
+    sugar for `dispatcher.open(spec, topic, sample)`. `controller` overrides
+    the adaptive tier controller (spec.adaptive=True only; default is an
+    `AdaptiveController` over the negotiated ladder)."""
     if dispatcher is not None:
-        return dispatcher.open(spec, topic=topic, sample=sample)
+        return dispatcher.open(spec, topic=topic, sample=sample, controller=controller)
     if sample is not None:
         spec = spec.calibrated(sample)
     plan = negotiate(spec)
@@ -1115,7 +1253,12 @@ def open(
             "Dispatcher(gang=True).open(spec) (or gang_compress for offline "
             "same-geometry streams)"
         )
-    return StreamHandle(spec, plan)
+    if controller is not None and not spec.adaptive:
+        raise _err(
+            "a tier controller only applies to adaptive jobs; set "
+            "JobSpec.adaptive=True (or drop controller)"
+        )
+    return StreamHandle(spec, plan, controller=controller)
 
 
 def gang_compress(
@@ -1216,11 +1359,14 @@ class Dispatcher:
         spec: JobSpec,
         topic: Optional[str] = None,
         sample: Optional[np.ndarray] = None,
+        controller: Any = None,
     ) -> StreamHandle:
-        """Admit a session for this spec and return its StreamHandle."""
+        """Admit a session for this spec and return its StreamHandle.
+        `controller` overrides the adaptive tier controller (adaptive
+        specs only)."""
         if sample is not None:
             spec = spec.calibrated(sample)
-        return self._open_negotiated(spec, negotiate(spec), topic)
+        return self._open_negotiated(spec, negotiate(spec), topic, controller)
 
     def open_many(
         self,
@@ -1258,8 +1404,17 @@ class Dispatcher:
         return [self._open_negotiated(spec, plan, t) for t in topics]
 
     def _open_negotiated(
-        self, spec: JobSpec, plan: Plan, topic: Optional[str]
+        self,
+        spec: JobSpec,
+        plan: Plan,
+        topic: Optional[str],
+        controller: Any = None,
     ) -> StreamHandle:
+        if controller is not None and not spec.adaptive:
+            raise _err(
+                "a tier controller only applies to adaptive jobs; set "
+                "JobSpec.adaptive=True (or drop controller)"
+            )
         if spec.gang and not self._core.gang:
             raise _err(
                 "spec.gang=True but this dispatcher was built with gang=False; "
@@ -1278,14 +1433,33 @@ class Dispatcher:
             while topic in self._core.sessions:  # user-supplied names may clash
                 n += 1
                 topic = f"job-{n}"
+        admit_spec, admit_codec, admit_plan = spec, plan.codec, plan.execution
+        tiers = active_tier = None
+        if spec.adaptive:
+            # the controller picks the starting rung; the session admits ON
+            # that rung's negotiated plan, carrying the whole ladder for
+            # flush-boundary switches (runtime/server.py, DESIGN.md §16)
+            assert plan.tiers is not None  # negotiate() built the ladder
+            if controller is None:
+                controller = AdaptiveController(
+                    ladder=tuple(t for t, _ in plan.tiers), profile=spec.profile
+                )
+            by_name = {t.name: p for t, p in plan.tiers}
+            active_tier = controller.decide().name
+            start = by_name[active_tier]
+            admit_spec, admit_codec, admit_plan = start.spec, start.codec, start.execution
+            tiers = {name: (p.spec, p.codec, p.execution) for name, p in by_name.items()}
         session = self._core.admit(
             topic,
-            spec,
+            admit_spec,
             flush_tuples=spec.flush_tuples,
             flush_timeout_s=spec.flush_timeout_s,
             egress=spec.egress,
-            codec=plan.codec,
-            plan=plan.execution,
+            codec=admit_codec,
+            plan=admit_plan,
+            controller=controller if spec.adaptive else None,
+            tiers=tiers,
+            active_tier=active_tier,
         )
         handle = StreamHandle(spec, plan, session=session, dispatcher=self)
         self._handles[topic] = handle

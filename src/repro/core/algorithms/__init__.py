@@ -16,6 +16,7 @@ from repro.core.algorithms import dictionary as _dictionary  # noqa: F401
 from repro.core.algorithms import elias as _elias  # noqa: F401
 from repro.core.algorithms import leb128 as _leb128  # noqa: F401
 from repro.core.algorithms import pla as _pla  # noqa: F401
+from repro.core.algorithms import raw as _raw  # noqa: F401
 from repro.core.algorithms import rle as _rle  # noqa: F401
 
 #: paper Table 1 names -> registry names
@@ -45,6 +46,9 @@ WIRE_CODEC_IDS = {
     "tdic32": 8,
     "rle": 9,
     "pla": 10,
+    # extensions past paper Table 1 (paper_name is None in the capability
+    # record): raw32 is the adaptive controller's bypass tier
+    "raw32": 11,
 }
 
 #: reverse map: frame codec id -> registry name

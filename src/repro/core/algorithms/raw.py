@@ -1,0 +1,36 @@
+"""Raw32: the bypass codec (no compression).
+
+The adaptive selective-compression controller (core/controller.py,
+DESIGN.md §16) needs a tier that genuinely does NOT compress: under a fast
+egress link, or on incompressible payloads, spending cycles on compression
+loses on the throughput×energy frontier (Melissaris et al., PAPERS.md).
+Raw32 emits every tuple verbatim as a 32-bit symbol, so the wire payload is
+the input stream bit-for-bit (plus frame header/metadata) and the encode
+kernel is a copy — the cheapest legal member of the tier ladder, and an
+honest ratio-1.0 baseline for every bench.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms.base import Codec, CodecMeta, Encoded, register
+
+
+@register("raw32")
+class Raw32(Codec):
+    """Pass-through: 32-bit symbol per tuple, zero transform work."""
+
+    meta = CodecMeta(
+        "raw32", lossy=False, stateful=False, state_kind="none", aligned=True
+    )
+
+    def encode(self, state: Any, x: jax.Array) -> Tuple[Any, Encoded]:
+        codes = jnp.stack([x, jnp.zeros_like(x)], axis=-1)
+        blen = jnp.full(x.shape, 32, jnp.int32)
+        return state, Encoded(codes, blen)
+
+    def decode(self, state: Any, enc: Encoded) -> Tuple[Any, jax.Array]:
+        return state, enc.codes[..., 0]

@@ -14,7 +14,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.engine import CStreamEngine
+# NOTE: repro.core.engine is imported lazily inside `evaluate` — the engine
+# module is the legacy shim over repro.api, and api imports the adaptive
+# controller, which imports this planner; a module-level engine import here
+# would close that cycle.
 from repro.core.strategies import (
     EngineConfig,
     ExecutionStrategy,
@@ -68,6 +71,8 @@ DEFAULT_CANDIDATES: List[Dict] = [
 def evaluate(
     cfg: EngineConfig, stream: np.ndarray, arrival_rate_tps: float, max_blocks: int = 16
 ) -> SolutionPoint:
+    from repro.core.engine import CStreamEngine
+
     engine = CStreamEngine(cfg, sample=stream[: 1 << 14])
     res = engine.compress(stream, arrival_rate_tps=arrival_rate_tps, max_blocks=max_blocks)
     err = engine.roundtrip_nrmse(stream[: engine._block_tuples() * 4]) if engine.codec.meta.lossy else 0.0
@@ -109,12 +114,98 @@ def enumerate_solutions(
     return points
 
 
+def _config_key(cfg: EngineConfig) -> Tuple:
+    """Canonical identity of a candidate config, independent of enumeration
+    order: codec name, sorted resolved params, and the strategy knobs. The
+    stable tie-break key for `choose` — and the identity `incumbent`
+    matching uses, so hysteresis survives re-enumeration."""
+    return (
+        cfg.codec,
+        tuple(sorted((str(k), str(v)) for k, v in cfg.codec_kwargs.items())),
+        str(cfg.execution.value),
+        str(cfg.state.value),
+        str(cfg.scheduling.value),
+        cfg.lanes,
+        cfg.micro_batch_bytes,
+    )
+
+
+def _score(p: SolutionPoint, priority: Tuple[str, ...]) -> Tuple[float, ...]:
+    """Lexicographic score tuple (higher is better). A metric name prefixed
+    with '-' is minimized ('-energy_j_per_mb' prefers LOWER energy) — the
+    adaptive controller ranks tiers by end-to-end throughput first and
+    energy second, both through this one scorer."""
+    out = []
+    for k in priority:
+        if k.startswith("-"):
+            out.append(-float(getattr(p, k[1:])))
+        else:
+            out.append(float(getattr(p, k)))
+    return tuple(out)
+
+
 def choose(
     points: List[SolutionPoint],
     constraints: Constraints,
     priority: Tuple[str, ...] = ("ratio", "throughput_mbps"),
+    incumbent: Optional[SolutionPoint] = None,
+    hysteresis: float = 0.0,
 ) -> Optional[SolutionPoint]:
+    """Pick the best feasible point by lexicographic priority.
+
+    Deterministic under ties: equally-scored points resolve by the canonical
+    config key, never by enumeration order — the controller re-invokes this
+    every flush, and an order-dependent pick would make tier decisions
+    depend on how candidates happened to be listed.
+
+    `incumbent` + `hysteresis` damp flapping for closed-loop callers: the
+    incumbent (matched by config identity among the feasible points) is kept
+    unless the challenger improves the FIRST priority metric by more than
+    `hysteresis` (relative). A challenger that merely ties-and-wins-on-key,
+    or wins by less than the margin, does not unseat the incumbent."""
     feasible = [p for p in points if p.feasible(constraints)]
     if not feasible:
         return None
-    return max(feasible, key=lambda p: tuple(getattr(p, k) for k in priority))
+    best = max(
+        feasible,
+        key=lambda p: (_score(p, priority), tuple(map(str, _config_key(p.config)))),
+    )
+    if incumbent is not None and hysteresis > 0.0:
+        inc_key = _config_key(incumbent.config)
+        held = [p for p in feasible if _config_key(p.config) == inc_key]
+        if held and _config_key(best.config) != inc_key:
+            inc = held[0]
+            b0, i0 = _score(best, priority)[0], _score(inc, priority)[0]
+            # relative improvement on the lead metric; guard the sign so a
+            # minimized ('-'-prefixed) lead metric uses the same margin rule
+            if b0 <= i0 + abs(i0) * hysteresis:
+                return inc
+    return best
+
+
+#: the adaptive tier ladder's ranking (DESIGN.md §16): end-to-end modeled
+#: throughput first, then lower energy — ratio is already priced into
+#: throughput via transmit time, so it is not a separate objective here.
+TIER_PRIORITY: Tuple[str, ...] = ("throughput_mbps", "-energy_j_per_mb")
+
+#: tier points are modeled (lossless ladder, no budgets) — always feasible.
+_TIER_CONSTRAINTS = Constraints(min_ratio=0.0, max_nrmse=1.0)
+
+
+def choose_tier(
+    points: List[SolutionPoint],
+    incumbent: Optional[SolutionPoint] = None,
+    hysteresis: float = 0.1,
+) -> Optional[SolutionPoint]:
+    """Tier-ladder policy: `choose` specialized for the adaptive controller.
+
+    Ranks the ladder's modeled points by TIER_PRIORITY with the incumbent
+    hysteresis margin applied — called once per flush, so determinism and
+    anti-flap both live here rather than in the controller."""
+    return choose(
+        points,
+        _TIER_CONSTRAINTS,
+        priority=TIER_PRIORITY,
+        incumbent=incumbent,
+        hysteresis=hysteresis,
+    )

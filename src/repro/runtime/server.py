@@ -128,6 +128,9 @@ class SessionReport:
     fidelity: Optional[metrics.Fidelity] = None  # decoded-vs-fed contract check
     wire_bytes: Optional[int] = None  # serialized egress frame size
     decode_s: Optional[float] = None  # egress decode wall time
+    # adaptive sessions (DESIGN.md §16) only
+    tier_switches: int = 0  # tier changes applied at flush boundaries
+    tier_history: Tuple[str, ...] = ()  # tier that compressed each flush
 
 
 @dataclasses.dataclass
@@ -211,6 +214,9 @@ class StreamSession:
         plan: Optional[ExecutionPlan] = None,
         compact: bool = True,
         pipeline: Optional[CompressionPipeline] = None,
+        controller: Any = None,
+        tiers: Optional[Dict[str, tuple]] = None,
+        active_tier: Optional[str] = None,
     ):
         """`config` is any spec carrier with the EngineConfig attribute
         surface (EngineConfig or `repro.cstream.JobSpec`); a pre-negotiated
@@ -226,7 +232,17 @@ class StreamSession:
         dispatcher already runs every member through the signature owner's
         pipeline — sharing merely extends that to solo flushes), and the
         difference between admitting 10k sessions in seconds vs. compiling
-        10k identical flush kernels. Codec STATE stays per-session."""
+        10k identical flush kernels. Codec STATE stays per-session.
+
+        `controller` + `tiers` make the session ADAPTIVE (DESIGN.md §16):
+        `tiers` maps rung name -> (config, codec, plan) for each negotiated
+        tier; after every committed flush the controller observes the
+        outcome and decides the next flush's rung. Switches land only at
+        flush boundaries — the active segment seals into its own
+        self-describing frame, the new tier starts with fresh codec state,
+        and the dispatch signature re-registers with the server so gang
+        waves regroup. Every rung must share the session's flush capacity
+        (negotiation enforces it; asserted here)."""
         self.topic = topic
         self.config = config
         self.pipeline = (
@@ -269,10 +285,47 @@ class StreamSession:
         self._egress_values: List[np.ndarray] = []
         self._egress_cache: Optional[tuple] = None  # (n_blocks, fidelity triple)
         self._decompressor: Optional[DecompressionPipeline] = None
-        # compile the flush kernel up front so per-flush timings are compute,
-        # not compilation (throwaway state: warmup must not advance the
-        # codec). Memoized on the shared pipeline: sessions admitted onto a
-        # sibling's pipeline find their kernel already compiled and warmed.
+        # ---- adaptive tier state (controller + tiers; DESIGN.md §16) ------
+        #: the controller observing flush outcomes and picking rungs; None
+        #: for ordinary (static) sessions
+        self.controller = controller
+        #: rung name -> (config, codec, plan); every rung pre-negotiated
+        self._tiers: Dict[str, tuple] = dict(tiers or {})
+        #: rung name -> lazily-built CompressionPipeline (fresh state per
+        #: switch; the kernel compile is shared across return visits)
+        self._tier_pipelines: Dict[str, CompressionPipeline] = {}
+        self._tier_decomp: Dict[str, DecompressionPipeline] = {}
+        self.active_tier: Optional[str] = active_tier
+        #: rung decided for the NEXT flush while earlier snapshots are still
+        #: uncommitted (gang waves in flight) — applied at the next flush()
+        #: once the session has nothing outstanding
+        self._pending_tier: Optional[str] = None
+        self._inflight = 0  # enqueued-but-uncommitted flush snapshots
+        #: sealed closed segments: (frame, fed_values, tier_name)
+        self._sealed: List[tuple] = []
+        self.tier_switches = 0
+        #: tier that compressed each flush, parallel to `self.flushes`
+        self.tier_history: List[str] = []
+        #: server hook: called as listener(self, old_signature) after a tier
+        #: switch so the gang dispatcher registers the new signature
+        self.signature_listener = None
+        if self.controller is not None:
+            if active_tier is None or active_tier not in self._tiers:
+                raise ValueError(
+                    f"adaptive session {topic!r} needs active_tier naming one "
+                    f"of its tiers, got {active_tier!r}"
+                )
+            if self._tiers:
+                self._tier_pipelines[active_tier] = self.pipeline
+        self._warm()
+
+    def _warm(self) -> None:
+        """Compile the flush kernel up front so per-flush timings are
+        compute, not compilation (throwaway state: warmup must not advance
+        the codec). Memoized on the shared pipeline: sessions admitted onto
+        a sibling's pipeline find their kernel already compiled and warmed —
+        and a tier switching BACK to a visited rung finds its pipeline
+        warm."""
         warm_key = (
             "solo_meta7" if (self.egress and self._meta_packed) else "solo",
             (self.lanes, self.capacity // self.lanes),
@@ -284,6 +337,68 @@ class StreamSession:
                 self._flush_step_fn()(self.pipeline.init_state(), zeros, mask)
             )
             self.pipeline._warmed.add(warm_key)
+
+    # ------------------------------------------------------- adaptive tiers
+    def _seal_segment(self) -> None:
+        """Close the active tier's accumulated blocks into one
+        self-describing frame (fresh codec state follows, so stateful
+        decode replays each segment independently)."""
+        if not self.egress or not self._egress_blocks:
+            return
+        frame = self.egress_frame()
+        fed = (
+            np.concatenate(self._egress_values)
+            if self._egress_values
+            else np.zeros(0, np.uint32)
+        )
+        self._sealed.append((frame, fed, self.active_tier))
+        self._egress_blocks = []
+        self._egress_values = []
+        self._egress_cache = None
+
+    def _switch_tier(self, name: str) -> None:
+        """Swap the session onto another rung AT a flush boundary: seal the
+        open segment, install the rung's pipeline with fresh codec state,
+        and re-register the dispatch signature so gang waves regroup."""
+        if name == self.active_tier:
+            return
+        tier_cfg, tier_codec, tier_plan = self._tiers[name]
+        self._seal_segment()
+        pipe = self._tier_pipelines.get(name)
+        if pipe is None:
+            pipe = CompressionPipeline(tier_cfg, codec=tier_codec, plan=tier_plan)
+            self._tier_pipelines[name] = pipe
+        old_sig = self._signature
+        self.config = tier_cfg
+        self.pipeline = pipe
+        tier_capacity = resolve_capacity(
+            pipe.plan.block_tuples, tier_cfg.lanes, pipe.align,
+            getattr(tier_cfg, "flush_tuples", 0),
+        )
+        assert tier_capacity == self.capacity, (
+            f"tier {name!r} capacity {tier_capacity} != session capacity "
+            f"{self.capacity} (negotiation must reject unequal ladders)"
+        )
+        self.state = pipe.init_state()
+        self._signature = None
+        self.active_tier = name
+        self.tier_switches += 1
+        self._warm()
+        if self.signature_listener is not None:
+            self.signature_listener(self, old_sig)
+
+    def egress_frames(self) -> List[bits.Frame]:
+        """All wire frames this session produced, in stream order: sealed
+        tier segments plus the open segment. Static sessions yield exactly
+        [egress_frame()]."""
+        frames = [f for f, _, _ in self._sealed]
+        if self._egress_blocks:
+            frames.append(self.egress_frame())
+        return frames
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._sealed) + (1 if self._egress_blocks else 0)
 
     def _flush_step_fn(self):
         """The jitted kernel one flush dispatch runs: the egress-compacted
@@ -405,6 +520,12 @@ class StreamSession:
         n = self._count
         if n == 0:
             return None
+        # a decided tier switch lands HERE, at the flush boundary: the
+        # buffered tuples have not been compressed yet, and nothing of this
+        # session is still in flight under the old signature
+        if self._pending_tier is not None and self._inflight == 0:
+            self._switch_tier(self._pending_tier)
+            self._pending_tier = None
         vals = np.full(self.capacity, self._values[max(n - 1, 0)], np.uint32)
         vals[:n] = self._values[:n]
         mask = np.zeros(self.capacity, bool)
@@ -420,6 +541,7 @@ class StreamSession:
         if self.flush_sink is not None:
             # gang mode: the snapshot queues for a gang dispatch; the record
             # lands in `self.flushes` when the server scatters results back
+            self._inflight += 1
             self.flush_sink(self, req)
             return None
         return self.compress_request(req)
@@ -492,6 +614,17 @@ class StreamSession:
             timeout=req.timeout,
         )
         self.flushes.append(rec)
+        self._inflight = max(0, self._inflight - 1)
+        if self.controller is not None:
+            # close the loop: feed the outcome back, decide the NEXT flush's
+            # rung. The switch itself is deferred to the next flush boundary
+            # (and further, while earlier snapshots are still in flight).
+            self.tier_history.append(self.active_tier or "")
+            self.controller.observe(self.active_tier, req.n, int(total_bits))
+            nxt = self.controller.decide()
+            # a later decision may revert an unapplied switch — the LAST
+            # decision before the boundary wins
+            self._pending_tier = nxt.name if nxt.name != self.active_tier else None
         return rec
 
     # ------------------------------------------------------------- egress
@@ -572,29 +705,64 @@ class StreamSession:
 
         Returns (Fidelity, wire_bytes, decode_wall_s): bit-exact for
         lossless codecs, within `Codec.error_bound` for bounded lossy ones,
-        measured max-abs/RMSE/NRMSE regardless. Memoized on the flush
-        count, so repeated `report()` calls between flushes do not re-frame
-        and re-decode the whole session history."""
-        if self._egress_cache is not None and self._egress_cache[0] == len(
-            self._egress_blocks
-        ):
+        measured max-abs/RMSE/NRMSE regardless. Memoized on the segment +
+        flush counts, so repeated `report()` calls between flushes do not
+        re-frame and re-decode the whole session history.
+
+        Adaptive sessions decode EVERY sealed tier segment with that tier's
+        decompressor plus the open segment, and check the contract over the
+        concatenation — a tier switch that corrupted either side of its
+        boundary fails here."""
+        cache_key = (len(self._sealed), len(self._egress_blocks))
+        if self._egress_cache is not None and self._egress_cache[0] == cache_key:
             return self._egress_cache[1]
-        frame = self.egress_frame()
-        if self._decompressor is None:
-            self._decompressor = DecompressionPipeline(
-                self.config, codec=self.pipeline.codec
+        decoded: List[np.ndarray] = []
+        feds: List[np.ndarray] = []
+        wire = 0
+        wall = 0.0
+        for frame, fed, tier in self._sealed:
+            decomp = self._tier_decomp.get(tier)
+            if decomp is None:
+                tier_cfg, tier_codec, _ = self._tiers[tier]
+                decomp = DecompressionPipeline(tier_cfg, codec=tier_codec)
+                self._tier_decomp[tier] = decomp
+            dec = decomp.decompress(frame)
+            decoded.append(dec.values)
+            feds.append(fed)
+            wire += frame.wire_bytes
+            wall += dec.wall_s
+        if self._egress_blocks:
+            frame = self.egress_frame()
+            if self.controller is not None:
+                # adaptive: the open segment's codec tracks the active tier
+                decomp = self._tier_decomp.get(self.active_tier or "")
+                if decomp is None:
+                    decomp = DecompressionPipeline(
+                        self.config, codec=self.pipeline.codec
+                    )
+                    self._tier_decomp[self.active_tier or ""] = decomp
+            else:
+                if self._decompressor is None:
+                    self._decompressor = DecompressionPipeline(
+                        self.config, codec=self.pipeline.codec
+                    )
+                decomp = self._decompressor
+            dec = decomp.decompress(frame)
+            decoded.append(dec.values)
+            feds.append(
+                np.concatenate(self._egress_values)
+                if self._egress_values
+                else np.zeros(0, np.uint32)
             )
-        dec = self._decompressor.decompress(frame)
-        fed = (
-            np.concatenate(self._egress_values)
-            if self._egress_values
-            else np.zeros(0, np.uint32)
-        )
+            wire += frame.wire_bytes
+            wall += dec.wall_s
+        fed_all = np.concatenate(feds) if feds else np.zeros(0, np.uint32)
+        dec_all = np.concatenate(decoded) if decoded else np.zeros(0, np.uint32)
         fid = metrics.fidelity(
-            fed, dec.values, bound=self.pipeline.codec.error_bound()
+            fed_all, dec_all, bound=self.pipeline.codec.error_bound()
         )
-        out = (fid, frame.wire_bytes, dec.wall_s)
-        self._egress_cache = (len(self._egress_blocks), out)
+        out = (fid, wire, wall)
+        self._egress_cache = (cache_key, out)
         return out
 
     # ------------------------------------------------------------- report
@@ -628,6 +796,8 @@ class StreamSession:
             fidelity=fid,
             wire_bytes=wire,
             decode_s=dec_s,
+            tier_switches=self.tier_switches,
+            tier_history=tuple(self.tier_history),
         )
 
 
@@ -681,6 +851,10 @@ class ServerCore:
         self._queues: Dict[tuple, List[Tuple[StreamSession, FlushRequest]]] = {}
         #: per-signature session whose (compiled) pipeline runs the gangs
         self._gang_owner: Dict[tuple, StreamSession] = {}
+        #: per-signature compiled pipeline, captured at registration — waves
+        #: must NOT read it through the owner session, whose `pipeline`
+        #: attribute moves when an adaptive owner switches tiers
+        self._gang_pipelines: Dict[tuple, CompressionPipeline] = {}
         self._gang_plans: Dict[tuple, GangPlan] = {}
         # ---- fleet dispatcher state (DESIGN.md §14) ------------------------
         #: `mesh` shards gang waves over a pure ("data",) device mesh: an int
@@ -862,9 +1036,8 @@ class ServerCore:
                 stats.sessions_dispatched += 1
                 stats.max_wave = max(stats.max_wave, 1)
             return
-        owner = self._gang_owner[sig]
-        pipe = owner.pipeline
-        lanes = owner.lanes
+        pipe = self._gang_pipelines[sig]
+        lanes = wave[0][0].lanes  # the signature fixes (lanes, per_lane)
         meta7 = any(s.egress and s._meta_packed for s, _ in wave)
         mesh = None
         members = wave
@@ -918,12 +1091,17 @@ class ServerCore:
         codec: Optional[Codec] = None,
         plan: Optional[ExecutionPlan] = None,
         compact: bool = True,
+        controller: Any = None,
+        tiers: Optional[Dict[str, tuple]] = None,
+        active_tier: Optional[str] = None,
     ) -> StreamSession:
         """Admit one session. `config` may be an `EngineConfig` or a
         `repro.cstream.JobSpec`; `egress=None` inherits the server default;
         a pre-negotiated `codec`/`plan` is consumed as-is (the Dispatcher
         path, so negotiation happens exactly once). `compact=False` opts a
-        session out of the compacted egress (the oracle baseline)."""
+        session out of the compacted egress (the oracle baseline).
+        `controller`/`tiers`/`active_tier` admit an ADAPTIVE session
+        (DESIGN.md §16) whose signature re-registers on tier switches."""
         if topic in self.sessions:
             raise ValueError(f"session {topic!r} already admitted")
         if len(self.sessions) >= self.max_sessions:
@@ -944,9 +1122,9 @@ class ServerCore:
                 codec, config.lanes, cap // config.lanes,
                 entropy=getattr(config, "entropy", None) or "none",
             )
-            owner = self._gang_owner.get(sig)
-            if owner is not None and owner.capacity == cap:
-                shared = owner.pipeline
+            # the signature fixes (lanes, per_lane), so a registered
+            # pipeline always matches this capacity
+            shared = self._gang_pipelines.get(sig)
         session = StreamSession(
             topic,
             config,
@@ -960,31 +1138,60 @@ class ServerCore:
             plan=plan,
             compact=compact,
             pipeline=shared,
+            controller=controller,
+            tiers=tiers,
+            active_tier=active_tier,
         )
         self.sessions[topic] = session
         if self.gang:
             session.flush_sink = self._enqueue_flush
-            sig = session.signature
-            if sig not in self._gang_owner:
-                # first session of a signature owns the gang's compiled
-                # pipeline and fixes the gang plan for that signature
-                self._gang_owner[sig] = session
-                self._gang_plans[sig] = plan_gang(
-                    session.pipeline.plan,
-                    self.profile,
-                    flush_timeout_s=session.flush_timeout_s,
-                )
-                self._stats[sig] = SignatureStats(
-                    codec=session.pipeline.codec.name,
-                    lanes=session.lanes,
-                    per_lane=session.capacity // session.lanes,
-                )
-                if self.fleet is not None:
-                    self._fleet_plans[sig] = plan_fleet(
-                        self._gang_plans[sig], self.fleet.n_devices
-                    )
-            self._stats[sig].n_sessions += 1
+            self._register_signature(session)
+            if controller is not None:
+                session.signature_listener = self._on_signature_change
         return session
+
+    def _register_signature(self, session: StreamSession) -> None:
+        """Register a session under its CURRENT dispatch signature: the
+        first arrival owns the gang's compiled pipeline and fixes the gang
+        plan. Called at admit and again whenever an adaptive session's tier
+        switch lands it on a new signature — the wave regrouping half of
+        the flush-boundary switch invariant (DESIGN.md §16)."""
+        sig = session.signature
+        if sig not in self._gang_owner:
+            self._gang_owner[sig] = session
+            self._gang_pipelines[sig] = session.pipeline
+            self._gang_plans[sig] = plan_gang(
+                session.pipeline.plan,
+                self.profile,
+                flush_timeout_s=session.flush_timeout_s,
+            )
+            self._stats[sig] = SignatureStats(
+                codec=session.pipeline.codec.name,
+                lanes=session.lanes,
+                per_lane=session.capacity // session.lanes,
+            )
+            if self.fleet is not None:
+                self._fleet_plans[sig] = plan_fleet(
+                    self._gang_plans[sig], self.fleet.n_devices
+                )
+        self._stats[sig].n_sessions += 1
+
+    def _on_signature_change(
+        self, session: StreamSession, old_sig: Optional[tuple]
+    ) -> None:
+        """Adaptive tier switch landed: future flushes of this session
+        queue under the new signature; anything already dispatched under
+        the old one committed before the switch (flush() defers switches
+        while snapshots are in flight)."""
+        self._register_signature(session)
+        # the switched session also shares the registered compiled pipeline
+        # when one exists for the new signature (capacity is signature-fixed)
+        shared = self._gang_pipelines[session.signature]
+        if shared is not session.pipeline:
+            session.pipeline = shared
+            if session.active_tier is not None:
+                session._tier_pipelines[session.active_tier] = shared
+            session._warm()
 
     def session(self, topic: str) -> StreamSession:
         return self.sessions[topic]

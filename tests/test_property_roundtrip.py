@@ -318,3 +318,175 @@ else:
     @given()
     def test_fleet_property():
         pass
+
+
+# --------------------------------------------------------- tier-switch grid --
+# DESIGN.md §16: an adaptive session may switch its compression tier ONLY at
+# flush boundaries; each sealed segment's frame is self-describing (codec id
+# + entropy feature bit in the header), so a decode-side that never heard of
+# the controller reconstructs the stream bit-exactly across every switch.
+# The grid scripts each switch direction — bypass->heavy, heavy->bypass and
+# the rANS on<->off toggle (heavy<->cheap) — across cheap-rung wire codecs
+# and the length corners on BOTH sides of the boundary.
+from repro.core.controller import ScriptedController, resolve_ladder
+
+#: every switch direction the ladder can take in one step
+TIER_SWITCHES = [
+    ("bypass", "heavy"),  # compression off -> transform + rANS on
+    ("heavy", "bypass"),  # everything off at once
+    ("cheap", "heavy"),   # rANS (and delta) on, cheap rung off
+    ("heavy", "cheap"),   # rANS off mid-stream
+]
+
+#: cheap-rung codecs to rotate through the grid — every lossless wire codec
+#: that can hold the rung (rle carries run state, tcomp32 predictive state,
+#: tdic32 a shared dictionary: all must reset cleanly across a seal)
+TIER_CHEAP_CODECS = ("leb128", "tcomp32", "rle", "tdic32")
+
+#: (pre-switch segment length, post-switch segment length): empty, single
+#: tuple, sub-alignment, ragged multi-block on either side of the boundary
+TIER_LENGTH_PAIRS = [(0, 1), (1, 931), (7, 257)]
+
+_LADDERS = {c: resolve_ladder(cheap=c) for c in TIER_CHEAP_CODECS}
+
+
+def _tier_codec(cheap: str, tier_name: str) -> str:
+    return {t.name: t.codec for t in _LADDERS[cheap]}[tier_name]
+
+
+def _assert_segment_frames(frames, spec_cheap, schedule, lengths):
+    """Frames are the wire truth: per-segment codec id matches the scripted
+    tier, the entropy feature bit rides only on rANS rungs, and each frame
+    survives a serialize -> reparse cycle self-describingly."""
+    assert len(frames) == len(schedule)
+    by_name = {t.name: t for t in _LADDERS[spec_cheap]}
+    for frame, tier_name, n in zip(frames, schedule, lengths):
+        tier = by_name[tier_name]
+        assert frame.codec_id == WIRE_CODEC_IDS[tier.codec], tier_name
+        assert frame.n_valid == n
+        buf = frame.to_bytes()
+        version = int(np.frombuffer(buf[:8], "<u4")[1])
+        if tier.entropy == "rans" and n > 0:
+            assert version & bits.FEATURE_ENTROPY, tier_name
+        back = bits.Frame.from_bytes(buf)
+        assert back.codec_id == frame.codec_id
+        assert back.n_valid == frame.n_valid
+
+
+@pytest.mark.parametrize("pre,post", TIER_SWITCHES)
+@pytest.mark.parametrize("pair_idx", range(len(TIER_LENGTH_PAIRS)))
+def test_tier_switch_offline_roundtrip(pre, post, pair_idx):
+    """Offline adaptive handle: each flush() is one segment; a scripted
+    pre->post switch at the boundary decodes bit-exact on both sides, for
+    every switch direction x length-corner pair (cheap codec rotated)."""
+    n_pre, n_post = TIER_LENGTH_PAIRS[pair_idx]
+    cheap = TIER_CHEAP_CODECS[(pair_idx + len(pre)) % len(TIER_CHEAP_CODECS)]
+    spec = cstream.JobSpec(codec=cheap, egress=True, adaptive=True)
+    ctl = ScriptedController(_LADDERS[cheap], [pre, post])
+    with cstream.open(spec, controller=ctl) as h:
+        for seg_i, n in enumerate((n_pre, n_post)):
+            h.push(gen_values("walk", n, 31 + seg_i))
+            h.flush()
+        assert h.tier_log == [pre, post]
+        rep = h.report()
+    assert rep.n_frames == 2
+    for rt in rep.roundtrips:
+        assert rt.fidelity.bit_exact, (pre, post, rt.compress.n_tuples)
+    _assert_segment_frames(h.frames(), cheap, [pre, post], [n_pre, n_post])
+
+
+# One dispatcher runs the whole session-mode grid in a single merged replay:
+# each (switch x lengths) combo is its own topic with its own scripted
+# controller, and segments land at timeout-driven flush boundaries.
+_SESSION_GRID = [
+    (pre, post, lengths)
+    for pre, post in TIER_SWITCHES
+    for lengths in ((1, 931), (931, 257))
+]
+_session_grid_results: dict = {}
+
+
+def _run_session_grid():
+    if _session_grid_results:
+        return _session_grid_results
+    d = cstream.Dispatcher()
+    handles = {}
+    for i, (pre, post, lengths) in enumerate(_SESSION_GRID):
+        cheap = TIER_CHEAP_CODECS[i % len(TIER_CHEAP_CODECS)]
+        spec = cstream.JobSpec(
+            codec=cheap, egress=True, adaptive=True,
+            flush_tuples=10_000, flush_timeout_s=0.05,
+        )
+        ctl = ScriptedController(_LADDERS[cheap], [pre, post])
+        topic = f"sw{i}-{pre}-{post}"
+        h = d.open(spec, topic=topic, controller=ctl)
+        # one burst per segment, 1s apart: the timeout seals each segment
+        # (and commits it) before the next burst arrives
+        for seg_i, n in enumerate(lengths):
+            ts = seg_i * 1.0 + np.arange(n) * 1e-5
+            h.push(gen_values("walk", n, 41 + seg_i), ts)
+        handles[topic] = (h, cheap)
+    d.run()
+    rep = d.close()
+    for i, (pre, post, lengths) in enumerate(_SESSION_GRID):
+        topic = f"sw{i}-{pre}-{post}"
+        h, cheap = handles[topic]
+        s = d.sessions[topic]
+        _session_grid_results[(pre, post, lengths)] = dict(
+            tier_history=tuple(s.tier_history),
+            tier_switches=s.tier_switches,
+            n_segments=s.n_segments,
+            bit_exact=rep.sessions[topic].fidelity.bit_exact,
+            report_history=rep.sessions[topic].tier_history,
+            frames=h.frames(),
+            cheap=cheap,
+        )
+    return _session_grid_results
+
+
+@pytest.mark.parametrize("pre,post,lengths", _SESSION_GRID)
+def test_tier_switch_session_roundtrip(pre, post, lengths):
+    """Serving-runtime sessions: the scripted switch lands exactly at the
+    flush boundary (tier history = one flush per tier, one switch), the
+    decoded stream is bit-exact across the seal, and the per-segment frames
+    carry the right codec ids + entropy bits."""
+    r = _run_session_grid()[(pre, post, lengths)]
+    assert r["tier_history"] == (pre, post)
+    assert r["report_history"] == (pre, post)  # surfaces through the report
+    assert r["tier_switches"] == 1
+    assert r["n_segments"] == 2
+    assert r["bit_exact"], (pre, post, lengths)
+    _assert_segment_frames(r["frames"], r["cheap"], [pre, post], list(lengths))
+
+
+def test_tier_switch_gang_waves_regroup():
+    """Gang mode: three same-signature adaptive sessions switch cheap->heavy
+    together at a flush boundary; waves regroup under the new dispatch
+    signature (both signatures show multi-session waves) and every session
+    stays bit-exact. Bursts are time-spaced so each wave commits before the
+    next boundary — in-flight snapshots lawfully defer switches."""
+    spec = cstream.JobSpec(
+        codec="leb128", egress=True, adaptive=True, gang=True,
+        flush_tuples=256, flush_timeout_s=0.05,
+    )
+    d = cstream.Dispatcher(gang=True)
+    handles = []
+    for i in range(3):
+        ctl = ScriptedController(_LADDERS["leb128"], ["cheap", "cheap", "heavy", "heavy"])
+        handles.append(d.open(spec, topic=f"g{i}", controller=ctl))
+    rng = np.random.default_rng(2)
+    for h in handles:
+        vals = np.cumsum(rng.integers(0, 7, 256 * 4)).astype(np.uint32)
+        ts = np.concatenate([k * 0.5 + np.arange(256) * 1e-5 for k in range(4)])
+        h.push(vals, ts)
+    d.run()
+    rep = d.close()
+    for i in range(3):
+        s = d.sessions[f"g{i}"]
+        assert tuple(s.tier_history) == ("cheap", "cheap", "heavy", "heavy")
+        assert s.tier_switches == 1
+        assert s.n_segments == 2
+        assert rep.sessions[f"g{i}"].fidelity.bit_exact
+    # both the cheap and the heavy dispatch signatures ganged all 3 sessions
+    multi = [st_ for st_ in rep.dispatch_stats.values() if st_.max_wave == 3]
+    assert len(multi) >= 2, {k: v.max_wave for k, v in rep.dispatch_stats.items()}
