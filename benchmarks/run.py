@@ -35,6 +35,7 @@ MODULES = [
     "bench_rans",              # beyond-paper: interleaved rANS entropy stage
     "bench_fleet",             # beyond-paper: multi-device sharded gang waves
     "bench_adaptive",          # beyond-paper: adaptive tier controller sweep
+    "bench_dict",              # beyond-paper: per-topic trained dictionaries
     "bench_roofline",          # dry-run aggregation
 ]
 
@@ -51,6 +52,7 @@ SMOKE_MODULES = [
     "bench_egress",
     "bench_rans",
     "bench_adaptive",
+    "bench_dict",
 ]
 
 

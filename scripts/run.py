@@ -23,7 +23,7 @@ def list_codecs() -> int:
 
     cols = [
         "name", "table1", "wire", "lossy", "stateful", "kind", "scope",
-        "maskable", "aligned", "entropy", "bound", "params",
+        "maskable", "aligned", "entropy", "dict", "bound", "params",
     ]
     rows = []
     for c in cstream.capabilities():
@@ -32,6 +32,7 @@ def list_codecs() -> int:
             "table1": c.paper_name or "-",
             "wire": str(c.wire_id) if c.wire_id is not None else "-",
             "entropy": ",".join(c.entropy) or "-",
+            "dict": "yes" if c.state_kind == "dictionary" else "-",
             "lossy": "lossy" if c.lossy else "lossless",
             "stateful": "yes" if c.stateful else "no",
             "kind": c.state_kind,
@@ -44,6 +45,35 @@ def list_codecs() -> int:
             ),
             "params": ",".join(c.accepted_params) or "-",
         })
+    widths = {k: max(len(k), max(len(r[k]) for r in rows)) for k in cols}
+    print("  ".join(k.ljust(widths[k]) for k in cols))
+    for r in rows:
+        print("  ".join(r[k].ljust(widths[k]) for k in cols))
+    return 0
+
+
+def list_dicts() -> int:
+    """Dump the default trained-dictionary registry (DESIGN.md §17)."""
+    from repro.core import dictstore
+
+    reg = dictstore.default_registry()
+    rows = [
+        {
+            "ref": f"{r['topic']}:v{r['version']}",
+            "idx_bits": str(r["idx_bits"]),
+            "entries": str(r["entries"]),
+            "bytes": str(r["bytes"]),
+            "hash": str(r["hash"]),
+            "pinned": "yes" if r["pinned"] else "-",
+        }
+        for r in reg.summary()
+    ]
+    if not rows:
+        root = reg.root or "<in-memory>"
+        print(f"no trained dictionaries published (registry root: {root}); "
+              f"train with dictstore.train_dict and publish, or set CSTREAM_DICT_ROOT")
+        return 0
+    cols = ["ref", "idx_bits", "entries", "bytes", "hash", "pinned"]
     widths = {k: max(len(k), max(len(r[k]) for r in rows)) for k in cols}
     print("  ".join(k.ljust(widths[k]) for k in cols))
     for r in rows:
@@ -89,6 +119,8 @@ def smoke() -> int:
         failures.append("fleet")
     if _entropy_smoke():
         failures.append("entropy")
+    if _dict_smoke():
+        failures.append("dict")
     return 1 if failures else 0
 
 
@@ -126,6 +158,50 @@ def _entropy_smoke() -> int:
     except Exception as exc:  # noqa: BLE001 — same reporting as the codec loop
         print(f"  [FAIL] entropy: {type(exc).__name__}: {exc}")
         return 1
+
+
+def _dict_smoke() -> int:
+    """Trained-dictionary gate (DESIGN.md §17): train/publish/negotiate a
+    seeded tdic32 job, roundtrip bit-exact, and check the two invalid
+    combinations fail with single-line NegotiationErrors."""
+    import numpy as np
+
+    from repro import cstream
+    from repro.core import dictstore
+
+    registry = dictstore.DictRegistry()
+    prev = dictstore.set_default_registry(registry)
+    try:
+        rng = np.random.default_rng(3)
+        book = rng.integers(0, 1 << 32, size=256, dtype=np.uint64).astype(np.uint32)
+        sample = book[(rng.zipf(1.3, size=4096) - 1) % book.size]
+        registry.publish(dictstore.train_dict(sample, idx_bits=12, topic="smoke"))
+        for bad in (  # non-dictionary codec / unknown topic: one-line refusals
+            cstream.JobSpec(codec="rle", egress=True, dictionary="smoke:v1"),
+            cstream.JobSpec(codec="tdic32", egress=True, dictionary="nope:v1"),
+        ):
+            try:
+                cstream.negotiate(bad)
+            except cstream.NegotiationError as exc:
+                assert "\n" not in str(exc), "multi-line NegotiationError"
+            else:
+                raise AssertionError(f"negotiated invalid dictionary spec {bad}")
+        spec = cstream.JobSpec(codec="tdic32", egress=True, dictionary="smoke:latest")
+        plan = cstream.negotiate(spec)
+        assert plan.dictionary is not None and plan.dictionary.version == 1
+        values = book[(rng.zipf(1.3, size=2048) - 1) % book.size]
+        with cstream.open(spec) as h:
+            seg = h.push(values).flush()
+            rep = h.report()
+        assert rep.fidelity.bit_exact and seg.frame.dict_id == ("smoke", 1)
+        print(f"  [OK] dict: seeded roundtrip, wire {seg.frame.wire_bytes}B, "
+              f"id {seg.frame.dict_id}")
+        return 0
+    except Exception as exc:  # noqa: BLE001 — same reporting as the codec loop
+        print(f"  [FAIL] dict: {type(exc).__name__}: {exc}")
+        return 1
+    finally:
+        dictstore.set_default_registry(prev)
 
 
 def _fleet_smoke() -> int:
@@ -204,6 +280,10 @@ def main(argv=None) -> int:
         help="print the codec capability registry (paper Table 1)",
     )
     ap.add_argument(
+        "--list-dicts", action="store_true",
+        help="print the default trained-dictionary registry (topic:vN rows)",
+    )
+    ap.add_argument(
         "--smoke", action="store_true",
         help="API-stability smoke over all ten codecs (CI gate)",
     )
@@ -214,6 +294,8 @@ def main(argv=None) -> int:
 
     if args.list_codecs:
         return list_codecs()
+    if args.list_dicts:
+        return list_dicts()
     if args.smoke:
         return smoke()
     if args.compress:

@@ -48,6 +48,13 @@ from repro.core.algorithms import (
     make_codec,
 )
 from repro.core.calibration import calibrated_kwargs
+from repro.core.dictstore import (
+    DictRegistry,
+    TrainedDict,
+    default_registry,
+    parse_dict_ref,
+    train_dict,
+)
 from repro.core.controller import (
     AdaptiveController,
     ModeledLink,
@@ -90,6 +97,11 @@ __all__ = [
     "Plan",
     "CodecCapability",
     "EntropyCapability",
+    "DictCapability",
+    "DictRegistry",
+    "TrainedDict",
+    "train_dict",
+    "default_registry",
     "NegotiationError",
     "negotiate",
     "negotiate_gang",
@@ -185,6 +197,12 @@ class JobSpec:
     #: (0 = wherever the dispatcher runs; >1 requires gang=True and a
     #: Dispatcher(mesh=...) at least that wide — DESIGN.md §14)
     devices: int = 0
+    #: trained per-topic dictionary reference: "topic" / "topic:latest"
+    #: (follow the registry's newest/pinned version, hot-swapping at flush
+    #: boundaries on publish) or "topic:v3" (pin this job to v3). Requires a
+    #: dictionary-state codec (tdic32); resolved against the process
+    #: default `dictstore` registry at negotiation (DESIGN.md §17)
+    dictionary: Optional[str] = None
 
     # ------------------------------------------------------------ validation
     def __post_init__(self) -> None:
@@ -212,6 +230,22 @@ class JobSpec:
             raise _err(f"JobSpec.entropy must be None or 'rans', got {self.entropy!r}")
         if not isinstance(self.adaptive, bool):
             raise _err(f"JobSpec.adaptive must be a bool, got {self.adaptive!r}")
+        if self.dictionary is not None:
+            if not isinstance(self.dictionary, str):
+                raise _err(
+                    f"JobSpec.dictionary must be a 'topic[:vN|:latest]' string "
+                    f"or None, got {self.dictionary!r}"
+                )
+            try:
+                parse_dict_ref(self.dictionary)
+            except ValueError as e:
+                raise _err(f"JobSpec.dictionary: {e}") from None
+            if self.adaptive:
+                raise _err(
+                    "JobSpec.dictionary cannot combine with adaptive=True: the "
+                    "tier ladder swaps codecs per flush and its rungs take no "
+                    "dictionary; pin a tdic32 job instead"
+                )
 
     # ------------------------------------------------------------ accessors
     @property
@@ -262,6 +296,7 @@ class JobSpec:
             "gang": self.gang,
             "arrival_rate_tps": self.arrival_rate_tps,
             "devices": self.devices,
+            "dictionary": self.dictionary,
         }
 
     @classmethod
@@ -383,6 +418,23 @@ class EntropyCapability:
     chunk_bytes: int  # bytes per independently-decodable chunk
 
 
+@dataclasses.dataclass(frozen=True)
+class DictCapability:
+    """The negotiated trained dictionary (DESIGN.md §17).
+
+    All-scalar so it hashes with the Plan; the seed arrays live on the
+    codec instance (and in the registry under `(topic, version)`)."""
+
+    topic: str
+    version: int  # the RESOLVED version ("topic:latest" pins here per flush)
+    idx_bits: int
+    n_entries: int
+    content_hash: str
+    #: True when the spec tracked "topic"/"topic:latest": registry publishes
+    #: hot-swap live sessions at their next flush boundary
+    follow_latest: bool
+
+
 #: (name, factory) -> capability; keyed on the factory object so a
 #: re-registered codec never serves a stale record. Capabilities are pure
 #: functions of the registry — negotiation consults them on every open.
@@ -449,15 +501,21 @@ class Plan:
     #: rung, every rung individually negotiated and capacity-matched; the
     #: session's controller switches between them at flush boundaries
     tiers: Optional[Tuple[Tuple[TierSpec, "Plan"], ...]] = None
+    #: resolved trained dictionary (spec.dictionary set); the Plan's codec
+    #: instance is already seeded with it
+    dictionary: Optional[DictCapability] = None
 
     @property
     def block_tuples(self) -> int:
         return self.execution.block_tuples
 
 
-def negotiate(spec: JobSpec) -> Plan:
+def negotiate(spec: JobSpec, registry: Optional[DictRegistry] = None) -> Plan:
     """Validate a JobSpec against the codec registry's capabilities and
     resolve it to an executable Plan.
+
+    `registry` overrides the process default dictstore registry for
+    `spec.dictionary` resolution (tests, multi-collector embedders).
 
     Every rejected combination raises a single-line `NegotiationError` that
     names the offending field and the fix — the contract the satellite
@@ -546,6 +604,45 @@ def negotiate(spec: JobSpec) -> Plan:
                 f"device_count={spec.devices} (or shrink devices)"
             )
 
+    dict_cap: Optional[DictCapability] = None
+    if spec.dictionary is not None:
+        if cap.state_kind != "dictionary":
+            dict_codecs = [
+                c.name for c in capabilities() if c.state_kind == "dictionary"
+            ]
+            raise _err(
+                f"codec {spec.codec!r} takes no trained dictionary (state_kind="
+                f"{cap.state_kind!r}); drop JobSpec.dictionary or pick one of: "
+                f"{', '.join(dict_codecs)}"
+            )
+        topic, version = parse_dict_ref(spec.dictionary)
+        try:
+            trained = (registry or default_registry()).get(topic, version)
+        except KeyError as exc:
+            raise _err(
+                f"JobSpec.dictionary={spec.dictionary!r}: {exc.args[0]}"
+            ) from exc
+        want_bits = spec.codec_kwargs.get("idx_bits")
+        if want_bits is not None and int(want_bits) != trained.idx_bits:
+            raise _err(
+                f"JobSpec.dictionary={spec.dictionary!r} was trained with "
+                f"idx_bits={trained.idx_bits} but params pin idx_bits="
+                f"{want_bits}; retrain the dictionary or drop the param"
+            )
+        # rebuild with the dictionary's table size and seed the instance:
+        # the seed arrays ride vars(codec) into the dispatch signature
+        codec = make_codec(
+            spec.codec, **{**spec.codec_kwargs, "idx_bits": trained.idx_bits}
+        ).seed_dictionary(trained)
+        dict_cap = DictCapability(
+            topic=trained.topic,
+            version=trained.version,
+            idx_bits=trained.idx_bits,
+            n_entries=trained.n_entries,
+            content_hash=trained.content_hash,
+            follow_latest=version is None,
+        )
+
     align = codec_align(codec)
     exec_plan = plan_execution(spec, codec_align=align)
     capacity = resolve_capacity(
@@ -589,6 +686,7 @@ def negotiate(spec: JobSpec) -> Plan:
             else None
         ),
         tiers=tiers,
+        dictionary=dict_cap,
     )
 
 
@@ -1006,6 +1104,34 @@ class StreamHandle:
             self._tier_decomps[name] = decomp
         return decomp
 
+    # ----------------------------------------------------------- dictionary
+    def swap_dictionary(self, trained: TrainedDict) -> "StreamHandle":
+        """Hot-swap to a newer trained dictionary at the next flush boundary.
+
+        Dispatcher-bound handles seal the current segment and open the next
+        flush under the new version (the registry's publish subscription
+        calls this automatically for "topic:latest" jobs); offline handles
+        simply compress subsequent segments under the new seed. Decode needs
+        no coordination: every frame declares the `(topic, version)` it was
+        encoded under."""
+        self._check_open()
+        if self.plan.dictionary is None:
+            raise _err(
+                "this job negotiated no trained dictionary; set "
+                "JobSpec.dictionary='topic[:vN|:latest]' and reopen"
+            )
+        if self._session is not None:
+            self._session.swap_dictionary(trained)
+            return self
+        codec = make_codec(
+            self.spec.codec, **{**self.spec.codec_kwargs, "idx_bits": trained.idx_bits}
+        ).seed_dictionary(trained)
+        self._pipe = CompressionPipeline(
+            self.spec, codec=codec, plan=self.plan.execution
+        )
+        self._decomp = None  # rebuild lazily against the new codec seed
+        return self
+
     # ------------------------------------------------------------- plumbing
     @property
     def topic(self) -> Optional[str]:
@@ -1337,6 +1463,8 @@ class Dispatcher:
         except ValueError as exc:  # core mesh validation -> negotiation error
             raise _err(str(exc)) from exc
         self._handles: Dict[str, StreamHandle] = {}
+        #: live "topic:latest" registry subscriptions; dropped on close
+        self._subscriptions: List[Tuple[DictRegistry, str, Any]] = []
 
     @property
     def gang(self) -> bool:
@@ -1462,6 +1590,17 @@ class Dispatcher:
             active_tier=active_tier,
         )
         handle = StreamHandle(spec, plan, session=session, dispatcher=self)
+        if plan.dictionary is not None and plan.dictionary.follow_latest:
+            # "topic:latest" jobs track the registry: a publish hot-swaps the
+            # session at its next flush boundary (sealed segment + new seed)
+            reg = default_registry()
+            dict_topic = plan.dictionary.topic
+
+            def _on_publish(trained: TrainedDict, _s: StreamSession = session) -> None:
+                _s.swap_dictionary(trained)
+
+            reg.subscribe(dict_topic, _on_publish)
+            self._subscriptions.append((reg, dict_topic, _on_publish))
         self._handles[topic] = handle
         return handle
 
@@ -1528,6 +1667,9 @@ class Dispatcher:
             if deadline is not None:
                 s.flush(now=deadline)
         self._drain_gang()
+        for reg, dict_topic, fn in self._subscriptions:
+            reg.unsubscribe(dict_topic, fn)
+        self._subscriptions.clear()
         return self.report()
 
     def __enter__(self) -> "Dispatcher":

@@ -42,13 +42,51 @@ class Tdic32(Codec):
         self.table_size = 1 << idx_bits
         self.mode = mode
 
-    def init_state(self, lanes: int):
+    def seed_dictionary(self, trained) -> "Tdic32":
+        """Start every session from a trained per-topic table (dictstore).
+
+        The seed arrays and id become instance attributes, so gang
+        signatures (which hash `vars(codec)`) separate seeded sessions by
+        dictionary content automatically; unseeded codecs never grow these
+        attributes and keep their pre-dictionary signatures byte-identical.
+        """
+        if trained.idx_bits != self.idx_bits:
+            raise ValueError(
+                f"trained dictionary '{trained.ref}' was built with "
+                f"idx_bits={trained.idx_bits}, codec has idx_bits={self.idx_bits}"
+            )
+        self.dict_topic = trained.topic
+        self.dict_version = int(trained.version)
+        self.dict_id = trained.ref
+        self.dict_hash = trained.content_hash
+        self._seed_table = trained.table
+        self._seed_valid = trained.valid
+        self._seed_ts = trained.ts
+        return self
+
+    def cold_state(self, lanes: int):
+        """The unseeded (pre-dictionary) state: empty table, clock 0."""
         return {
             "table": jnp.zeros((lanes, self.table_size), U32),
             "valid": jnp.zeros((lanes, self.table_size), jnp.bool_),
             # write timestamps: let the shared-state strategy merge tables
             # with true last-writer-wins semantics (decoder-replayable)
             "ts": jnp.full((lanes, self.table_size), -1, jnp.int32),
+            "clock": jnp.zeros((lanes,), jnp.int32),
+        }
+
+    def init_state(self, lanes: int):
+        seed = getattr(self, "_seed_table", None)
+        if seed is None:
+            return self.cold_state(lanes)
+        return {
+            "table": jnp.broadcast_to(jnp.asarray(seed, U32), (lanes, self.table_size)),
+            "valid": jnp.broadcast_to(
+                jnp.asarray(self._seed_valid, jnp.bool_), (lanes, self.table_size)
+            ),
+            "ts": jnp.broadcast_to(
+                jnp.asarray(self._seed_ts, jnp.int32), (lanes, self.table_size)
+            ),
             "clock": jnp.zeros((lanes,), jnp.int32),
         }
 

@@ -12,7 +12,7 @@ package never requires jax_enable_x64.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -266,7 +266,38 @@ _HDR_WORDS = 12
 #: byte-identical to pre-feature builds; decoders reject unknown bits
 #: instead of mis-parsing the body they gate.
 FEATURE_ENTROPY = 1 << 16  # body is [counts | entropy blob], not [counts | meta | payload]
-_KNOWN_FEATURES = FEATURE_ENTROPY
+FEATURE_DICT = 1 << 17  # a dict-id blob follows the block counts (trained dictionary)
+_KNOWN_FEATURES = FEATURE_ENTROPY | FEATURE_DICT
+
+
+def _pack_dict_id(dict_id: Tuple[str, int]) -> np.ndarray:
+    """Serialize (topic, version) as uint32 words: [nwords, version, topic_len,
+    topic utf-8 zero-padded to word alignment]. Self-sizing via word 0 so the
+    section can grow without a frame version bump."""
+    topic, version = dict_id
+    tb = topic.encode("utf-8")
+    pad_words = (len(tb) + 3) // 4
+    words = np.zeros(3 + pad_words, np.uint32)
+    words[0] = 3 + pad_words
+    words[1] = version
+    words[2] = len(tb)
+    if tb:
+        words[3:] = np.frombuffer(tb + b"\x00" * (4 * pad_words - len(tb)), "<u4")
+    return words
+
+
+def _unpack_dict_id(words: np.ndarray) -> Tuple[str, int]:
+    """Inverse of `_pack_dict_id`; caller has already validated the size."""
+    tlen = int(words[2])
+    topic = words[3:].astype("<u4").tobytes()[:tlen].decode("utf-8")
+    return (topic, int(words[1]))
+
+
+def _dict_id_words(dict_id: Optional[Tuple[str, int]]) -> int:
+    """Serialized word count of the dict-id section (0 when absent)."""
+    if dict_id is None:
+        return 0
+    return 3 + (len(dict_id[0].encode("utf-8")) + 3) // 4
 
 
 def _pack_bitlens(bitlen: np.ndarray) -> np.ndarray:
@@ -334,6 +365,12 @@ class Frame:
     #: the in-memory fields above always stay in raw form so decoders and
     #: the executor never see entropy-coded bytes.
     entropy: Optional[np.ndarray] = None
+    #: trained-dictionary reference `(topic, version)`. When set, the frame
+    #: raises FEATURE_DICT and carries a self-sizing dict-id section right
+    #: after the block counts; decode seeds the codec state from the
+    #: registry's matching TrainedDict instead of the cold table. `None`
+    #: keeps the frame byte-identical to pre-dictionary builds.
+    dict_id: Optional[Tuple[str, int]] = None
 
     # ------------------------------------------------------------ shapes --
     @property
@@ -367,10 +404,11 @@ class Frame:
     def wire_bytes(self) -> int:
         """Total serialized size (header + metadata + payload, or header +
         entropy blob), computed in O(1) — must equal len(self.to_bytes())."""
+        dw = _dict_id_words(self.dict_id)
         if self.entropy is not None:
-            return 4 * (_HDR_WORDS + 2 * self.n_blocks + self.entropy.size)
+            return 4 * (_HDR_WORDS + 2 * self.n_blocks + dw + self.entropy.size)
         meta_words = (7 * self.n_symbols + 31) // 32
-        return 4 * (_HDR_WORDS + 2 * self.n_blocks + meta_words + self.payload.size)
+        return 4 * (_HDR_WORDS + 2 * self.n_blocks + dw + meta_words + self.payload.size)
 
     # ------------------------------------------------------- entropy stage --
     def apply_entropy(self) -> "Frame":
@@ -394,11 +432,15 @@ class Frame:
     # ----------------------------------------------------------- serialize --
     def to_bytes(self) -> bytes:
         nb = self.n_blocks
+        dict_words = (
+            [] if self.dict_id is None else [_pack_dict_id(self.dict_id)]
+        )
+        dict_bit = FEATURE_DICT if self.dict_id is not None else 0
         if self.entropy is not None:
             header = np.array(
                 [
                     FRAME_MAGIC,
-                    FRAME_VERSION | FEATURE_ENTROPY,
+                    FRAME_VERSION | FEATURE_ENTROPY | dict_bit,
                     self.codec_id,
                     self.lanes,
                     self.per_lane,
@@ -416,6 +458,7 @@ class Frame:
                 header,
                 np.ascontiguousarray(self.block_bits, np.uint32),
                 np.ascontiguousarray(self.block_valid, np.uint32),
+                *dict_words,
                 np.ascontiguousarray(self.entropy, np.uint32),
             ]
             return b"".join(p.astype("<u4").tobytes() for p in parts)
@@ -425,7 +468,7 @@ class Frame:
         header = np.array(
             [
                 FRAME_MAGIC,
-                FRAME_VERSION,
+                FRAME_VERSION | dict_bit,
                 self.codec_id,
                 self.lanes,
                 self.per_lane,
@@ -443,6 +486,7 @@ class Frame:
             header,
             np.ascontiguousarray(self.block_bits, np.uint32),
             np.ascontiguousarray(self.block_valid, np.uint32),
+            *dict_words,
             meta,
             np.ascontiguousarray(self.payload, np.uint32),
         ]
@@ -461,10 +505,11 @@ class Frame:
         if unknown:
             raise ValueError(
                 f"frame uses unknown feature bits 0x{unknown:08x} (this "
-                f"build understands 0x{_KNOWN_FEATURES:08x}: entropy); "
+                f"build understands 0x{_KNOWN_FEATURES:08x}: entropy, dict); "
                 "decode with a newer build"
             )
         has_entropy = bool(features & FEATURE_ENTROPY)
+        has_dict = bool(features & FEATURE_DICT)
         nb, meta_words, payload_words = int(head[9]), int(head[10]), int(head[11])
         body = np.frombuffer(buf[4 * _HDR_WORDS :], dtype="<u4")
         # with FEATURE_ENTROPY, header word 10 is the blob size and word 11
@@ -474,12 +519,24 @@ class Frame:
                 "frame header inconsistent: entropy frames carry no raw "
                 "payload section"
             )
-        if body.size != 2 * nb + meta_words + payload_words:
+        dict_id: Optional[Tuple[str, int]] = None
+        dict_words = 0
+        if has_dict:
+            # the dict-id section self-sizes via its leading word, sitting
+            # between the block counts and the meta/blob sections
+            if body.size < 2 * nb + 3:
+                raise ValueError("frame length mismatch")
+            dict_words = int(body[2 * nb])
+            tlen = int(body[2 * nb + 2]) if body.size > 2 * nb + 2 else -1
+            if dict_words < 3 or dict_words != 3 + (tlen + 3) // 4:
+                raise ValueError("frame header inconsistent: dict-id section")
+            dict_id = _unpack_dict_id(body[2 * nb : 2 * nb + dict_words])
+        if body.size != 2 * nb + dict_words + meta_words + payload_words:
             raise ValueError("frame length mismatch")
         block_bits = body[:nb].astype(np.uint32)
         block_valid = body[nb : 2 * nb].astype(np.uint32)
-        meta = body[2 * nb : 2 * nb + meta_words].astype(np.uint32)
-        payload = body[2 * nb + meta_words :].astype(np.uint32)
+        meta = body[2 * nb + dict_words : 2 * nb + dict_words + meta_words].astype(np.uint32)
+        payload = body[2 * nb + dict_words + meta_words :].astype(np.uint32)
         frame = cls(
             codec_id=int(head[2]),
             lanes=int(head[3]),
@@ -492,6 +549,7 @@ class Frame:
             block_valid=block_valid,
             bitlen=np.zeros(0, np.int32),
             payload=payload,
+            dict_id=dict_id,
         )
         # header self-consistency: every derived size must match the declared
         # section lengths, so a tampered/corrupt header is rejected here (the

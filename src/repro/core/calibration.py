@@ -17,7 +17,9 @@ def calibrated_kwargs(name: str, sample: np.ndarray) -> Dict:
     s = np.asarray(sample, dtype=np.float64).ravel()
     if s.size == 0:
         return {}
-    vmax = float(max(s.max(), 1.0))
+    # magnitude, not signed max: an all-negative stream would otherwise
+    # collapse vmax to 1.0 and undersize the quantizer range
+    vmax = float(max(np.abs(s).max(), 1.0))
     if name in ("leb128_nuq", "uanuq"):
         return {"vmax": vmax}
     if name in ("adpcm", "uaadpcm"):
@@ -27,4 +29,10 @@ def calibrated_kwargs(name: str, sample: np.ndarray) -> Dict:
     if name == "pla":
         mean = float(max(abs(s.mean()), 1.0))
         return {"eps": max(1.0, 0.02 * mean)}
+    if name == "tdic32":
+        # size the hash table to the sample's distinct-value cardinality at
+        # ~0.5 load factor (clamped to 2^8..2^16 = 1-256 KiB/lane tables)
+        card = np.unique(np.asarray(sample, dtype=np.uint32).ravel()).size
+        idx_bits = int(np.clip(np.ceil(np.log2(max(card, 1) * 2.0)), 8, 16))
+        return {"idx_bits": idx_bits}
     return {}

@@ -1412,12 +1412,17 @@ class CompressionPipeline(BlockedExecutor):
         return self._flush_entry(self._pack_flush(state))
 
     def _maybe_entropy(self, frame: bits.Frame) -> bits.Frame:
-        """Apply the negotiated stage-2 entropy coder at marshal time.
+        """Apply wire feature stages at marshal time (dict id, entropy).
 
         Every egress path — solo fused/eager, gang, server waves, legacy
         compact=False — funnels through `marshal_frame`/`marshal_compacted`,
-        so hooking here composes the stage with all of them (DESIGN.md §15).
-        The frame keeps its raw fields; only serialization changes."""
+        so hooking here composes the stages with all of them (DESIGN.md
+        §15/§17). The frame keeps its raw fields; only serialization changes."""
+        topic = getattr(self.codec, "dict_topic", None)
+        if topic is not None:
+            # seeded codec: stamp (topic, version) so the frame is
+            # self-describing and decode can fetch the same seed
+            frame.dict_id = (topic, self.codec.dict_version)
         if self.entropy == "rans":
             frame.apply_entropy()
         return frame
@@ -1648,9 +1653,48 @@ class DecompressionPipeline(BlockedExecutor):
         values = self._assemble(frame, shapes, outs, xs)
         return DecompressionResult(values=values, wall_s=wall, n_tuples=frame.n_valid)
 
+    def _initial_state(self, frame: bits.Frame, lanes: int):
+        """Decode-side state seeding from the frame's declared dictionary.
+
+        Frames are self-describing: a FEATURE_DICT frame names the exact
+        `(topic, version)` its encoder was seeded with, so decode replays
+        from the same table regardless of which dictionary (if any) this
+        pipeline's codec instance carries. A plain frame from a seeded
+        pipeline decodes cold — mixed segments across a hot-swap each get
+        the seed their own header declares."""
+        did = frame.dict_id
+        codec_did = getattr(self.codec, "dict_topic", None)
+        if did is None:
+            if codec_did is not None:
+                return self.codec.cold_state(lanes)
+            return self.init_state(lanes)
+        if codec_did == did[0] and getattr(self.codec, "dict_version", None) == did[1]:
+            return self.init_state(lanes)  # codec already carries this seed
+        from repro.core import dictstore
+
+        try:
+            trained = dictstore.resolve(did[0], did[1])
+        except KeyError as e:
+            raise ValueError(
+                f"frame references trained dictionary '{did[0]}:v{did[1]}' "
+                f"which this registry cannot resolve ({e.args[0]}); publish it "
+                f"or point CSTREAM_DICT_ROOT at the collector's registry"
+            ) from e
+        if self.codec.meta.state_kind != "dictionary":
+            raise ValueError(
+                f"frame references trained dictionary '{trained.ref}' but "
+                f"pipeline codec {self.codec.name!r} takes no dictionary"
+            )
+        if trained.idx_bits != self.codec.idx_bits:
+            raise ValueError(
+                f"frame dictionary '{trained.ref}' has idx_bits="
+                f"{trained.idx_bits}, decode codec has idx_bits={self.codec.idx_bits}"
+            )
+        return trained.seed_state(lanes)
+
     def _run_blocks(self, frame, lanes, full_words, full_blens, extra_blocks, stream_scope):
         """One decode pass over the staged blocks (the timed region)."""
-        state = self.init_state(lanes)
+        state = self._initial_state(frame, lanes)
         outs: List[Any] = []  # per-block decoded (L, B) or unpacked codes
         blens: List[Any] = []
         if full_words is not None:

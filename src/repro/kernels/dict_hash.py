@@ -13,10 +13,21 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 KNUTH = 2654435761  # Knuth multiplicative hash constant (python int: Pallas
 DEFAULT_BLOCK = 512  # kernels must not capture traced jnp constants)
+
+
+def hash_host(values: np.ndarray, idx_bits: int = 12) -> np.ndarray:
+    """Host-side twin of the kernel's slot hash (training / table fills).
+
+    Must stay bit-identical to ``_probe_kernel``'s ``h`` so tables built
+    offline land in the slots the device probe reads.
+    """
+    v = np.asarray(values, dtype=np.uint32)
+    return ((v * np.uint32(KNUTH)) >> np.uint32(32 - idx_bits)).astype(np.int64)
 
 
 def _probe_kernel(x_ref, table_ref, valid_ref, c0_ref, c1_ref, blen_ref, *, idx_bits: int):

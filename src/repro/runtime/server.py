@@ -131,6 +131,8 @@ class SessionReport:
     # adaptive sessions (DESIGN.md §16) only
     tier_switches: int = 0  # tier changes applied at flush boundaries
     tier_history: Tuple[str, ...] = ()  # tier that compressed each flush
+    # trained-dictionary sessions (DESIGN.md §17) only
+    dict_swaps: int = 0  # dictionary versions hot-swapped at flush boundaries
 
 
 @dataclasses.dataclass
@@ -309,6 +311,23 @@ class StreamSession:
         #: server hook: called as listener(self, old_signature) after a tier
         #: switch so the gang dispatcher registers the new signature
         self.signature_listener = None
+        # ---- trained dictionary hot-swap state (DESIGN.md §17) ------------
+        #: dictionary published mid-stream, waiting for the next flush
+        #: boundary with nothing in flight
+        self._pending_dict = None
+        self.dict_swaps = 0
+        #: dict ref -> CompressionPipeline (a republished version switches
+        #: back to its compiled pipeline instead of recompiling)
+        self._dict_pipelines: Dict[str, CompressionPipeline] = {}
+        #: frame dict_id -> seeded codec / decompressor, so egress decode of
+        #: sealed pre-swap segments never depends on the process registry
+        self._dict_codecs: Dict[Optional[tuple], Codec] = {}
+        self._dict_decomp: Dict[Optional[tuple], DecompressionPipeline] = {}
+        _topic0 = getattr(self.pipeline.codec, "dict_topic", None)
+        if _topic0 is not None:
+            did0 = (_topic0, self.pipeline.codec.dict_version)
+            self._dict_codecs[did0] = self.pipeline.codec
+            self._dict_pipelines[f"{did0[0]}:v{did0[1]}"] = self.pipeline
         if self.controller is not None:
             if active_tier is None or active_tier not in self._tiers:
                 raise ValueError(
@@ -383,6 +402,56 @@ class StreamSession:
         self._signature = None
         self.active_tier = name
         self.tier_switches += 1
+        self._warm()
+        if self.signature_listener is not None:
+            self.signature_listener(self, old_sig)
+
+    # ------------------------------------------- trained dictionary hot-swap
+    def swap_dictionary(self, trained) -> None:
+        """Stage a published dictionary version; applied at the next flush
+        boundary with nothing in flight (same deferral discipline as tier
+        switches). The registry's publish subscription calls this for
+        "topic:latest" jobs; embedders may call it directly."""
+        codec = self.pipeline.codec
+        if codec.meta.state_kind != "dictionary":
+            raise ValueError(
+                f"session {self.topic!r} runs codec {codec.name!r} which takes "
+                "no trained dictionary"
+            )
+        if trained.idx_bits != codec.idx_bits:
+            raise ValueError(
+                f"dictionary '{trained.ref}' has idx_bits={trained.idx_bits}, "
+                f"session {self.topic!r} runs idx_bits={codec.idx_bits}; "
+                "retrain at the session's table size"
+            )
+        if trained.ref == getattr(codec, "dict_id", None):
+            self._pending_dict = None  # already active; cancel any staged swap
+            return
+        self._pending_dict = trained
+
+    def _switch_dict(self, trained) -> None:
+        """Swap the session onto a new dictionary version AT a flush
+        boundary: seal the open segment (its frames declare the OLD
+        version), install a pipeline seeded with the new table, and
+        re-register the dispatch signature so gang waves regroup — waves
+        never mix dictionary versions."""
+        self._seal_segment()
+        old_sig = self._signature
+        pipe = self._dict_pipelines.get(trained.ref)
+        if pipe is None:
+            codec = type(self.pipeline.codec)(
+                idx_bits=trained.idx_bits, mode=self.pipeline.codec.mode
+            ).seed_dictionary(trained)
+            pipe = CompressionPipeline(
+                self.config, codec=codec, plan=self.pipeline.plan
+            )
+            self._dict_pipelines[trained.ref] = pipe
+        self.pipeline = pipe
+        self._dict_codecs[trained.dict_id] = pipe.codec
+        self.state = pipe.init_state()
+        self._signature = None
+        self._decompressor = None  # rebuilt lazily against the new seed
+        self.dict_swaps += 1
         self._warm()
         if self.signature_listener is not None:
             self.signature_listener(self, old_sig)
@@ -526,6 +595,11 @@ class StreamSession:
         if self._pending_tier is not None and self._inflight == 0:
             self._switch_tier(self._pending_tier)
             self._pending_tier = None
+        # a published dictionary lands at the same boundary: the sealed
+        # segment's frames declare the old version, this batch the new one
+        if self._pending_dict is not None and self._inflight == 0:
+            self._switch_dict(self._pending_dict)
+            self._pending_dict = None
         vals = np.full(self.capacity, self._values[max(n - 1, 0)], np.uint32)
         vals[:n] = self._values[:n]
         mask = np.zeros(self.capacity, bool)
@@ -721,11 +795,21 @@ class StreamSession:
         wire = 0
         wall = 0.0
         for frame, fed, tier in self._sealed:
-            decomp = self._tier_decomp.get(tier)
-            if decomp is None:
-                tier_cfg, tier_codec, _ = self._tiers[tier]
-                decomp = DecompressionPipeline(tier_cfg, codec=tier_codec)
-                self._tier_decomp[tier] = decomp
+            if tier is not None and tier in self._tiers:
+                decomp = self._tier_decomp.get(tier)
+                if decomp is None:
+                    tier_cfg, tier_codec, _ = self._tiers[tier]
+                    decomp = DecompressionPipeline(tier_cfg, codec=tier_codec)
+                    self._tier_decomp[tier] = decomp
+            else:
+                # dictionary-swap seal (static session): decode with a codec
+                # carrying the frame's declared seed, so the check never
+                # depends on the process registry
+                decomp = self._dict_decomp.get(frame.dict_id)
+                if decomp is None:
+                    codec = self._dict_codecs.get(frame.dict_id, self.pipeline.codec)
+                    decomp = DecompressionPipeline(self.config, codec=codec)
+                    self._dict_decomp[frame.dict_id] = decomp
             dec = decomp.decompress(frame)
             decoded.append(dec.values)
             feds.append(fed)
@@ -798,6 +882,7 @@ class StreamSession:
             decode_s=dec_s,
             tier_switches=self.tier_switches,
             tier_history=tuple(self.tier_history),
+            dict_swaps=self.dict_swaps,
         )
 
 
@@ -1146,8 +1231,10 @@ class ServerCore:
         if self.gang:
             session.flush_sink = self._enqueue_flush
             self._register_signature(session)
-            if controller is not None:
-                session.signature_listener = self._on_signature_change
+            # every gang session listens for signature changes: adaptive
+            # tier switches AND dictionary hot-swaps both re-key the queue,
+            # and an unregistered signature would KeyError at enqueue
+            session.signature_listener = self._on_signature_change
         return session
 
     def _register_signature(self, session: StreamSession) -> None:
@@ -1191,6 +1278,12 @@ class ServerCore:
             session.pipeline = shared
             if session.active_tier is not None:
                 session._tier_pipelines[session.active_tier] = shared
+            ref = getattr(shared.codec, "dict_id", None)
+            if ref is not None:  # dictionary swap: cache for return visits
+                session._dict_pipelines[ref] = shared
+                session._dict_codecs[
+                    (shared.codec.dict_topic, shared.codec.dict_version)
+                ] = shared.codec
             session._warm()
 
     def session(self, topic: str) -> StreamSession:

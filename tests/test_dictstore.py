@@ -1,0 +1,389 @@
+"""Per-topic trained dictionary subsystem (DESIGN.md §17): training
+determinism, the versioned registry (publish/get/pin/LRU/persistence),
+the FEATURE_DICT wire blob, negotiation of `JobSpec.dictionary`, gang
+signature separation, and hot-swap at flush boundaries — bit-exact on
+offline handles, dispatcher sessions and gang waves.
+"""
+import numpy as np
+import pytest
+
+from repro import cstream
+from repro.core import bits, dictstore
+from repro.core.calibration import calibrated_kwargs
+from repro.core.pipeline import DecompressionPipeline, dispatch_signature
+from repro.kernels.dict_hash import hash_host
+
+IDX_BITS = 10
+
+
+@pytest.fixture
+def registry():
+    """Fresh in-memory registry installed as the process default."""
+    reg = dictstore.DictRegistry()
+    prev = dictstore.set_default_registry(reg)
+    yield reg
+    dictstore.set_default_registry(prev)
+
+
+def _zipf(rng, card, n):
+    return ((rng.zipf(1.3, size=n) - 1) % card).astype(np.uint32) * np.uint32(2654435761 % 1000 + 7)
+
+
+def _publish(reg, topic="sensor", card=300, n=4096, seed=0, idx_bits=IDX_BITS):
+    rng = np.random.default_rng(seed)
+    return reg.publish(
+        dictstore.train_dict(_zipf(rng, card, n), idx_bits=idx_bits, topic=topic)
+    )
+
+
+# ------------------------------------------------------------------ parsing --
+def test_parse_dict_ref_forms():
+    assert dictstore.parse_dict_ref("sensor") == ("sensor", None)
+    assert dictstore.parse_dict_ref("sensor:latest") == ("sensor", None)
+    assert dictstore.parse_dict_ref("sensor:v3") == ("sensor", 3)
+    assert dictstore.parse_dict_ref("a.b-c_d:7") == ("a.b-c_d", 7)
+    for bad in ("", "no spaces ok", "topic:vx", "topic:", ":v1"):
+        with pytest.raises(ValueError, match="malformed dictionary ref"):
+            dictstore.parse_dict_ref(bad)
+
+
+# ----------------------------------------------------------------- training --
+def test_train_dict_deterministic_under_input_order():
+    rng = np.random.default_rng(1)
+    sample = _zipf(rng, 200, 4096)
+    shuffled = sample.copy()
+    rng.shuffle(shuffled)
+    a = dictstore.train_dict(sample, idx_bits=IDX_BITS)
+    b = dictstore.train_dict(shuffled, idx_bits=IDX_BITS)
+    assert a.content_hash == b.content_hash
+    np.testing.assert_array_equal(a.table, b.table)
+
+
+def test_train_dict_slots_match_device_probe_and_frequency_wins():
+    # craft two values that collide in a tiny table; the frequent one wins
+    idx_bits = 4
+    vals = np.arange(1, 5000, dtype=np.uint32)
+    h = hash_host(vals, idx_bits)
+    slot = int(h[0])
+    rivals = vals[h == slot][:2]
+    assert rivals.size == 2
+    sample = np.concatenate([np.repeat(rivals[0], 3), np.repeat(rivals[1], 7)])
+    d = dictstore.train_dict(sample, idx_bits=idx_bits)
+    assert d.valid[slot] and d.table[slot] == rivals[1]  # count 7 beats 3
+    # every occupied slot is where the device probe would look
+    occ = np.nonzero(d.valid)[0]
+    np.testing.assert_array_equal(hash_host(d.table[occ], idx_bits), occ)
+    assert d.ts[occ].max() == 0 and np.all(d.ts[~d.valid] == -1)
+
+
+def test_trained_dict_rejects_shape_mismatch():
+    with pytest.raises(ValueError, match="must all be shape"):
+        dictstore.TrainedDict(
+            topic="t", version=1, idx_bits=4,
+            table=np.zeros(16, np.uint32), valid=np.zeros(8, bool),
+            ts=np.full(16, -1, np.int32),
+        )
+
+
+# ----------------------------------------------------------------- registry --
+def test_registry_publish_versions_get_and_pin(registry):
+    v1 = _publish(registry, seed=0)
+    v2 = _publish(registry, seed=1)
+    assert (v1.version, v2.version) == (1, 2)
+    assert registry.versions("sensor") == [1, 2]
+    assert registry.get("sensor").version == 2  # latest
+    assert registry.get("sensor", 1).content_hash == v1.content_hash
+    registry.pin("sensor", 1)
+    assert registry.get("sensor").version == 1  # pin overrides latest
+    registry.pin("sensor", None)
+    assert registry.get("sensor").version == 2
+    with pytest.raises(KeyError, match="cannot pin"):
+        registry.pin("sensor", 9)
+
+
+def test_registry_unknown_errors_are_single_line_and_actionable(registry):
+    _publish(registry)
+    with pytest.raises(KeyError) as ei:
+        registry.get("nope")
+    assert "unknown dictionary topic" in ei.value.args[0]
+    assert "train one" in ei.value.args[0] and "\n" not in ei.value.args[0]
+    with pytest.raises(KeyError) as ei:
+        registry.get("sensor", 9)
+    assert "unknown dictionary version v9" in ei.value.args[0]
+    assert "have: v1" in ei.value.args[0] and "\n" not in ei.value.args[0]
+
+
+def test_registry_persistence_roundtrip_and_lru(tmp_path):
+    root = str(tmp_path / "dicts")
+    reg = dictstore.DictRegistry(root=root, max_resident=2)
+    arts = [_publish(reg, seed=s) for s in range(3)]
+    assert reg.resident_count <= 2  # LRU bounded when reloadable
+    # evicted versions reload from npz bit-identically
+    assert reg.get("sensor", 1).content_hash == arts[0].content_hash
+    reg.pin("sensor", 2)
+    # a fresh registry over the same root sees index, pins and artifacts
+    reg2 = dictstore.DictRegistry(root=root)
+    assert reg2.versions("sensor") == [1, 2, 3]
+    assert reg2.get("sensor").version == 2  # pin persisted
+    assert reg2.get("sensor", 3).content_hash == arts[2].content_hash
+
+
+def test_registry_in_memory_never_evicts():
+    reg = dictstore.DictRegistry(max_resident=2)
+    arts = [_publish(reg, seed=s) for s in range(4)]
+    for i, a in enumerate(arts):
+        assert reg.get("sensor", i + 1).content_hash == a.content_hash
+
+
+def test_registry_subscribe_unsubscribe(registry):
+    seen = []
+    registry.subscribe("sensor", seen.append)
+    v1 = _publish(registry)
+    assert [d.version for d in seen] == [1] and seen[0].dict_id == v1.dict_id
+    registry.unsubscribe("sensor", seen.append)
+    _publish(registry, seed=1)
+    assert len(seen) == 1
+
+
+# --------------------------------------------------------------------- wire --
+def _frame(dict_id=None):
+    rng = np.random.default_rng(5)
+    blen = rng.integers(0, 33, size=64).astype(np.int32)
+    words = rng.integers(0, 2**32, size=(130,), dtype=np.uint64).astype(np.uint32)
+    f = bits.build_frame(
+        codec_id=8, lanes=4, per_lane=16, n_full=1, tail_per_lane=0,
+        flush_slots=0, n_valid=64, blocks=[(words, int(blen.sum()), blen, 64)],
+    )
+    f.dict_id = dict_id
+    return f
+
+
+def test_frame_dict_id_wire_roundtrip():
+    for did in (("sensor", 1), ("a.b-c_d", 300), ("x" * 37, 2)):
+        f = _frame(did)
+        buf = f.to_bytes()
+        assert f.wire_bytes == len(buf)
+        back = bits.Frame.from_bytes(buf)
+        assert back.dict_id == did
+        np.testing.assert_array_equal(back.payload, f.payload)
+        assert back.to_bytes() == buf
+
+
+def test_frame_dict_id_composes_with_entropy():
+    f = _frame(("sensor", 2))
+    plain_payload = f.payload.copy()
+    buf = f.apply_entropy().to_bytes()
+    head = np.frombuffer(buf[:8], "<u4")
+    assert int(head[1]) == bits.FRAME_VERSION | bits.FEATURE_ENTROPY | bits.FEATURE_DICT
+    back = bits.Frame.from_bytes(buf)
+    assert back.dict_id == ("sensor", 2)
+    np.testing.assert_array_equal(back.payload, plain_payload)
+
+
+def test_frame_without_dict_is_byte_identical_to_pre_dict_layout():
+    buf = _frame(None).to_bytes()
+    head = np.frombuffer(buf[:8], "<u4")
+    assert int(head[1]) == bits.FRAME_VERSION  # no feature bit raised
+    assert bits.Frame.from_bytes(buf).dict_id is None
+
+
+def test_frame_rejects_inconsistent_dict_section():
+    buf = bytearray(_frame(("sensor", 1)).to_bytes())
+    # word 12+2*nb is the dict section length; corrupt it
+    nb = int(np.frombuffer(bytes(buf[36:40]), "<u4")[0])
+    off = 4 * (12 + 2 * nb)
+    buf[off : off + 4] = (2).to_bytes(4, "little")
+    with pytest.raises(ValueError, match="dict-id section"):
+        bits.Frame.from_bytes(bytes(buf))
+
+
+# -------------------------------------------------------------- negotiation --
+def test_negotiate_dictionary_errors_are_single_line(registry):
+    _publish(registry)
+    cases = [
+        (dict(codec="rle", egress=True, dictionary="sensor:v1"), "take[s]? no"),
+        (dict(codec="tdic32", egress=True, dictionary="nope:v1"), "unknown dictionary topic"),
+        (dict(codec="tdic32", egress=True, dictionary="sensor:v9"), "unknown dictionary version"),
+        (
+            dict(codec="tdic32", egress=True, dictionary="sensor:v1",
+                 params={"idx_bits": 12}),
+            "idx_bits",
+        ),
+    ]
+    for kw, match in cases:
+        with pytest.raises(cstream.NegotiationError, match=match) as ei:
+            cstream.negotiate(cstream.JobSpec(**kw))
+        assert "\n" not in str(ei.value), kw
+    with pytest.raises(cstream.NegotiationError, match="adaptive"):
+        cstream.JobSpec(codec="tdic32", egress=True, dictionary="sensor:v1",
+                        adaptive=True)
+    with pytest.raises(cstream.NegotiationError, match="malformed dictionary ref"):
+        cstream.JobSpec(codec="tdic32", dictionary="bad ref!")
+
+
+def test_negotiate_dictionary_capability_and_latest(registry):
+    v1 = _publish(registry)
+    plan = cstream.negotiate(
+        cstream.JobSpec(codec="tdic32", egress=True, dictionary="sensor:v1")
+    )
+    cap = plan.dictionary
+    assert cap is not None and not cap.follow_latest
+    assert (cap.topic, cap.version, cap.idx_bits) == ("sensor", 1, IDX_BITS)
+    assert cap.content_hash == v1.content_hash
+    assert plan.codec.idx_bits == IDX_BITS  # trained dict decides idx_bits
+    _publish(registry, seed=1)
+    latest = cstream.negotiate(
+        cstream.JobSpec(codec="tdic32", egress=True, dictionary="sensor:latest")
+    )
+    assert latest.dictionary.version == 2 and latest.dictionary.follow_latest
+
+
+def test_dictionary_separates_gang_signatures(registry):
+    v1 = _publish(registry, seed=0)
+    v2 = _publish(registry, seed=1)
+
+    def sig(dictionary):
+        spec = cstream.JobSpec(codec="tdic32", dictionary=dictionary)
+        plan = cstream.negotiate(spec)
+        return dispatch_signature(plan.codec, lanes=4, per_lane=64)
+
+    assert sig(None) == sig(None)  # unseeded stays stable
+    assert sig("sensor:v1") == sig("sensor:v1")  # seeded deterministic
+    assert len({sig(None), sig("sensor:v1"), sig("sensor:v2")}) == 3
+    assert v1.content_hash != v2.content_hash
+
+
+# ----------------------------------------------------------------- hot-swap --
+def _streams(n_streams, n, card=300, seed=9):
+    rng = np.random.default_rng(seed)
+    return [_zipf(rng, card, n) for _ in range(n_streams)]
+
+
+def test_offline_seeded_roundtrip_and_uplift(registry):
+    _publish(registry)
+    (stream,) = _streams(1, 2048)
+    chunks = [stream[:1024], stream[1024:]]
+
+    def run(spec):
+        with cstream.open(spec) as h:
+            for c in chunks:
+                h.push(c)
+                h.flush()
+            return h.frames(), h.report()
+
+    base = cstream.JobSpec(codec="tdic32", params={"idx_bits": IDX_BITS}, egress=True)
+    cold_frames, cold = run(base)
+    frames, seeded = run(base.replace(dictionary="sensor:v1"))
+    assert cold.fidelity.bit_exact and seeded.fidelity.bit_exact
+    assert all(f.dict_id == ("sensor", 1) for f in frames)
+    assert all(f.dict_id is None for f in cold_frames)
+    assert seeded.wire_bytes < cold.wire_bytes  # the seed pays its way
+
+
+def test_offline_hot_swap_decodes_via_registry(registry):
+    v1 = _publish(registry, seed=0)
+    v2 = _publish(registry, seed=1)
+    assert (v1.version, v2.version) == (1, 2)
+    (stream,) = _streams(1, 2048)
+    spec = cstream.JobSpec(
+        codec="tdic32", params={"idx_bits": IDX_BITS}, egress=True,
+        dictionary="sensor:v1",
+    )
+    with cstream.open(spec) as h:
+        h.push(stream[:1024]).flush()
+        h.swap_dictionary(v2)
+        h.push(stream[1024:]).flush()
+        frames = h.frames()
+        rep = h.report()
+    assert rep.fidelity.bit_exact
+    assert [f.dict_id for f in frames] == [("sensor", 1), ("sensor", 2)]
+    # collector-side: a FRESH unseeded pipeline decodes both frames by
+    # resolving each frame's declared dict_id through the registry
+    plan = cstream.negotiate(spec.replace(dictionary=None))
+    decomp = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+    got = np.concatenate([decomp.decompress(f).values for f in frames])
+    np.testing.assert_array_equal(got, stream)
+
+
+def test_decode_unknown_dict_id_fails_actionably(registry):
+    _publish(registry)
+    spec = cstream.JobSpec(codec="tdic32", egress=True, dictionary="sensor:v1")
+    with cstream.open(spec) as h:
+        h.push(_streams(1, 512)[0][:512]).flush()
+        frames = h.frames()
+    # a collector whose registry lacks the topic must refuse, on one line
+    empty = dictstore.DictRegistry()
+    prev = dictstore.set_default_registry(empty)
+    try:
+        plan = cstream.negotiate(spec.replace(dictionary=None))
+        decomp = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+        with pytest.raises(ValueError, match="cannot resolve") as ei:
+            decomp.decompress(frames[0])
+        assert "sensor:v1" in str(ei.value) and "\n" not in str(ei.value)
+    finally:
+        dictstore.set_default_registry(prev)
+
+
+def test_dispatcher_latest_session_hot_swaps_on_publish(registry):
+    _publish(registry, seed=0)
+    (stream,) = _streams(1, 2048)
+    ts = np.arange(2048) * 1e-4
+    spec = cstream.JobSpec(
+        codec="tdic32", egress=True, dictionary="sensor:latest", flush_tuples=512
+    )
+    with cstream.Dispatcher() as d:
+        h = d.open(spec, topic="t0")
+        h.push(stream[:1024], timestamps=ts[:1024])
+        d.run()
+        _publish(registry, seed=1)  # publish -> subscription -> pending swap
+        h.push(stream[1024:], timestamps=ts[1024:])
+        d.run()
+        sess = d.sessions["t0"]
+        rep = sess.report()
+        ids = [f.dict_id for f in sess.egress_frames()]
+    assert rep.dict_swaps == 1
+    assert sorted(set(ids)) == [("sensor", 1), ("sensor", 2)]
+    assert rep.fidelity.within_bound and rep.fidelity.max_abs == 0.0
+
+
+def test_gang_sessions_hot_swap_together_bit_exact(registry):
+    _publish(registry, seed=0)
+    n = 2048
+    streams = _streams(4, n)
+    ts = np.arange(n) * 1e-4
+    spec = cstream.JobSpec(
+        codec="tdic32", egress=True, gang=True,
+        dictionary="sensor:latest", flush_tuples=512,
+    )
+    with cstream.Dispatcher(gang=True) as d:
+        handles = [d.open(spec, topic=f"t{i}") for i in range(4)]
+        for h, st in zip(handles, streams):
+            h.push(st[:1024], timestamps=ts[:1024])
+        d.run()
+        _publish(registry, seed=1)
+        for h, st in zip(handles, streams):
+            h.push(st[1024:], timestamps=ts[1024:])
+        d.run()
+        sessions = [d.sessions[f"t{i}"] for i in range(4)]
+        sigs = {s.signature for s in sessions}
+        assert len(sigs) == 1  # swapped sessions re-key to the SAME gang
+        for s, st in zip(sessions, streams):
+            rep = s.report()
+            assert rep.dict_swaps == 1
+            assert rep.fidelity.within_bound and rep.fidelity.max_abs == 0.0
+            ids = [f.dict_id for f in s.egress_frames()]
+            assert set(ids) == {("sensor", 1), ("sensor", 2)}
+
+
+# -------------------------------------------------------------- calibration --
+def test_calibrated_vmax_uses_magnitude():
+    s = -1000.0 * np.ones(64)
+    assert calibrated_kwargs("leb128_nuq", s)["vmax"] == 1000.0
+
+
+def test_calibrated_tdic32_sizes_table_to_cardinality():
+    few = np.arange(100, dtype=np.uint32)
+    many = np.random.default_rng(0).integers(0, 1 << 31, 60000, np.uint64)
+    assert calibrated_kwargs("tdic32", few) == {"idx_bits": 8}
+    assert calibrated_kwargs("tdic32", many.astype(np.uint32)) == {"idx_bits": 16}
+    assert calibrated_kwargs("tdic32", np.empty(0)) == {}

@@ -490,3 +490,90 @@ def test_tier_switch_gang_waves_regroup():
     # both the cheap and the heavy dispatch signatures ganged all 3 sessions
     multi = [st_ for st_ in rep.dispatch_stats.values() if st_.max_wave == 3]
     assert len(multi) >= 2, {k: v.max_wave for k, v in rep.dispatch_stats.items()}
+
+
+# ---------------------------------------------------------- dictionary grid --
+# DESIGN.md §17: a trained per-topic dictionary seeds tdic32's table; every
+# frame declares the (topic, version) it was encoded under, so a collector
+# that never saw the session decodes by resolving the id through its
+# registry. The grid crosses dictionary on/off x hot-swap-mid-stream x
+# length corners (empty and ragged segments on either side of the swap),
+# asserting decode identity each way — and that dictionary-OFF jobs keep
+# emitting frames byte-identical to the pre-dictionary wire layout even
+# while seeded jobs run in the same process.
+from repro.core import dictstore
+from repro.core.pipeline import DecompressionPipeline
+
+DICT_IDX_BITS = 10
+
+#: (pre-swap segment length, post-swap segment length): empty, single tuple,
+#: sub-alignment and ragged multi-block around the hot-swap boundary
+DICT_LENGTH_PAIRS = [(0, 1), (1, 931), (7, 257), (512, 512)]
+
+
+@pytest.fixture
+def dict_registry():
+    """Fresh default registry with sensor:v1/v2 published (distinct seeds)."""
+    reg = dictstore.DictRegistry()
+    prev = dictstore.set_default_registry(reg)
+    rng = np.random.default_rng(55)
+    for _ in range(2):
+        sample = ((rng.zipf(1.3, 4096) - 1) % 400).astype(np.uint32) * np.uint32(97)
+        reg.publish(dictstore.train_dict(sample, idx_bits=DICT_IDX_BITS, topic="sensor"))
+    yield reg
+    dictstore.set_default_registry(prev)
+
+
+def _dict_spec(dictionary=None) -> "cstream.JobSpec":
+    return cstream.JobSpec(
+        codec="tdic32", params={"idx_bits": DICT_IDX_BITS},
+        micro_batch_bytes=2048, lanes=4, egress=True, dictionary=dictionary,
+    )
+
+
+@pytest.mark.parametrize("swap", [False, True])
+@pytest.mark.parametrize("pair_idx", range(len(DICT_LENGTH_PAIRS)))
+def test_dict_roundtrip_grid(dict_registry, swap, pair_idx):
+    """Seeded segments (with and without a mid-stream hot-swap to v2) decode
+    bit-exact both through the session's own fidelity check AND through a
+    fresh unseeded pipeline that resolves each frame's declared dict_id."""
+    n_pre, n_post = DICT_LENGTH_PAIRS[pair_idx]
+    segs = [gen_values("runs", n_pre, 61), gen_values("walk", n_post, 62)]
+    v2 = dict_registry.get("sensor", 2)
+    with cstream.open(_dict_spec("sensor:v1")) as h:
+        h.push(segs[0]).flush()
+        if swap:
+            h.swap_dictionary(v2)
+        h.push(segs[1]).flush()
+        frames = h.frames()
+        rep = h.report()
+    assert rep.fidelity is not None and rep.fidelity.bit_exact
+    want_ids = [("sensor", 1), ("sensor", 2 if swap else 1)]
+    assert [f.dict_id for f in frames] == want_ids
+    # collector-side replay: unseeded codec, registry-resolved seeds
+    plan = cstream.negotiate(_dict_spec())
+    decomp = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+    for frame, seg in zip(frames, segs):
+        buf = frame.to_bytes()
+        version = int(np.frombuffer(buf[:8], "<u4")[1])
+        assert version & bits.FEATURE_DICT  # seeded frames raise the bit
+        np.testing.assert_array_equal(
+            decomp.decompress(bits.Frame.from_bytes(buf)).values, seg
+        )
+
+
+@pytest.mark.parametrize("codec", ("tdic32", "leb128", "rle"))
+def test_dict_off_frames_stay_byte_identical(dict_registry, codec, pair_idx=2):
+    """Dictionary-OFF jobs — including unseeded tdic32 — keep the exact
+    pre-dictionary wire bytes (version word 1, no feature bits, no dict-id
+    section) even with a live registry in the process."""
+    n_pre, n_post = DICT_LENGTH_PAIRS[pair_idx]
+    for n, seed in ((n_pre, 63), (n_post, 64)):
+        values = gen_values("runs", n, seed)
+        with cstream.open(_spec_for(codec)) as h:
+            seg = h.push(values).flush()
+        buf = seg.frame.to_bytes()
+        assert int(np.frombuffer(buf[:8], "<u4")[1]) == bits.FRAME_VERSION
+        back = bits.Frame.from_bytes(buf)
+        assert back.dict_id is None and back.n_valid == n
+        assert back.to_bytes() == buf
