@@ -36,6 +36,7 @@ MODULES = [
     "bench_fleet",             # beyond-paper: multi-device sharded gang waves
     "bench_adaptive",          # beyond-paper: adaptive tier controller sweep
     "bench_dict",              # beyond-paper: per-topic trained dictionaries
+    "bench_chaos",             # beyond-paper: fault-injection chaos drill
     "bench_roofline",          # dry-run aggregation
 ]
 
@@ -45,6 +46,8 @@ MODULES = [
 #: bench_rans's claims raise: ratio uplift, bounded cost, exact roundtrip).
 #: bench_fleet is NOT here: it re-enters itself in subprocesses with
 #: simulated device counts, so CI runs it in its own `fleet` job.
+#: bench_chaos is NOT here either: CI runs it in its own `chaos` job
+#: alongside the fault-injection test grid.
 SMOKE_MODULES = [
     "bench_execution",
     "bench_server",

@@ -23,7 +23,7 @@ def list_codecs() -> int:
 
     cols = [
         "name", "table1", "wire", "lossy", "stateful", "kind", "scope",
-        "maskable", "aligned", "entropy", "dict", "bound", "params",
+        "maskable", "aligned", "entropy", "dict", "integrity", "bound", "params",
     ]
     rows = []
     for c in cstream.capabilities():
@@ -33,6 +33,7 @@ def list_codecs() -> int:
             "wire": str(c.wire_id) if c.wire_id is not None else "-",
             "entropy": ",".join(c.entropy) or "-",
             "dict": "yes" if c.state_kind == "dictionary" else "-",
+            "integrity": ",".join(c.integrity) or "-",
             "lossy": "lossy" if c.lossy else "lossless",
             "stateful": "yes" if c.stateful else "no",
             "kind": c.state_kind,
@@ -121,6 +122,8 @@ def smoke() -> int:
         failures.append("entropy")
     if _dict_smoke():
         failures.append("dict")
+    if _chaos_smoke():
+        failures.append("chaos")
     return 1 if failures else 0
 
 
@@ -202,6 +205,56 @@ def _dict_smoke() -> int:
         return 1
     finally:
         dictstore.set_default_registry(prev)
+
+
+def _chaos_smoke() -> int:
+    """Hardened-wire gate (DESIGN.md §18): negotiate a CRC-protected job,
+    roundtrip it bit-exact through the collector ingest path, then corrupt
+    one byte on the wire — the decoder must refuse with a single-line
+    FrameIntegrityError, quarantine, and resume exactly after reset."""
+    import numpy as np
+
+    from repro import cstream
+    from repro.core import bits
+    from repro.core.pipeline import DecompressionPipeline
+
+    try:
+        try:  # integrity without egress must be refused, on one line
+            cstream.negotiate(cstream.JobSpec(codec="rle", integrity="crc32c"))
+        except cstream.NegotiationError as exc:
+            assert "\n" not in str(exc), "multi-line NegotiationError"
+        else:
+            raise AssertionError("integrity without egress negotiated")
+        spec = cstream.JobSpec(
+            codec="tcomp32", egress=True, integrity="crc32c", micro_batch_bytes=2048
+        )
+        plan = cstream.negotiate(spec)
+        assert plan.integrity is not None and plan.integrity.kind == "crc32c"
+        rng = np.random.default_rng(5)
+        values = np.repeat(rng.integers(0, 4096, size=512).astype(np.uint32), 4)
+        with cstream.open(spec) as h:
+            h.push(values).flush()
+            frames = h.frames()
+        dec = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+        wire = frames[0].to_bytes()
+        bad = bytearray(wire)
+        bad[len(bad) // 2] ^= 0x40
+        try:
+            dec.ingest(bytes(bad))
+        except bits.FrameIntegrityError as exc:
+            assert "\n" not in str(exc), "multi-line FrameIntegrityError"
+        else:
+            raise AssertionError("corrupt CRC frame decoded")
+        assert dec.quarantined is not None
+        dec.reset_quarantine()
+        got = dec.ingest(wire).values  # retransmit path: exact after reset
+        assert np.array_equal(got, values)
+        print(f"  [OK] chaos: crc32c roundtrip, corrupt byte refused + "
+              f"quarantined, wire {len(wire)}B")
+        return 0
+    except Exception as exc:  # noqa: BLE001 — same reporting as the codec loop
+        print(f"  [FAIL] chaos: {type(exc).__name__}: {exc}")
+        return 1
 
 
 def _fleet_smoke() -> int:
@@ -287,6 +340,10 @@ def main(argv=None) -> int:
         "--smoke", action="store_true",
         help="API-stability smoke over all ten codecs (CI gate)",
     )
+    ap.add_argument(
+        "--chaos", action="store_true",
+        help="hardened-wire smoke: CRC roundtrip + corruption quarantine gate",
+    )
     ap.add_argument("--compress", metavar="CODEC", help="compress a dataset stream")
     ap.add_argument("--dataset", default="micro", help="dataset name (default: micro)")
     ap.add_argument("-n", type=int, default=1 << 16, help="tuples to stream")
@@ -298,6 +355,8 @@ def main(argv=None) -> int:
         return list_dicts()
     if args.smoke:
         return smoke()
+    if args.chaos:
+        return _chaos_smoke()
     if args.compress:
         return compress(args.compress, args.dataset, args.n)
     ap.print_help()

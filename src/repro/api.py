@@ -97,6 +97,7 @@ __all__ = [
     "Plan",
     "CodecCapability",
     "EntropyCapability",
+    "IntegrityCapability",
     "DictCapability",
     "DictRegistry",
     "TrainedDict",
@@ -203,6 +204,12 @@ class JobSpec:
     #: dictionary-state codec (tdic32); resolved against the process
     #: default `dictstore` registry at negotiation (DESIGN.md §17)
     dictionary: Optional[str] = None
+    #: frame integrity protection: "crc32c" appends per-section CRC32C
+    #: words to every egress frame (header, counts, dict-id, metadata,
+    #: payload — DESIGN.md §18) so collectors detect corruption before
+    #: decode; None ships the historical unprotected layout byte-identically.
+    #: Requires egress — integrity lives on the wire, not in the executor
+    integrity: Optional[str] = None
 
     # ------------------------------------------------------------ validation
     def __post_init__(self) -> None:
@@ -228,6 +235,11 @@ class JobSpec:
             raise _err(f"JobSpec.devices must be an int >= 0 (0 = dispatcher-local), got {self.devices!r}")
         if self.entropy not in (None, "rans"):
             raise _err(f"JobSpec.entropy must be None or 'rans', got {self.entropy!r}")
+        if self.integrity is not None and self.integrity not in bits.INTEGRITY_KINDS:
+            raise _err(
+                f"JobSpec.integrity must be None or one of "
+                f"{', '.join(map(repr, bits.INTEGRITY_KINDS))}, got {self.integrity!r}"
+            )
         if not isinstance(self.adaptive, bool):
             raise _err(f"JobSpec.adaptive must be a bool, got {self.adaptive!r}")
         if self.dictionary is not None:
@@ -297,6 +309,7 @@ class JobSpec:
             "arrival_rate_tps": self.arrival_rate_tps,
             "devices": self.devices,
             "dictionary": self.dictionary,
+            "integrity": self.integrity,
         }
 
     @classmethod
@@ -406,6 +419,10 @@ class CodecCapability:
     #: operates on serialized wire sections, so every codec with a wire id
     #: gets it for free; codecs without egress support offer none.
     entropy: Tuple[str, ...] = ()
+    #: frame integrity kinds this codec's frames compose with (DESIGN.md
+    #: §18) — like entropy, a property of the wire layer: every codec with
+    #: a wire id protects for free, no-wire codecs offer none.
+    integrity: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -416,6 +433,15 @@ class EntropyCapability:
     lanes: int  # interleaved decoder lanes per chunk
     prob_bits: int  # frequency-table denominator = 2**prob_bits
     chunk_bytes: int  # bytes per independently-decodable chunk
+
+
+@dataclasses.dataclass(frozen=True)
+class IntegrityCapability:
+    """The negotiated frame-integrity protection (DESIGN.md §18)."""
+
+    kind: str  # "crc32c"
+    sections: Tuple[str, ...]  # wire sections covered, in trailer order
+    trailer_bytes: int  # fixed per-frame wire overhead
 
 
 @dataclasses.dataclass(frozen=True)
@@ -464,6 +490,9 @@ def capability(name: str) -> CodecCapability:
         accepted_params=tuple(accepted_params(name)),
         default_error_bound=inst.error_bound(),
         entropy=("rans",) if WIRE_CODEC_IDS.get(name) is not None else (),
+        integrity=(
+            bits.INTEGRITY_KINDS if WIRE_CODEC_IDS.get(name) is not None else ()
+        ),
     )
     _CAP_CACHE[key] = cap
     return cap
@@ -504,6 +533,9 @@ class Plan:
     #: resolved trained dictionary (spec.dictionary set); the Plan's codec
     #: instance is already seeded with it
     dictionary: Optional[DictCapability] = None
+    #: resolved frame-integrity protection (spec.integrity="crc32c");
+    #: None = historical unprotected wire layout
+    integrity: Optional[IntegrityCapability] = None
 
     @property
     def block_tuples(self) -> int:
@@ -569,6 +601,18 @@ def negotiate(spec: JobSpec, registry: Optional[DictRegistry] = None) -> Plan:
         raise _err(
             f"codec {spec.codec!r} offers no {spec.entropy!r} entropy stage "
             f"(its frames have no wire sections to code); drop entropy"
+        )
+    if spec.integrity is not None and not spec.egress:
+        raise _err(
+            f"JobSpec.integrity={spec.integrity!r} protects serialized wire "
+            "sections, which only exist on egress frames; set egress=True "
+            "or drop integrity"
+        )
+    if spec.integrity is not None and spec.integrity not in cap.integrity:
+        raise _err(
+            f"codec {spec.codec!r} offers no {spec.integrity!r} frame "
+            "integrity (its frames have no wire sections to protect); "
+            "drop integrity"
         )
     if spec.max_abs_error is not None:
         bound = codec.error_bound()
@@ -655,6 +699,7 @@ def negotiate(spec: JobSpec, registry: Optional[DictRegistry] = None) -> Plan:
         signature = dispatch_signature(
             codec, spec.lanes, capacity // spec.lanes,
             entropy=spec.entropy or "none",
+            integrity=spec.integrity or "none",
         )
     except TypeError as exc:
         if spec.gang:
@@ -687,6 +732,15 @@ def negotiate(spec: JobSpec, registry: Optional[DictRegistry] = None) -> Plan:
         ),
         tiers=tiers,
         dictionary=dict_cap,
+        integrity=(
+            IntegrityCapability(
+                kind=spec.integrity,
+                sections=bits._CRC_SECTIONS,
+                trailer_bytes=4 * bits._CRC_TRAILER_WORDS,
+            )
+            if spec.integrity is not None
+            else None
+        ),
     )
 
 
@@ -1423,7 +1477,8 @@ class Dispatcher:
     sessions, and a device loss mid-wave re-meshes onto the survivors and
     replays the wave from its members' last committed FlushRecords —
     `fault_injector`/`heartbeat` wire the chaos-drill and liveness hooks
-    through to the server core."""
+    through to the server core, and `breaker` (True, or CircuitBreaker
+    kwargs) turns on per-signature admission breakers (DESIGN.md §18)."""
 
     def __init__(
         self,
@@ -1438,6 +1493,7 @@ class Dispatcher:
         mesh: Optional[int] = None,
         fault_injector: Any = None,
         heartbeat: Any = None,
+        breaker: Any = None,
     ):
         if profile not in PROFILES:
             raise _err(
@@ -1457,6 +1513,7 @@ class Dispatcher:
                 mesh=mesh,
                 fault_injector=fault_injector,
                 heartbeat=heartbeat,
+                breaker=breaker,
             )
         except NegotiationError:
             raise

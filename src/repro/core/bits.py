@@ -12,7 +12,7 @@ package never requires jax_enable_x64.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -243,6 +243,227 @@ def zigzag_decode(z: jax.Array) -> jax.Array:
 
 
 # ======================================================================
+# CRC-32C (Castagnoli) — frame integrity checksums (DESIGN.md §18)
+#
+# zlib/binascii only ship the ISO-HDLC polynomial, so the Castagnoli CRC
+# is implemented here: a 256-entry reflected table drives both a scalar
+# byte loop (small buffers) and a chunk-parallel numpy path (large ones).
+# The parallel path exploits that the table update is GF(2)-linear in the
+# register: split the buffer into 2^k equal chunks, run every chunk's
+# table loop in lock-step over the byte columns, then fold adjacent
+# remainders with cached zero-byte shift operators
+# (`rem(A||B) = S_{|B|}(rem(A)) ^ rem(B)`), and finally add the affine
+# init/xorout terms (`crc = S_len(0xFFFFFFFF) ^ rem ^ 0xFFFFFFFF`).
+# ======================================================================
+
+_CRC32C_POLY = 0x82F63B78  # reflected Castagnoli polynomial
+
+
+def _crc32c_make_table() -> np.ndarray:
+    crc = np.arange(256, dtype=np.uint32)
+    for _ in range(8):
+        crc = np.where(crc & 1, (crc >> 1) ^ np.uint32(_CRC32C_POLY), crc >> 1)
+    return crc.astype(np.uint32)
+
+
+_CRC_TABLE: np.ndarray = _crc32c_make_table()
+_CRC_TABLE_LIST: Tuple[int, ...] = tuple(int(x) for x in _CRC_TABLE)
+
+
+def _crc32c_slice_tables() -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Slicing-by-4 tables: T_k advances T_{k-1}'s entries one zero byte."""
+    t0 = _CRC_TABLE
+    tabs = [t0]
+    for _ in range(3):
+        prev = tabs[-1]
+        tabs.append(
+            (
+                (prev >> np.uint32(8))
+                ^ t0[(prev & np.uint32(0xFF)).astype(np.intp)]
+            ).astype(np.uint32)
+        )
+    return tabs[0], tabs[1], tabs[2], tabs[3]
+
+
+_CRC_SLICE_TABLES = _crc32c_slice_tables()
+
+
+def _crc_op_apply(op: np.ndarray, x: int) -> int:
+    """Apply a GF(2)-linear register operator (32 basis images) to x."""
+    r = 0
+    j = 0
+    while x:
+        if x & 1:
+            r ^= int(op[j])
+        x >>= 1
+        j += 1
+    return r
+
+
+def _crc_op_tables(nbytes: int) -> np.ndarray:
+    """The shift-by-`nbytes` operator as 4x256 byte-lookup tables, so it
+    applies to register vectors with 4 gathers instead of 32 bit tests."""
+    tabs = _CRC_OP_TABLE_CACHE.get(nbytes)
+    if tabs is not None:
+        return tabs
+    op = _crc_shift_op(nbytes)
+    bvals = np.arange(256, dtype=np.uint32)
+    tabs = np.zeros((4, 256), np.uint32)
+    for k in range(4):
+        acc = np.zeros(256, np.uint32)
+        for j in range(8):
+            acc ^= np.where((bvals >> np.uint32(j)) & np.uint32(1), op[8 * k + j], np.uint32(0))
+        tabs[k] = acc
+    _CRC_OP_TABLE_CACHE[nbytes] = tabs
+    return tabs
+
+
+def _crc_op_apply_vec(nbytes: int, v: np.ndarray) -> np.ndarray:
+    """Advance every register in `v` past `nbytes` zero bytes (vectorized)."""
+    tabs = _crc_op_tables(nbytes)
+    m = np.uint32(0xFF)
+    return (
+        tabs[0][(v & m).astype(np.intp)]
+        ^ tabs[1][((v >> np.uint32(8)) & m).astype(np.intp)]
+        ^ tabs[2][((v >> np.uint32(16)) & m).astype(np.intp)]
+        ^ tabs[3][(v >> np.uint32(24)).astype(np.intp)]
+    )
+
+
+def _crc_op_compose(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Operator composition a∘b (apply b first, then a)."""
+    return np.array([_crc_op_apply(a, int(b[j])) for j in range(32)], np.uint32)
+
+
+def _crc_shift1() -> np.ndarray:
+    # register image of one zero byte: r -> (r >> 8) ^ T[r & 0xFF]
+    basis = (np.uint32(1) << np.arange(32, dtype=np.uint32)).astype(np.uint32)
+    return ((basis >> np.uint32(8)) ^ _CRC_TABLE[basis & np.uint32(0xFF)]).astype(
+        np.uint32
+    )
+
+
+_CRC_SHIFT_CACHE: Dict[int, np.ndarray] = {}
+_CRC_OP_TABLE_CACHE: Dict[int, np.ndarray] = {}
+
+
+def _crc_shift_op(nbytes: int) -> np.ndarray:
+    """Operator advancing the CRC register past `nbytes` zero bytes."""
+    op = _CRC_SHIFT_CACHE.get(nbytes)
+    if op is not None:
+        return op
+    if nbytes == 0:
+        op = (np.uint32(1) << np.arange(32, dtype=np.uint32)).astype(np.uint32)
+    elif nbytes == 1:
+        op = _crc_shift1()
+    elif nbytes % 2 == 0:
+        half = _crc_shift_op(nbytes // 2)
+        op = _crc_op_compose(half, half)
+    else:
+        op = _crc_op_compose(_crc_shift_op(nbytes - 1), _crc_shift1())
+    _CRC_SHIFT_CACHE[nbytes] = op
+    return op
+
+
+def _crc32c_update(crc: int, data: bytes) -> int:
+    """Raw register update (no init/xorout) over `data`."""
+    tab = _CRC_TABLE_LIST
+    for b in data:
+        crc = (crc >> 8) ^ tab[(crc ^ b) & 0xFF]
+    return crc
+
+
+def crc32c(data: Union[bytes, bytearray, memoryview, np.ndarray]) -> int:
+    """CRC-32C (Castagnoli) of `data`; crc32c(b"123456789") == 0xE3069283.
+
+    Buffers up to 2 KiB take the scalar table loop; larger ones run the
+    chunk-parallel numpy path (identical result, validated in tests).
+    """
+    if isinstance(data, np.ndarray):
+        b = np.ascontiguousarray(data).view(np.uint8).ravel()
+    else:
+        b = np.frombuffer(data, np.uint8)
+    n = int(b.size)
+    if n == 0:
+        return 0
+    if n <= 2048:
+        return _crc32c_update(0xFFFFFFFF, b.tobytes()) ^ 0xFFFFFFFF
+    # front-pad with zero bytes — no-ops for the init-0 remainder since
+    # T[0] == 0 — so the chunk count is an exact power of two and the
+    # fold tree stays balanced
+    ncols = 64
+    chunks = (n + ncols - 1) // ncols
+    n_chunks = 1 << (chunks - 1).bit_length()
+    padded = np.zeros(n_chunks * ncols, np.uint8)
+    padded[-n:] = b
+    # slicing-by-4 over contiguous little-endian word columns: 4 bytes per
+    # register step, intp gather indices (uint32 ones gather ~3x slower)
+    words = np.ascontiguousarray(padded.view("<u4").reshape(n_chunks, ncols // 4).T)
+    r = np.zeros(n_chunks, np.uint32)
+    t0, t1, t2, t3 = _CRC_SLICE_TABLES
+    m = np.uint32(0xFF)
+    for j in range(ncols // 4):
+        e = r ^ words[j]
+        r = (
+            t3[(e & m).astype(np.intp)]
+            ^ t2[((e >> np.uint32(8)) & m).astype(np.intp)]
+            ^ t1[((e >> np.uint32(16)) & m).astype(np.intp)]
+            ^ t0[(e >> np.uint32(24)).astype(np.intp)]
+        )
+    span = ncols
+    while r.size > 1:
+        r = _crc_op_apply_vec(span, r[0::2]) ^ r[1::2]
+        span *= 2
+    rem = int(r[0])
+    return _crc_op_apply(_crc_shift_op(n), 0xFFFFFFFF) ^ rem ^ 0xFFFFFFFF
+
+
+# ======================================================================
+# Wire-frame error family (DESIGN.md §18)
+#
+# Every parse/decode failure surfaces as one of these — single-line,
+# actionable, and typed so collectors can choose between resync
+# (truncation/corruption) and rejection (version/feature skew). All are
+# ValueError subclasses: pre-existing callers that catch ValueError keep
+# working unchanged.
+# ======================================================================
+
+
+class FrameError(ValueError):
+    """Base of the wire-frame error family; message is one actionable line."""
+
+
+class FrameTruncatedError(FrameError):
+    """The buffer disagrees with the header-declared layout length."""
+
+
+class FrameHeaderError(FrameError):
+    """Bad magic, unsupported version, or self-inconsistent header fields."""
+
+
+class FrameFeatureError(FrameHeaderError):
+    """The frame uses feature bits this build does not understand."""
+
+
+class FrameIntegrityError(FrameError):
+    """A section's stored CRC32C does not match its serialized bytes."""
+
+
+class FrameDecodeError(FrameError):
+    """The frame parsed but cannot be decoded here (codec/dict mismatch)."""
+
+
+def _check_crc(section: str, stored: int, data: bytes) -> None:
+    got = crc32c(data)
+    if got != stored:
+        raise FrameIntegrityError(
+            f"frame integrity: {section} section CRC32C mismatch (stored "
+            f"0x{stored:08x}, computed 0x{got:08x}); the frame is corrupt — "
+            "discard it and resync"
+        )
+
+
+# ======================================================================
 # Wire format (DESIGN.md §10)
 #
 # A Frame is the self-describing egress unit: header (codec id, block
@@ -267,7 +488,15 @@ _HDR_WORDS = 12
 #: instead of mis-parsing the body they gate.
 FEATURE_ENTROPY = 1 << 16  # body is [counts | entropy blob], not [counts | meta | payload]
 FEATURE_DICT = 1 << 17  # a dict-id blob follows the block counts (trained dictionary)
-_KNOWN_FEATURES = FEATURE_ENTROPY | FEATURE_DICT
+FEATURE_CRC = 1 << 18  # a per-section CRC32C trailer ends the frame (DESIGN.md §18)
+_KNOWN_FEATURES = FEATURE_ENTROPY | FEATURE_DICT | FEATURE_CRC
+
+#: serialized sections covered by the integrity trailer, in layout order.
+#: On entropy frames the "meta" slot covers the blob and "payload" is empty;
+#: absent sections checksum the empty string (CRC 0).
+_CRC_SECTIONS = ("header", "counts", "dict", "meta", "payload")
+_CRC_TRAILER_WORDS = len(_CRC_SECTIONS)
+INTEGRITY_KINDS = ("crc32c",)
 
 
 def _pack_dict_id(dict_id: Tuple[str, int]) -> np.ndarray:
@@ -371,6 +600,13 @@ class Frame:
     #: registry's matching TrainedDict instead of the cold table. `None`
     #: keeps the frame byte-identical to pre-dictionary builds.
     dict_id: Optional[Tuple[str, int]] = None
+    #: integrity kind ("crc32c" or None). When set, the frame raises
+    #: FEATURE_CRC and `to_bytes` appends a 5-word trailer of per-section
+    #: CRC32C checksums (header, counts, dict-id, meta/blob, payload);
+    #: `from_bytes` verifies every section before trusting the body and
+    #: re-stamps the field so reserialization round-trips. `None` keeps
+    #: the frame byte-identical to integrity-off builds.
+    integrity: Optional[str] = None
 
     # ------------------------------------------------------------ shapes --
     @property
@@ -405,10 +641,13 @@ class Frame:
         """Total serialized size (header + metadata + payload, or header +
         entropy blob), computed in O(1) — must equal len(self.to_bytes())."""
         dw = _dict_id_words(self.dict_id)
+        cw = _CRC_TRAILER_WORDS if self.integrity is not None else 0
         if self.entropy is not None:
-            return 4 * (_HDR_WORDS + 2 * self.n_blocks + dw + self.entropy.size)
+            return 4 * (_HDR_WORDS + 2 * self.n_blocks + dw + self.entropy.size + cw)
         meta_words = (7 * self.n_symbols + 31) // 32
-        return 4 * (_HDR_WORDS + 2 * self.n_blocks + dw + meta_words + self.payload.size)
+        return 4 * (
+            _HDR_WORDS + 2 * self.n_blocks + dw + meta_words + self.payload.size + cw
+        )
 
     # ------------------------------------------------------- entropy stage --
     def apply_entropy(self) -> "Frame":
@@ -430,45 +669,39 @@ class Frame:
         return self
 
     # ----------------------------------------------------------- serialize --
-    def to_bytes(self) -> bytes:
+    def _section_bytes(self) -> Tuple[bytes, bytes, bytes, bytes, bytes]:
+        """The five serialized sections (header, counts, dict, meta/blob,
+        payload) as little-endian bytes; absent sections are empty."""
         nb = self.n_blocks
-        dict_words = (
-            [] if self.dict_id is None else [_pack_dict_id(self.dict_id)]
+        dict_sec = (
+            b"" if self.dict_id is None
+            else _pack_dict_id(self.dict_id).astype("<u4").tobytes()
         )
         dict_bit = FEATURE_DICT if self.dict_id is not None else 0
+        crc_bit = FEATURE_CRC if self.integrity is not None else 0
+        counts_sec = (
+            np.ascontiguousarray(self.block_bits, np.uint32).astype("<u4").tobytes()
+            + np.ascontiguousarray(self.block_valid, np.uint32).astype("<u4").tobytes()
+        )
         if self.entropy is not None:
-            header = np.array(
-                [
-                    FRAME_MAGIC,
-                    FRAME_VERSION | FEATURE_ENTROPY | dict_bit,
-                    self.codec_id,
-                    self.lanes,
-                    self.per_lane,
-                    self.n_full,
-                    self.tail_per_lane,
-                    self.flush_slots,
-                    self.n_valid,
-                    nb,
-                    self.entropy.size,
-                    0,  # no raw payload section follows
-                ],
-                np.uint32,
+            feature_bits = FEATURE_ENTROPY | dict_bit | crc_bit
+            meta_size, payload_size = self.entropy.size, 0
+            meta_sec = np.ascontiguousarray(self.entropy, np.uint32).astype("<u4").tobytes()
+            payload_sec = b""
+        else:
+            meta = self.packed_meta
+            if meta is None:
+                meta = _pack_bitlens(self.bitlen)
+            feature_bits = dict_bit | crc_bit
+            meta_size, payload_size = meta.size, self.payload.size
+            meta_sec = meta.astype("<u4").tobytes()
+            payload_sec = (
+                np.ascontiguousarray(self.payload, np.uint32).astype("<u4").tobytes()
             )
-            parts = [
-                header,
-                np.ascontiguousarray(self.block_bits, np.uint32),
-                np.ascontiguousarray(self.block_valid, np.uint32),
-                *dict_words,
-                np.ascontiguousarray(self.entropy, np.uint32),
-            ]
-            return b"".join(p.astype("<u4").tobytes() for p in parts)
-        meta = self.packed_meta
-        if meta is None:
-            meta = _pack_bitlens(self.bitlen)
         header = np.array(
             [
                 FRAME_MAGIC,
-                FRAME_VERSION | dict_bit,
+                FRAME_VERSION | feature_bits,
                 self.codec_id,
                 self.lanes,
                 self.per_lane,
@@ -477,45 +710,79 @@ class Frame:
                 self.flush_slots,
                 self.n_valid,
                 nb,
-                meta.size,
-                self.payload.size,
+                meta_size,
+                payload_size,
             ],
             np.uint32,
         )
-        parts = [
-            header,
-            np.ascontiguousarray(self.block_bits, np.uint32),
-            np.ascontiguousarray(self.block_valid, np.uint32),
-            *dict_words,
-            meta,
-            np.ascontiguousarray(self.payload, np.uint32),
-        ]
-        return b"".join(p.astype("<u4").tobytes() for p in parts)
+        return (
+            header.astype("<u4").tobytes(),
+            counts_sec,
+            dict_sec,
+            meta_sec,
+            payload_sec,
+        )
+
+    def to_bytes(self) -> bytes:
+        if self.integrity is not None and self.integrity not in INTEGRITY_KINDS:
+            raise ValueError(
+                f"unknown frame integrity kind {self.integrity!r} "
+                f"(known: {', '.join(INTEGRITY_KINDS)})"
+            )
+        secs = self._section_bytes()
+        if self.integrity is None:
+            return b"".join(secs)
+        trailer = np.array([crc32c(s) for s in secs], np.uint32)
+        return b"".join(secs) + trailer.astype("<u4").tobytes()
 
     @classmethod
     def from_bytes(cls, buf: bytes) -> "Frame":
+        buf = bytes(buf)
+        if len(buf) < 4 * _HDR_WORDS:
+            raise FrameTruncatedError(
+                f"frame truncated: {len(buf)} bytes is shorter than the "
+                f"{4 * _HDR_WORDS}-byte header; wait for more data or resync"
+            )
+        if len(buf) % 4:
+            raise FrameTruncatedError(
+                f"frame truncated: {len(buf)} bytes is not uint32-word-aligned; "
+                "the tail was cut mid-word — resync to the next header"
+            )
         head = np.frombuffer(buf[: 4 * _HDR_WORDS], dtype="<u4")
-        if head.size < _HDR_WORDS or int(head[0]) != FRAME_MAGIC:
-            raise ValueError("not a CStream frame (bad magic)")
+        if int(head[0]) != FRAME_MAGIC:
+            raise FrameHeaderError("not a CStream frame (bad magic)")
         version = int(head[1]) & 0xFFFF
         features = int(head[1]) & 0xFFFF0000
         if version != FRAME_VERSION:
-            raise ValueError(f"unsupported frame version {version}")
+            raise FrameHeaderError(f"unsupported frame version {version}")
         unknown = features & ~_KNOWN_FEATURES
         if unknown:
-            raise ValueError(
+            raise FrameFeatureError(
                 f"frame uses unknown feature bits 0x{unknown:08x} (this "
-                f"build understands 0x{_KNOWN_FEATURES:08x}: entropy, dict); "
-                "decode with a newer build"
+                f"build understands 0x{_KNOWN_FEATURES:08x}: entropy, dict, "
+                "crc); decode with a newer build"
             )
         has_entropy = bool(features & FEATURE_ENTROPY)
         has_dict = bool(features & FEATURE_DICT)
+        has_crc = bool(features & FEATURE_CRC)
         nb, meta_words, payload_words = int(head[9]), int(head[10]), int(head[11])
+        crc_words = _CRC_TRAILER_WORDS if has_crc else 0
         body = np.frombuffer(buf[4 * _HDR_WORDS :], dtype="<u4")
+        if has_crc:
+            # the header CRC is verified FIRST, from the fixed-size trailer
+            # at the buffer's end, so a flipped header bit reports as
+            # corruption instead of deriving nonsense section sizes below
+            if body.size < crc_words:
+                raise FrameTruncatedError(
+                    "frame truncated: the integrity trailer is missing; "
+                    "wait for more data or resync"
+                )
+            _check_crc("header", int(body[body.size - crc_words]), buf[: 4 * _HDR_WORDS])
+        sec_words = body.size - crc_words
         # with FEATURE_ENTROPY, header word 10 is the blob size and word 11
         # must be zero: the raw sections are inside the blob
         if has_entropy and payload_words != 0:
-            raise ValueError(
+            raise FrameHeaderError(
                 "frame header inconsistent: entropy frames carry no raw "
                 "payload section"
             )
@@ -524,19 +791,45 @@ class Frame:
         if has_dict:
             # the dict-id section self-sizes via its leading word, sitting
             # between the block counts and the meta/blob sections
-            if body.size < 2 * nb + 3:
-                raise ValueError("frame length mismatch")
+            if sec_words < 2 * nb + 3:
+                raise FrameTruncatedError(
+                    "frame length mismatch: body too short for the declared "
+                    "dict-id section"
+                )
             dict_words = int(body[2 * nb])
-            tlen = int(body[2 * nb + 2]) if body.size > 2 * nb + 2 else -1
+            tlen = int(body[2 * nb + 2]) if sec_words > 2 * nb + 2 else -1
             if dict_words < 3 or dict_words != 3 + (tlen + 3) // 4:
-                raise ValueError("frame header inconsistent: dict-id section")
-            dict_id = _unpack_dict_id(body[2 * nb : 2 * nb + dict_words])
-        if body.size != 2 * nb + dict_words + meta_words + payload_words:
-            raise ValueError("frame length mismatch")
+                raise FrameHeaderError("frame header inconsistent: dict-id section")
+        if sec_words != 2 * nb + dict_words + meta_words + payload_words:
+            raise FrameTruncatedError(
+                f"frame length mismatch: body carries {sec_words} words, the "
+                f"header declares {2 * nb + dict_words + meta_words + payload_words}; "
+                "the frame was truncated or the stream lost sync"
+            )
+        if has_crc:
+            # remaining sections, each against its stored trailer word, before
+            # any of their content is trusted
+            base = 4 * _HDR_WORDS
+            bounds = [2 * nb, dict_words, meta_words, payload_words]
+            trailer = body[sec_words:]
+            off = base
+            for name, words, stored in zip(
+                _CRC_SECTIONS[1:], bounds, trailer[1:]
+            ):
+                _check_crc(name, int(stored), buf[off : off + 4 * words])
+                off += 4 * words
+        if has_dict:
+            try:
+                dict_id = _unpack_dict_id(body[2 * nb : 2 * nb + dict_words])
+            except UnicodeDecodeError as exc:
+                raise FrameHeaderError(
+                    "frame header inconsistent: dict-id topic is not valid "
+                    "utf-8; the frame is corrupt — discard it and resync"
+                ) from exc
         block_bits = body[:nb].astype(np.uint32)
         block_valid = body[nb : 2 * nb].astype(np.uint32)
         meta = body[2 * nb + dict_words : 2 * nb + dict_words + meta_words].astype(np.uint32)
-        payload = body[2 * nb + dict_words + meta_words :].astype(np.uint32)
+        payload = body[2 * nb + dict_words + meta_words : sec_words].astype(np.uint32)
         frame = cls(
             codec_id=int(head[2]),
             lanes=int(head[3]),
@@ -550,12 +843,13 @@ class Frame:
             bitlen=np.zeros(0, np.int32),
             payload=payload,
             dict_id=dict_id,
+            integrity="crc32c" if has_crc else None,
         )
         # header self-consistency: every derived size must match the declared
         # section lengths, so a tampered/corrupt header is rejected here (the
-        # parser's ValueError contract) instead of escaping as an IndexError
+        # parser's FrameError contract) instead of escaping as an IndexError
         if frame.n_blocks != nb:
-            raise ValueError(
+            raise FrameHeaderError(
                 f"frame header inconsistent: {nb} blocks declared, shape "
                 f"fields imply {frame.n_blocks}"
             )
@@ -563,16 +857,25 @@ class Frame:
             from repro.core import entropy as _entropy
 
             blob = meta  # word-10 section is the blob on this path
-            meta, frame.payload = _entropy.decode_blob(
-                blob,
-                (7 * frame.n_symbols + 31) // 32,
-                int(frame.block_words().sum()),
-            )
+            try:
+                meta, frame.payload = _entropy.decode_blob(
+                    blob,
+                    (7 * frame.n_symbols + 31) // 32,
+                    int(frame.block_words().sum()),
+                )
+            except FrameError:
+                raise
+            except Exception as exc:
+                msg = str(exc).replace("\n", " ")
+                raise FrameDecodeError(
+                    f"frame entropy blob undecodable ({type(exc).__name__}: "
+                    f"{msg}); the frame is corrupt — discard it and resync"
+                ) from exc
             frame.entropy = blob
         elif (7 * frame.n_symbols + 31) // 32 != meta_words:
-            raise ValueError("frame header inconsistent: bitlen metadata size")
+            raise FrameHeaderError("frame header inconsistent: bitlen metadata size")
         elif int(frame.block_words().sum()) != payload_words:
-            raise ValueError("frame header inconsistent: payload size")
+            raise FrameHeaderError("frame header inconsistent: payload size")
         frame.bitlen = _unpack_bitlens(meta, frame.n_symbols)
         frame.packed_meta = meta  # reserialization reuses the parsed stream
         return frame
@@ -594,6 +897,7 @@ class Frame:
         payload: np.ndarray,
         bitlen: Optional[np.ndarray] = None,
         packed_meta: Optional[np.ndarray] = None,
+        integrity: Optional[str] = None,
     ) -> "Frame":
         """Zero-copy framing for payloads that arrive already wire-shaped.
 
@@ -621,6 +925,7 @@ class Frame:
                 None if packed_meta is None
                 else np.ascontiguousarray(packed_meta, np.uint32)
             ),
+            integrity=integrity,
         )
         ns = frame.n_symbols
         if bitlen is None:
@@ -654,6 +959,123 @@ class Frame:
                 f"block bit counts imply {int(frame.block_words().sum())}"
             )
         return frame
+
+
+def parse_frame(buf: bytes) -> Frame:
+    """Parse one serialized frame; every failure raises a `FrameError`.
+
+    The collector-side entry point: unlike calling `Frame.from_bytes`
+    directly in older builds, no raw numpy/struct error (misaligned slice,
+    short buffer, corrupt section) ever escapes — body-length mismatches
+    and corruption all surface as single-line, typed, actionable errors."""
+    try:
+        return Frame.from_bytes(buf)
+    except FrameError:
+        raise
+    except Exception as exc:  # defensive: the parser's error contract
+        msg = str(exc).replace("\n", " ")
+        raise FrameError(
+            f"frame unparseable ({type(exc).__name__}: {msg}); "
+            "discard it and resync"
+        ) from exc
+
+
+_MAGIC_BYTES = FRAME_MAGIC.to_bytes(4, "little")
+_MAX_SANE_FRAME_WORDS = 1 << 28  # 1 GiB: anything larger is stream garbage
+
+
+class FrameStream:
+    """Collector-side frame scanner with corruption resync (DESIGN.md §18).
+
+    Feed raw bytes — possibly containing corrupt frames, truncated spans,
+    or interleaved garbage — and `frames()` yields every parseable frame
+    in order. On a bad frame the scanner records the typed error and hunts
+    for the next FRAME_MAGIC occurrence, so one corrupt frame never kills
+    the stream. Each `frames()` call rescans the full buffer from the
+    start and resets `errors` / `resyncs` / `frames_ok`.
+    """
+
+    def __init__(self, buf: bytes = b"") -> None:
+        self._buf = bytearray()
+        self.errors: List[Tuple[int, FrameError]] = []  # (byte offset, error)
+        self.resyncs = 0
+        self.frames_ok = 0
+        if buf:
+            self.feed(buf)
+
+    def feed(self, data: bytes) -> "FrameStream":
+        self._buf += data
+        return self
+
+    def _declared_words(self, off: int) -> Optional[int]:
+        """Total frame length (words) declared by a plausible header at
+        `off`, or None when no sane frame can start there."""
+        buf = self._buf
+        if off + 4 * _HDR_WORDS > len(buf):
+            return None
+        if bytes(buf[off : off + 4]) != _MAGIC_BYTES:
+            return None
+        head = np.frombuffer(bytes(buf[off : off + 4 * _HDR_WORDS]), dtype="<u4")
+        if int(head[1]) & 0xFFFF != FRAME_VERSION:
+            return None
+        features = int(head[1]) & 0xFFFF0000
+        if features & ~_KNOWN_FEATURES:
+            return None
+        nb, meta_words, payload_words = int(head[9]), int(head[10]), int(head[11])
+        total = _HDR_WORDS + 2 * nb + meta_words + payload_words
+        if features & FEATURE_DICT:
+            peek = off + 4 * (_HDR_WORDS + 2 * nb)
+            if peek + 4 > len(buf):
+                return None
+            dict_words = int.from_bytes(buf[peek : peek + 4], "little")
+            if not 3 <= dict_words <= 1 << 16:
+                return None
+            total += dict_words
+        if features & FEATURE_CRC:
+            total += _CRC_TRAILER_WORDS
+        if total > _MAX_SANE_FRAME_WORDS:
+            return None
+        return total
+
+    def frames(self) -> Iterator[Frame]:
+        """Yield the parseable frames, skipping and recording corrupt spans."""
+        self.errors = []
+        self.resyncs = 0
+        self.frames_ok = 0
+        buf, n = self._buf, len(self._buf)
+        off = 0
+        while off + 4 * _HDR_WORDS <= n:
+            words = self._declared_words(off)
+            if words is not None and off + 4 * words <= n:
+                try:
+                    frame = parse_frame(bytes(buf[off : off + 4 * words]))
+                    self.frames_ok += 1
+                    yield frame
+                    off += 4 * words
+                    continue
+                except FrameError as exc:
+                    self.errors.append((off, exc))
+            elif words is not None:
+                self.errors.append((
+                    off,
+                    FrameTruncatedError(
+                        f"frame at byte {off} declares {4 * words} bytes but "
+                        f"only {n - off} remain; the tail was truncated"
+                    ),
+                ))
+            elif bytes(buf[off : off + 4]) == _MAGIC_BYTES:
+                self.errors.append((
+                    off,
+                    FrameHeaderError(
+                        f"implausible frame header at byte {off}; scanning on"
+                    ),
+                ))
+            # resync: hunt for the next magic occurrence past this offset
+            nxt = buf.find(_MAGIC_BYTES, off + 1)
+            if nxt < 0:
+                break
+            off = nxt
+            self.resyncs += 1
 
 
 def build_frame(

@@ -26,6 +26,7 @@ import json
 import os
 import re
 import threading
+import zipfile
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
@@ -38,11 +39,23 @@ __all__ = [
     "TrainedDict",
     "train_dict",
     "DictRegistry",
+    "DictStoreError",
     "default_registry",
     "set_default_registry",
     "resolve",
     "parse_dict_ref",
 ]
+
+
+class DictStoreError(KeyError):
+    """Single-line dictionary-store failure naming topic/version/path.
+
+    A KeyError subclass so pre-existing handlers around ``get``/``resolve``
+    keep working; ``str()`` returns the bare message (KeyError's default
+    repr-quotes it)."""
+
+    def __str__(self) -> str:
+        return str(self.args[0]) if self.args else ""
 
 _REF_RE = re.compile(r"^([A-Za-z0-9_.\-]+)(?::(latest|v?\d+))?$")
 
@@ -226,10 +239,21 @@ class DictRegistry:
         path = self._index_path()
         if not os.path.exists(path):
             return
-        with open(path) as f:
-            data = json.load(f)
-        self._index = {t: sorted(int(v) for v in vs) for t, vs in data.get("topics", {}).items()}
-        self._pins = {t: int(v) for t, v in data.get("pins", {}).items()}
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            self._index = {
+                t: sorted(int(v) for v in vs)
+                for t, vs in data.get("topics", {}).items()
+            }
+            self._pins = {t: int(v) for t, v in data.get("pins", {}).items()}
+        except (json.JSONDecodeError, OSError, ValueError, TypeError, AttributeError) as exc:
+            msg = str(exc).replace("\n", " ")
+            raise DictStoreError(
+                f"dictionary registry index {path} is unreadable "
+                f"({type(exc).__name__}: {msg}); repair or delete it and "
+                "republish the topic dictionaries"
+            ) from exc
 
     def _save_index(self) -> None:
         if self.root is None:
@@ -255,19 +279,27 @@ class DictRegistry:
         assert self.root is not None
         path = self._npz_path(topic, version)
         if not os.path.exists(path):
-            raise KeyError(
+            raise DictStoreError(
                 f"registry index lists dictionary '{topic}:v{version}' but {path} is missing; "
                 f"republish it or repair the registry root"
             )
-        with np.load(path) as z:
-            return TrainedDict(
-                topic=topic,
-                version=version,
-                idx_bits=int(z["idx_bits"]),
-                table=z["table"],
-                valid=z["valid"],
-                ts=z["ts"],
-            )
+        try:
+            with np.load(path) as z:
+                return TrainedDict(
+                    topic=topic,
+                    version=version,
+                    idx_bits=int(z["idx_bits"]),
+                    table=z["table"],
+                    valid=z["valid"],
+                    ts=z["ts"],
+                )
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as exc:
+            msg = str(exc).replace("\n", " ")
+            raise DictStoreError(
+                f"dictionary '{topic}:v{version}' failed to load from {path} "
+                f"({type(exc).__name__}: {msg}); republish it or repair the "
+                "registry root"
+            ) from exc
 
     # ---- residency --------------------------------------------------------
 
@@ -315,6 +347,7 @@ class DictRegistry:
                     f"unknown dictionary topic {topic!r} (registry has: {known}); "
                     f"train one with dictstore.train_dict and publish it"
                 )
+            explicit = version is not None
             if version is None:
                 version = self._pins.get(topic, versions[-1])
             if version not in versions:
@@ -326,7 +359,24 @@ class DictRegistry:
             key = (topic, version)
             d = self._resident.get(key)
             if d is None:
-                d = self._load(topic, version)
+                try:
+                    d = self._load(topic, version)
+                except DictStoreError:
+                    # Backing-store outage degradation: a latest/pinned
+                    # resolution may fall back to the NEWEST resident version
+                    # of the topic (frames self-describe their dict id, so a
+                    # decode can never pick up the wrong table this way). An
+                    # EXPLICIT version request must refuse instead.
+                    if explicit:
+                        raise
+                    fallback = max(
+                        (v for t, v in self._resident if t == topic),
+                        default=None,
+                    )
+                    if fallback is None:
+                        raise
+                    key = (topic, fallback)
+                    d = self._resident[key]
             self._touch(key, d)
             return d
 

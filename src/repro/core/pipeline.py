@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -83,14 +83,16 @@ def dispatch_signature(
     per_lane: int,
     dtype: str = "uint32",
     entropy: str = "none",
+    integrity: str = "none",
 ) -> Tuple[Any, ...]:
     """Gang dispatch signature: streams/sessions stack into one vmapped
     dispatch only when codec (including resolved/calibrated parameters),
-    block geometry, dtype, and entropy stage all match — anything else
-    would run a member under the wrong kernel, the wrong quantizer, or
-    marshal its frames under the wrong wire feature set. Used by the
-    serving runtime's gang queues and the job API's gang negotiation."""
-    parts: List[Any] = [codec.name, lanes, per_lane, dtype, entropy]
+    block geometry, dtype, entropy stage, and integrity mode all match —
+    anything else would run a member under the wrong kernel, the wrong
+    quantizer, or marshal its frames under the wrong wire feature set.
+    Used by the serving runtime's gang queues and the job API's gang
+    negotiation."""
+    parts: List[Any] = [codec.name, lanes, per_lane, dtype, entropy, integrity]
     for k, v in sorted(vars(codec).items()):
         if isinstance(v, (bool, int, float, str)):
             parts.append((k, v))
@@ -431,6 +433,9 @@ class BlockedExecutor:
         #: stage-2 entropy coder applied at frame marshal ("none" | "rans");
         #: legacy EngineConfig carriers predate the field, hence getattr
         self.entropy: str = getattr(config, "entropy", None) or "none"
+        #: wire integrity stamped at frame marshal ("none" | "crc32c");
+        #: same getattr dance for legacy EngineConfig carriers
+        self.integrity: str = getattr(config, "integrity", None) or "none"
         self._scan_fns: Dict[int, Any] = {}  # chunk length -> jitted scan
         self._warmed: set = set()  # (shapes, chunk, ...) already compiled
         #: kernel dispatches issued on timed paths (scan chunks, per-block
@@ -1412,12 +1417,14 @@ class CompressionPipeline(BlockedExecutor):
         return self._flush_entry(self._pack_flush(state))
 
     def _maybe_entropy(self, frame: bits.Frame) -> bits.Frame:
-        """Apply wire feature stages at marshal time (dict id, entropy).
+        """Apply wire feature stages at marshal time (dict id, entropy,
+        integrity).
 
         Every egress path — solo fused/eager, gang, server waves, legacy
         compact=False — funnels through `marshal_frame`/`marshal_compacted`,
         so hooking here composes the stages with all of them (DESIGN.md
-        §15/§17). The frame keeps its raw fields; only serialization changes."""
+        §15/§17/§18). The frame keeps its raw fields; only serialization
+        changes."""
         topic = getattr(self.codec, "dict_topic", None)
         if topic is not None:
             # seeded codec: stamp (topic, version) so the frame is
@@ -1425,6 +1432,10 @@ class CompressionPipeline(BlockedExecutor):
             frame.dict_id = (topic, self.codec.dict_version)
         if self.entropy == "rans":
             frame.apply_entropy()
+        if self.integrity == "crc32c":
+            # CRCs themselves are computed lazily at to_bytes time, over the
+            # final serialized sections (post-entropy, post-dict)
+            frame.integrity = "crc32c"
         return frame
 
     def marshal_frame(
@@ -1547,6 +1558,9 @@ class DecompressionPipeline(BlockedExecutor):
         super().__init__(config, sample=sample, codec=codec, plan=plan)
         self._tail_fn_jit = None  # jit retraces per block shape on its own
         self._stream_decode_fn = None
+        #: poisoned-state latch: set to the first FrameError that made this
+        #: decoder fail; further decode calls refuse until reset_quarantine()
+        self.quarantined: Optional[bits.FrameError] = None
 
     # ------------------------------------------------------------ scan body
     def _decode_block(self, state: Any, words: jax.Array, bitlen2d: jax.Array):
@@ -1605,10 +1619,58 @@ class DecompressionPipeline(BlockedExecutor):
 
     # ------------------------------------------------------------ decompress
     def decompress(self, frame: bits.Frame, warmup: bool = True) -> DecompressionResult:
-        """Reconstruct a frame's stream through the fused chunked executor."""
+        """Reconstruct a frame's stream through the fused chunked executor.
+
+        Decode failures latch the pipeline into quarantine: the first
+        :class:`~repro.core.bits.FrameError` is stored on ``quarantined``
+        and every later call refuses until :meth:`reset_quarantine` — a
+        poisoned session must not silently keep emitting values from a
+        stream whose framing it no longer trusts."""
+        self._check_quarantine()
+        try:
+            return self._decompress(frame, warmup=warmup)
+        except bits.FrameError as err:
+            self.quarantined = err
+            raise
+        except Exception as exc:  # corrupt bodies surface as shape/index blowups
+            msg = " ".join(str(exc).split())
+            err = bits.FrameDecodeError(
+                f"frame decode failed ({type(exc).__name__}: {msg}); "
+                "discard the frame and resynchronize the stream"
+            )
+            self.quarantined = err
+            raise err from exc
+
+    def ingest(self, buf: Union[bytes, bytearray, memoryview]) -> DecompressionResult:
+        """Parse raw wire bytes and decode them in one step.
+
+        Parse-stage failures (truncation, CRC mismatch, bad header) latch
+        the same quarantine as decode-stage ones, so a collector session
+        fed a poisoned byte stream refuses further frames until the caller
+        resynchronizes (e.g. via :class:`~repro.core.bits.FrameStream`)."""
+        self._check_quarantine()
+        try:
+            frame = bits.parse_frame(buf)
+        except bits.FrameError as err:
+            self.quarantined = err
+            raise
+        return self.decompress(frame)
+
+    def reset_quarantine(self) -> None:
+        """Clear the poisoned-state latch once the stream is resynchronized."""
+        self.quarantined = None
+
+    def _check_quarantine(self) -> None:
+        if self.quarantined is not None:
+            raise bits.FrameDecodeError(
+                f"decoder is quarantined after a poisoned frame ({self.quarantined}); "
+                "resynchronize the stream and call reset_quarantine() to resume"
+            )
+
+    def _decompress(self, frame: bits.Frame, warmup: bool = True) -> DecompressionResult:
         want = WIRE_CODEC_IDS.get(self.codec.name)
         if frame.codec_id != want:
-            raise ValueError(
+            raise bits.FrameDecodeError(
                 f"frame codec id {frame.codec_id} "
                 f"({WIRE_CODEC_NAMES.get(frame.codec_id, '?')}) != pipeline codec "
                 f"{self.codec.name!r}"
@@ -1675,18 +1737,18 @@ class DecompressionPipeline(BlockedExecutor):
         try:
             trained = dictstore.resolve(did[0], did[1])
         except KeyError as e:
-            raise ValueError(
+            raise bits.FrameDecodeError(
                 f"frame references trained dictionary '{did[0]}:v{did[1]}' "
                 f"which this registry cannot resolve ({e.args[0]}); publish it "
                 f"or point CSTREAM_DICT_ROOT at the collector's registry"
             ) from e
         if self.codec.meta.state_kind != "dictionary":
-            raise ValueError(
+            raise bits.FrameDecodeError(
                 f"frame references trained dictionary '{trained.ref}' but "
                 f"pipeline codec {self.codec.name!r} takes no dictionary"
             )
         if trained.idx_bits != self.codec.idx_bits:
-            raise ValueError(
+            raise bits.FrameDecodeError(
                 f"frame dictionary '{trained.ref}' has idx_bits="
                 f"{trained.idx_bits}, decode codec has idx_bits={self.codec.idx_bits}"
             )

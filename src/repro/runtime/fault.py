@@ -18,6 +18,12 @@ Three cooperating pieces, all host-side (no device state):
   run_with_restarts — supervisor loop: run the step function; on failure
       (or injected fault) restore the latest COMMITTED checkpoint and
       resume.  Resume-exactness is tested in tests/test_fault.py.
+
+PR 10 (DESIGN.md §18) grows this into the unified chaos harness: a
+CircuitBreaker for per-signature admission shedding, with_backoff for
+transient egress-fetch failures, and three wire/registry injectors
+(FrameCorruptor, TruncationInjector, RegistryOutageInjector) that
+bench_chaos drives against live sessions.
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple, Type, Union
 
 
 @dataclasses.dataclass
@@ -121,17 +127,213 @@ class DeviceLoss(RuntimeError):
 class DeviceLossInjector:
     """Deterministic kill-a-device schedule for fleet chaos drills.
 
-    `fail_at_waves` maps wave index -> mesh slot to kill; each scheduled
-    loss fires exactly once (the retried wave must SUCCEED on the shrunk
-    mesh, like `FaultInjector`'s once-per-step contract)."""
+    `fail_at_waves` maps wave index -> mesh slot to kill, or a sequence of
+    slots for double-fault drills (one loss per retry attempt of the same
+    wave). Each scheduled loss fires exactly once; the wave must then
+    SUCCEED on the shrunk mesh (like `FaultInjector`'s once-per-step
+    contract)."""
 
-    fail_at_waves: Dict[int, int] = dataclasses.field(default_factory=dict)
+    fail_at_waves: Dict[int, Union[int, Tuple[int, ...], List[int]]] = (
+        dataclasses.field(default_factory=dict)
+    )
     fired: set = dataclasses.field(default_factory=set)
+    _counts: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def maybe_fail(self, wave: int):
-        if wave in self.fail_at_waves and wave not in self.fired:
-            self.fired.add(wave)
-            raise DeviceLoss(self.fail_at_waves[wave], wave)
+        sched = self.fail_at_waves.get(wave)
+        if sched is None:
+            return
+        slots = [sched] if isinstance(sched, int) else list(sched)
+        count = self._counts.get(wave, 0)
+        if count >= len(slots):
+            return
+        self._counts[wave] = count + 1
+        self.fired.add(wave)
+        raise DeviceLoss(slots[count], wave)
+
+
+# ======================================================================
+# Circuit-breaker admission + retry-with-backoff (DESIGN.md §18)
+# ======================================================================
+
+
+@dataclasses.dataclass
+class CircuitBreaker:
+    """Closed / open / half-open admission breaker on an EWMA failure rate.
+
+    `record_success` / `record_failure` feed outcomes; `allow()` gates
+    admission. The breaker opens when the EWMA failure rate exceeds
+    `trip_rate` after at least `min_events` observations, sheds while
+    open, lets exactly ONE probe through after `cooldown_s`, and closes
+    again on a probe success (reopens on probe failure). Per-signature
+    instances live in `ServerCore`; parked work is re-admitted when the
+    breaker allows, so shedding defers load instead of dropping it."""
+
+    alpha: float = 0.3  # EWMA weight of the newest outcome
+    trip_rate: float = 0.5  # open when the failure EWMA exceeds this
+    min_events: int = 3  # never trip before this many observations
+    cooldown_s: float = 0.25  # open -> half-open (probe) after this long
+    clock: Callable[[], float] = time.monotonic
+    state: str = "closed"
+    failure_rate: float = 0.0
+    events: int = 0
+    trips: int = 0
+    shed: int = 0  # admissions refused while open
+    _opened_at: float = 0.0
+    _probing: bool = False
+
+    def record_success(self) -> None:
+        self.events += 1
+        self.failure_rate *= 1.0 - self.alpha
+        if self.state in ("half_open", "open"):
+            # a success observed while open/half-open closes the breaker:
+            # the downstream recovered (the probe, or a replayed wave)
+            self.state = "closed"
+            self._probing = False
+            self.failure_rate = 0.0
+
+    def record_failure(self) -> None:
+        self.events += 1
+        self.failure_rate = self.alpha + (1.0 - self.alpha) * self.failure_rate
+        if self.state == "half_open":
+            self.state = "open"
+            self._opened_at = self.clock()
+            self._probing = False
+        elif (
+            self.state == "closed"
+            and self.events >= self.min_events
+            and self.failure_rate > self.trip_rate
+        ):
+            self.state = "open"
+            self._opened_at = self.clock()
+            self.trips += 1
+
+    def allow(self) -> bool:
+        """True when work may be admitted now; counts sheds while open."""
+        if self.state == "closed":
+            return True
+        if self.state == "open" and self.clock() - self._opened_at >= self.cooldown_s:
+            self.state = "half_open"
+            self._probing = False
+        if self.state == "half_open" and not self._probing:
+            self._probing = True  # exactly one probe until its outcome lands
+            return True
+        self.shed += 1
+        return False
+
+    def snapshot(self) -> dict:
+        return {
+            "state": self.state,
+            "failure_rate": round(self.failure_rate, 4),
+            "events": self.events,
+            "trips": self.trips,
+            "shed": self.shed,
+        }
+
+
+def with_backoff(
+    fn: Callable[[], Any],
+    attempts: int = 3,
+    base_s: float = 0.005,
+    retry_on: Tuple[Type[BaseException], ...] = (RuntimeError, OSError),
+    sleep: Callable[[float], None] = time.sleep,
+) -> Any:
+    """Run `fn`, retrying transient failures with exponential backoff.
+
+    Used on egress host-copy fetches: a transient device/transfer error
+    gets `attempts` tries (base_s, 2*base_s, ...); the last failure
+    propagates so callers see the real error, not a swallowed one."""
+    for i in range(attempts):
+        try:
+            return fn()
+        except retry_on:
+            if i == attempts - 1:
+                raise
+            sleep(base_s * (1 << i))
+    raise AssertionError("unreachable")
+
+
+# ======================================================================
+# Wire & registry chaos injectors (DESIGN.md §18)
+# ======================================================================
+
+
+@dataclasses.dataclass
+class FrameCorruptor:
+    """Deterministic bit-flip schedule over a frame stream.
+
+    `flip_at` maps frame index -> byte offset whose bit 6 is flipped
+    (negative offsets index from the end, numpy-style). Each scheduled
+    corruption fires once; `maybe_corrupt` returns the (possibly
+    corrupted) bytes so collectors can splice it into their ingest path."""
+
+    flip_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    fired: set = dataclasses.field(default_factory=set)
+
+    def maybe_corrupt(self, idx: int, buf: bytes) -> bytes:
+        off = self.flip_at.get(idx)
+        if off is None or idx in self.fired or not buf:
+            return buf
+        self.fired.add(idx)
+        mutated = bytearray(buf)
+        mutated[off % len(mutated)] ^= 0x40
+        return bytes(mutated)
+
+
+@dataclasses.dataclass
+class TruncationInjector:
+    """Deterministic truncation schedule over a frame stream.
+
+    `cut_at` maps frame index -> bytes to KEEP (negative = drop that many
+    from the tail). Each scheduled cut fires once."""
+
+    cut_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    fired: set = dataclasses.field(default_factory=set)
+
+    def maybe_truncate(self, idx: int, buf: bytes) -> bytes:
+        keep = self.cut_at.get(idx)
+        if keep is None or idx in self.fired:
+            return buf
+        self.fired.add(idx)
+        return buf[: keep if keep >= 0 else max(0, len(buf) + keep)]
+
+
+class RegistryOutageInjector:
+    """Simulated dictionary-registry backing-store outage (context manager).
+
+    While active, the target `DictRegistry`'s artifact loader raises a
+    single-line DictStoreError on every cache miss. Resident (already
+    loaded or pinned-resident) entries keep serving — `DictRegistry.get`
+    only hits the loader on a miss — so decode either uses the exact
+    version it already holds or refuses with an actionable error; it can
+    never decode with the wrong table."""
+
+    def __init__(self, registry: Any) -> None:
+        self.registry = registry
+        self.loads_refused = 0
+        self._orig: Optional[Callable[..., Any]] = None
+
+    def __enter__(self) -> "RegistryOutageInjector":
+        from repro.core.dictstore import DictStoreError
+
+        reg = self.registry
+        self._orig = reg._load
+
+        def down(topic: str, version: int):
+            self.loads_refused += 1
+            raise DictStoreError(
+                f"dictionary '{topic}:v{version}' unavailable: registry "
+                "backing store outage (injected); resident copies keep "
+                "serving — retry once the store recovers"
+            )
+
+        reg._load = down
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        if self._orig is not None:
+            self.registry._load = self._orig
+            self._orig = None
 
 
 def run_with_restarts(

@@ -61,7 +61,12 @@ from repro.core.strategies import (
     resolve_capacity,
     schedule_blocks,
 )
-from repro.runtime.fault import DeviceLoss, HeartbeatMonitor
+from repro.runtime.fault import (
+    CircuitBreaker,
+    DeviceLoss,
+    HeartbeatMonitor,
+    with_backoff,
+)
 
 # NOTE: repro.runtime.elastic (the fleet mesh planner) is imported lazily in
 # `ServerCore.__init__` — it pulls the LM sharding policy module tree in, and
@@ -199,6 +204,9 @@ class ServerReport:
     #: `compute_s` on a 1-device mesh
     device_makespan_s: float = 0.0
     fleet_mbps: float = 0.0  # input bytes over modeled device makespan
+    #: per-signature circuit-breaker snapshots keyed by `SignatureStats.
+    #: label` (breaker-enabled servers only; DESIGN.md §18)
+    breakers: Dict[str, dict] = dataclasses.field(default_factory=dict)
 
 
 class StreamSession:
@@ -508,6 +516,7 @@ class StreamSession:
             self._signature = dispatch_signature(
                 self.pipeline.codec, self.lanes, self.capacity // self.lanes,
                 entropy=self.pipeline.entropy,
+                integrity=self.pipeline.integrity,
             )
         return self._signature
 
@@ -659,7 +668,10 @@ class StreamSession:
         self.state = state
         if self.egress:  # host copies after the timed region
             tbi = int(total_bits)
-            meta_np = np.asarray(meta)
+            # egress fetches retry transient transfer errors with backoff
+            # (DESIGN.md §18): the device row is immutable, so a retried
+            # host copy is idempotent
+            meta_np = with_backoff(lambda: np.asarray(meta))
             # the only possible mismatch: a wave ran the meta7 dispatch for
             # an egress sibling, but THIS session stores raw bitlens (the
             # reverse cannot occur — a packed-storing session's presence is
@@ -671,9 +683,10 @@ class StreamSession:
             if not self._meta_packed:
                 meta_np = np.asarray(meta_np, np.int32).reshape(-1)
             if self._compact:
-                payload = np.asarray(words[: (tbi + 31) // 32])
+                payload = with_backoff(lambda: np.asarray(words[: (tbi + 31) // 32]))
             else:
-                payload = np.asarray(words)  # legacy: full worst-case buffer
+                # legacy: full worst-case buffer
+                payload = with_backoff(lambda: np.asarray(words))
             self.pipeline.d2h_payload_bytes += payload.nbytes
             self.pipeline.d2h_meta_bytes += meta_np.nbytes
             self.pipeline.d2h_ctrl_bytes += 4
@@ -917,6 +930,7 @@ class ServerCore:
         mesh: Optional[Union[int, "ElasticSession"]] = None,
         fault_injector: Any = None,
         heartbeat: Optional[HeartbeatMonitor] = None,
+        breaker: Any = None,
     ):
         self.profile = PROFILES[profile]
         self.scheduling = scheduling
@@ -957,6 +971,20 @@ class ServerCore:
         self._device_busy_s = 0.0
         self._fleet_plans: Dict[tuple, FleetPlan] = {}
         self._stats: Dict[tuple, SignatureStats] = {}
+        # ---- circuit-breaker admission (DESIGN.md §18) ---------------------
+        #: `breaker` turns on per-signature admission breakers: True uses
+        #: CircuitBreaker defaults, a dict is passed as its kwargs, and
+        #: None/False runs without breakers (the historical behavior).
+        #: While a signature's breaker is open its queued flushes stay
+        #: PARKED — deferred, never dropped — and re-dispatch once the
+        #: breaker's probe succeeds (or unconditionally at the final drain).
+        if breaker is None or breaker is False:
+            self._breaker_cfg: Optional[dict] = None
+        elif breaker is True:
+            self._breaker_cfg = {}
+        else:
+            self._breaker_cfg = dict(breaker)
+        self._breakers: Dict[tuple, CircuitBreaker] = {}
         if mesh is not None:
             if not gang:
                 raise ValueError(
@@ -1005,16 +1033,19 @@ class ServerCore:
         if len(q) >= budget:
             self._dispatch_signature(sig)
 
-    def _dispatch_all(self) -> None:
+    def _dispatch_all(self, final: bool = False) -> None:
         """Quantum edge: drain every signature's queue as gang waves.
 
         Iteration follows queue creation order (first flush wins), which is
         deterministic because `run` replays merged arrivals over sorted
-        topics — no dependence on feed dict ordering."""
+        topics — no dependence on feed dict ordering. `final=True` (the
+        end-of-run drain) dispatches even through an OPEN breaker: parked
+        work is deferred load, and the drain is its last chance to land —
+        zero acknowledged frames may be lost to shedding."""
         for sig in list(self._queues):
-            self._dispatch_signature(sig)
+            self._dispatch_signature(sig, force=final)
 
-    def _dispatch_signature(self, sig: tuple) -> None:
+    def _dispatch_signature(self, sig: tuple, force: bool = False) -> None:
         q = self._queues.get(sig)
         if not q:
             return
@@ -1023,7 +1054,17 @@ class ServerCore:
         if self.fleet is not None:
             # one sharded wave carries max_gang sessions PER DEVICE
             cap *= self.fleet.n_devices
+        breaker = self._breakers.get(sig)
         while q:
+            # breaker admission gate: an open breaker parks the queue in
+            # place (deferred, never dropped); half-open lets ONE probe wave
+            # through and stops until its outcome lands. The final drain
+            # (`force`) bypasses the gate so nothing acknowledged is shed.
+            probe = False
+            if breaker is not None and not force:
+                if not breaker.allow():
+                    return
+                probe = breaker.state == "half_open"
             # one wave: the oldest pending request of each distinct session,
             # up to the planned gang size. A session with several queued
             # flushes keeps FIFO order across waves (state carries).
@@ -1037,11 +1078,16 @@ class ServerCore:
                 else:
                     rest.append((s, req))
             q[:] = rest
-            self._execute_wave(sig, wave)
+            done = self._execute_wave(sig, wave, force=force)
+            if not done or (probe and breaker.state != "closed"):
+                return  # wave parked back / probe failed: keep the rest parked
 
     def _execute_wave(
-        self, sig: tuple, wave: List[Tuple[StreamSession, FlushRequest]]
-    ) -> None:
+        self,
+        sig: tuple,
+        wave: List[Tuple[StreamSession, FlushRequest]],
+        force: bool = False,
+    ) -> bool:
         """Run one wave, surviving device loss (DESIGN.md §14).
 
         The recovery invariant: session state and flush records mutate ONLY
@@ -1049,19 +1095,34 @@ class ServerCore:
         mid-wave, every member is still at its last committed FlushRecord
         and the wave replays exactly on the shrunk mesh. Orphaned sessions
         are re-admitted by re-running the same wave; nothing acknowledged
-        is ever lost."""
+        is ever lost.
+
+        With a breaker (DESIGN.md §18) every DeviceLoss records a failure
+        and every completed wave a success; when repeated losses TRIP the
+        breaker mid-retry, the wave parks back at the front of its queue
+        (returning False) instead of hot-looping against a failing mesh —
+        it replays after the cooldown probe, or at the final drain
+        (`force=True`, which never parks)."""
         wave_idx = self._wave_counter
         self._wave_counter += 1
+        breaker = self._breakers.get(sig)
         while True:
             try:
                 if self.fault_injector is not None:
                     self.fault_injector.maybe_fail(wave_idx)
                 self._run_wave(sig, wave)
+                if breaker is not None:
+                    breaker.record_success()
                 if self.heartbeat is not None:
                     self.heartbeat.beat()
-                return
+                return True
             except DeviceLoss as loss:
+                if breaker is not None:
+                    breaker.record_failure()
                 self._on_device_loss(loss)
+                if breaker is not None and not force and breaker.state == "open":
+                    self._queues.setdefault(sig, [])[:0] = wave
+                    return False
 
     def _on_device_loss(self, loss: DeviceLoss) -> None:
         """Re-mesh onto the surviving devices and re-plan wave sizing.
@@ -1206,6 +1267,7 @@ class ServerCore:
             sig = dispatch_signature(
                 codec, config.lanes, cap // config.lanes,
                 entropy=getattr(config, "entropy", None) or "none",
+                integrity=getattr(config, "integrity", None) or "none",
             )
             # the signature fixes (lanes, per_lane), so a registered
             # pipeline always matches this capacity
@@ -1261,6 +1323,8 @@ class ServerCore:
                 self._fleet_plans[sig] = plan_fleet(
                     self._gang_plans[sig], self.fleet.n_devices
                 )
+            if self._breaker_cfg is not None:
+                self._breakers[sig] = CircuitBreaker(**self._breaker_cfg)
         self._stats[sig].n_sessions += 1
 
     def _on_signature_change(
@@ -1383,7 +1447,7 @@ class ServerCore:
             if s.buffered:
                 s.flush(s.flush_deadline)
         if self.gang:
-            self._dispatch_all()
+            self._dispatch_all(final=True)
 
         return self.report(topics)
 
@@ -1414,11 +1478,15 @@ class ServerCore:
         pipes = {id(s.pipeline): s.pipeline for s in self.sessions.values()}
         n_dispatches = sum(p.dispatches for p in pipes.values())
         dispatch_stats = {}
-        for st in self._stats.values():
+        breakers = {}
+        for sig, st in self._stats.items():
             label = st.label
             while label in dispatch_stats:  # same codec+geometry, other params
                 label += "'"
             dispatch_stats[label] = st
+            br = self._breakers.get(sig)
+            if br is not None:
+                breakers[label] = br.snapshot()
         # fleet throughput model: per-device busy time accumulated at wave
         # execution (wall x shard/padded slots). On a 1-device mesh (or no
         # mesh) it degenerates to compute_s exactly.
@@ -1441,6 +1509,7 @@ class ServerCore:
             fault_events=list(self.fault_events),
             device_makespan_s=device_makespan,
             fleet_mbps=input_bytes / 1e6 / max(device_makespan, 1e-12),
+            breakers=breakers,
         )
 
 

@@ -181,7 +181,7 @@ def test_frame_rejects_unknown_feature_bits():
     """Unknown feature bits must raise a single-line actionable error, not
     silently mis-parse the body they gate."""
     buf = bytearray(_tiny_frame().to_bytes())
-    buf[4:8] = (bits.FRAME_VERSION | (1 << 18)).to_bytes(4, "little")
+    buf[4:8] = (bits.FRAME_VERSION | (1 << 19)).to_bytes(4, "little")
     with pytest.raises(ValueError, match="unknown feature bits") as ei:
         bits.Frame.from_bytes(bytes(buf))
     assert "\n" not in str(ei.value)

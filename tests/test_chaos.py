@@ -1,0 +1,354 @@
+"""Chaos harness (DESIGN.md §18): circuit-breaker admission, retry-with-
+backoff, the wire/registry fault injectors, decoder quarantine, and the
+server-level drills — breaker trip/park/probe/recovery with zero
+acknowledged-frame loss, and registry outages that never decode with the
+wrong table."""
+import numpy as np
+import pytest
+
+from repro import cstream
+from repro.core import bits, dictstore
+from repro.core.pipeline import DecompressionPipeline
+from repro.core.strategies import EngineConfig
+from repro.runtime.fault import (
+    CircuitBreaker,
+    DeviceLoss,
+    DeviceLossInjector,
+    FrameCorruptor,
+    RegistryOutageInjector,
+    TruncationInjector,
+    with_backoff,
+)
+from repro.runtime.server import ServerCore
+
+
+@pytest.fixture
+def registry():
+    reg = dictstore.DictRegistry()
+    prev = dictstore.set_default_registry(reg)
+    yield reg
+    dictstore.set_default_registry(prev)
+
+
+def _publish(reg, topic="sensor", seed=0, idx_bits=10):
+    rng = np.random.default_rng(seed)
+    sample = ((rng.zipf(1.3, size=4096) - 1) % 300).astype(np.uint32)
+    return reg.publish(dictstore.train_dict(sample, idx_bits=idx_bits, topic=topic))
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ------------------------------------------------------------ CircuitBreaker --
+def test_breaker_trips_on_ewma_failure_rate():
+    clk = _Clock()
+    br = CircuitBreaker(clock=clk)
+    assert br.state == "closed" and br.allow()
+    br.record_failure()  # rate 0.3, events 1: below min_events
+    assert br.state == "closed"
+    br.record_failure()  # rate 0.51, events 2: still below min_events
+    assert br.state == "closed"
+    br.record_failure()  # rate 0.657, events 3 >= min_events: trip
+    assert br.state == "open" and br.trips == 1
+    assert not br.allow()  # sheds while open (cooldown not elapsed)
+    assert br.shed == 1
+
+
+def test_breaker_half_open_single_probe_then_close():
+    clk = _Clock()
+    br = CircuitBreaker(clock=clk, cooldown_s=0.25)
+    for _ in range(3):
+        br.record_failure()
+    assert br.state == "open"
+    clk.t += 0.3  # cooldown elapsed
+    assert br.allow()  # exactly ONE probe
+    assert br.state == "half_open"
+    assert not br.allow()  # second caller is shed until the probe resolves
+    br.record_success()
+    assert br.state == "closed" and br.failure_rate == 0.0
+    assert br.allow()
+
+
+def test_breaker_probe_failure_reopens():
+    clk = _Clock()
+    br = CircuitBreaker(clock=clk, cooldown_s=0.25)
+    for _ in range(3):
+        br.record_failure()
+    clk.t += 0.3
+    assert br.allow()
+    br.record_failure()  # the probe failed
+    assert br.state == "open"
+    assert not br.allow()  # fresh cooldown window
+    clk.t += 0.3
+    assert br.allow()
+
+
+def test_breaker_success_decays_rate():
+    br = CircuitBreaker(clock=_Clock())
+    br.record_failure()
+    rate = br.failure_rate
+    br.record_success()
+    assert br.failure_rate < rate and br.state == "closed"
+    snap = br.snapshot()
+    assert snap["state"] == "closed" and snap["events"] == 2
+
+
+# -------------------------------------------------------------- with_backoff --
+def test_with_backoff_retries_then_succeeds():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert with_backoff(flaky, attempts=3, base_s=0.005, sleep=sleeps.append) == "ok"
+    assert sleeps == [0.005, 0.01]  # exponential: base, 2*base
+
+
+def test_with_backoff_last_failure_propagates():
+    sleeps = []
+
+    def broken():
+        raise OSError("still down")
+
+    with pytest.raises(OSError, match="still down"):
+        with_backoff(broken, attempts=3, sleep=sleeps.append)
+    assert len(sleeps) == 2  # no sleep after the final attempt
+
+
+def test_with_backoff_does_not_swallow_unlisted_errors():
+    def typo():
+        raise KeyError("not transient")
+
+    with pytest.raises(KeyError):
+        with_backoff(typo, attempts=3, sleep=lambda s: None)
+
+
+# ------------------------------------------------------------ wire injectors --
+def test_frame_corruptor_fires_once_per_index():
+    inj = FrameCorruptor(flip_at={1: 4})
+    buf = bytes(range(16))
+    assert inj.maybe_corrupt(0, buf) == buf  # unscheduled
+    mutated = inj.maybe_corrupt(1, buf)
+    assert mutated != buf and mutated[4] == buf[4] ^ 0x40
+    assert inj.maybe_corrupt(1, buf) == buf  # fires once
+
+
+def test_truncation_injector_head_and_tail_cuts():
+    inj = TruncationInjector(cut_at={0: 6, 1: -4})
+    buf = bytes(range(16))
+    assert inj.maybe_truncate(0, buf) == buf[:6]
+    assert inj.maybe_truncate(1, buf) == buf[:-4]
+    assert inj.maybe_truncate(0, buf) == buf  # fires once
+    assert inj.maybe_truncate(2, buf) == buf  # unscheduled
+
+
+def test_device_loss_injector_sequence_schedules_double_faults():
+    inj = DeviceLossInjector(fail_at_waves={3: (0, 1)})
+    with pytest.raises(DeviceLoss) as e1:
+        inj.maybe_fail(3)
+    assert e1.value.device_index == 0
+    with pytest.raises(DeviceLoss) as e2:  # the retried wave fails AGAIN
+        inj.maybe_fail(3)
+    assert e2.value.device_index == 1
+    inj.maybe_fail(3)  # schedule exhausted: third attempt succeeds
+
+
+# -------------------------------------------------------- decoder quarantine --
+def _frames_for(spec, src):
+    with cstream.open(spec) as h:
+        h.push(src).flush()
+        return h.frames()
+
+
+def test_quarantine_poisons_only_the_hit_session():
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 100, 2048).astype(np.uint32)
+    spec = cstream.JobSpec(codec="tcomp32", egress=True, integrity="crc32c")
+    frames = _frames_for(spec, src)
+    plan = cstream.negotiate(spec)
+    poisoned = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+    healthy = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+
+    corruptor = FrameCorruptor(flip_at={0: -30})
+    bad = corruptor.maybe_corrupt(0, frames[0].to_bytes())
+    with pytest.raises(bits.FrameIntegrityError):
+        poisoned.ingest(bad)
+    assert poisoned.quarantined is not None
+    # a quarantined decoder refuses — single-line, names the cure
+    with pytest.raises(bits.FrameDecodeError, match="reset_quarantine") as ei:
+        poisoned.ingest(frames[0].to_bytes())
+    assert "\n" not in str(ei.value)
+    # the sibling session is untouched
+    got = np.concatenate([healthy.ingest(f.to_bytes()).values for f in frames])
+    np.testing.assert_array_equal(got, src)
+    # resync + reset resumes exact decode on the poisoned session
+    poisoned.reset_quarantine()
+    got = np.concatenate([poisoned.ingest(f.to_bytes()).values for f in frames])
+    np.testing.assert_array_equal(got, src)
+
+
+def test_quarantine_on_wrong_codec_and_unknown_dict(registry):
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, 100, 1024).astype(np.uint32)
+    spec = cstream.JobSpec(codec="tcomp32", egress=True)
+    frames = _frames_for(spec, src)
+    other = cstream.negotiate(cstream.JobSpec(codec="leb128", egress=True))
+    dec = DecompressionPipeline(other.spec, codec=other.codec, plan=other.execution)
+    with pytest.raises(bits.FrameDecodeError, match="codec id"):
+        dec.decompress(frames[0])
+    assert dec.quarantined is not None
+
+    _publish(registry)
+    dspec = cstream.JobSpec(codec="tdic32", egress=True, dictionary="sensor:v1")
+    dframes = _frames_for(dspec, src)
+    empty = dictstore.DictRegistry()
+    prev = dictstore.set_default_registry(empty)
+    try:
+        plan = cstream.negotiate(dspec.replace(dictionary=None))
+        dec2 = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+        with pytest.raises(bits.FrameDecodeError, match="cannot resolve"):
+            dec2.decompress(dframes[0])
+        assert dec2.quarantined is not None
+    finally:
+        dictstore.set_default_registry(prev)
+
+
+# --------------------------------------------------------- registry outages --
+def test_registry_outage_resident_keeps_serving(registry, tmp_path):
+    reg = dictstore.DictRegistry(root=str(tmp_path))
+    _publish(reg)
+    reg.get("sensor", 1)  # now resident
+    with RegistryOutageInjector(reg) as outage:
+        d = reg.get("sensor", 1)  # cache hit: loader never consulted
+        assert d.version == 1
+        assert outage.loads_refused == 0
+
+
+def test_registry_outage_latest_falls_back_to_resident(registry, tmp_path):
+    reg = dictstore.DictRegistry(root=str(tmp_path), max_resident=1)
+    _publish(reg, seed=0)
+    _publish(reg, seed=1)  # v2 resident, v1 evicted to disk
+    with RegistryOutageInjector(reg):
+        d = reg.get("sensor")  # latest resolves v2: resident, serves
+        assert d.version == 2
+    # pin v1 (on disk only) and take the store down: latest resolution
+    # falls back to the resident version rather than failing the session
+    reg.pin("sensor", 1)
+    with RegistryOutageInjector(reg) as outage:
+        d = reg.get("sensor")
+        assert d.version == 2  # newest RESIDENT — never a wrong silent decode
+        assert outage.loads_refused == 1
+
+
+def test_registry_outage_explicit_version_refuses_actionably(registry, tmp_path):
+    reg = dictstore.DictRegistry(root=str(tmp_path), max_resident=1)
+    _publish(reg, seed=0)
+    _publish(reg, seed=1)
+    with RegistryOutageInjector(reg):
+        with pytest.raises(KeyError) as ei:
+            reg.get("sensor", 1)  # explicit pinned version must NOT substitute
+        msg = str(ei.value)
+        assert "sensor:v1" in msg and "\n" not in msg
+
+
+# ----------------------------------------------- registry persistence errors --
+def test_corrupt_index_json_wraps_into_single_line_error(tmp_path):
+    (tmp_path / "registry.json").write_text("{not json")
+    with pytest.raises(dictstore.DictStoreError) as ei:
+        dictstore.DictRegistry(root=str(tmp_path))
+    msg = str(ei.value)
+    assert "registry.json" in msg and "unreadable" in msg and "\n" not in msg
+
+
+def test_missing_npz_names_topic_version_path(tmp_path):
+    reg = dictstore.DictRegistry(root=str(tmp_path), max_resident=1)
+    _publish(reg, seed=0)
+    _publish(reg, seed=1)  # v1 evicted from residency
+    (tmp_path / "sensor_v1.npz").unlink()
+    with pytest.raises(dictstore.DictStoreError) as ei:
+        reg.get("sensor", 1)
+    msg = str(ei.value)
+    assert "sensor" in msg and "v1" in msg and ".npz" in msg and "\n" not in msg
+
+
+def test_corrupt_npz_wraps_into_single_line_error(tmp_path):
+    reg = dictstore.DictRegistry(root=str(tmp_path), max_resident=1)
+    _publish(reg, seed=0)
+    _publish(reg, seed=1)
+    (tmp_path / "sensor_v1.npz").write_bytes(b"not a zip archive")
+    with pytest.raises(dictstore.DictStoreError) as ei:
+        reg.get("sensor", 1)
+    msg = str(ei.value)
+    assert "sensor:v1" in msg and "failed to load" in msg and "\n" not in msg
+
+
+# ------------------------------------------------------- server breaker drill --
+def _srv_cfg():
+    return EngineConfig(codec="tcomp32", micro_batch_bytes=2048, lanes=4)
+
+
+def test_server_breaker_trips_parks_and_recovers_zero_loss():
+    """Repeated wave failures trip the signature's breaker; the wave PARKS
+    (never drops), the cooldown probe replays it, and every acknowledged
+    tuple lands. Uses a 1-device mesh with stale (out-of-range) device
+    indices so each loss is survivable without shrinking the mesh."""
+    inj = DeviceLossInjector(fail_at_waves={0: (7, 7, 7)})
+    srv = ServerCore(
+        gang=True, mesh=1, egress=True, gang_budget=1,
+        fault_injector=inj, breaker={"cooldown_s": 0.0},
+    )
+    s = srv.admit("t", _srv_cfg())
+    cap = s.capacity
+    vals = np.arange(3 * cap, dtype=np.uint32)
+    rep = srv.run({"t": (vals, np.arange(3 * cap) * 1e-5)})
+    assert sum(f.n_tuples for f in s.flushes) == 3 * cap  # zero loss
+    snap = next(iter(rep.breakers.values()))
+    assert snap["trips"] >= 1 and snap["state"] == "closed"
+    frame = s.egress_frame()
+    assert frame.n_valid == 3 * cap
+
+
+def test_server_breaker_open_sheds_until_final_drain():
+    """With an infinite cooldown the breaker stays open after tripping:
+    later dispatch edges shed (requests stay parked), and the end-of-run
+    drain force-dispatches everything — zero acknowledged loss even when
+    the breaker never recovers on its own."""
+    inj = DeviceLossInjector(fail_at_waves={0: (9, 9, 9)})
+    srv = ServerCore(
+        gang=True, mesh=1, egress=True, gang_budget=1,
+        fault_injector=inj, breaker={"cooldown_s": 3600.0},
+    )
+    s = srv.admit("t", _srv_cfg())
+    cap = s.capacity
+    vals = np.arange(4 * cap, dtype=np.uint32)
+    rep = srv.run({"t": (vals, np.arange(4 * cap) * 1e-5)})
+    assert sum(f.n_tuples for f in s.flushes) == 4 * cap
+    snap = next(iter(rep.breakers.values()))
+    assert snap["trips"] >= 1 and snap["shed"] >= 1
+
+
+def test_server_without_breaker_reports_none():
+    srv = ServerCore(gang=True, egress=True)
+    s = srv.admit("t", _srv_cfg())
+    cap = s.capacity
+    rep = srv.run({"t": (np.arange(cap, dtype=np.uint32), np.arange(cap) * 1e-5)})
+    assert rep.breakers == {}
+
+
+def test_dispatcher_breaker_passthrough():
+    spec = cstream.JobSpec(codec="tcomp32", egress=True, gang=True, flush_tuples=512)
+    with cstream.Dispatcher(gang=True, breaker=True) as d:
+        h = d.open(spec, topic="t")
+        h.push(np.arange(1024, dtype=np.uint32), timestamps=np.arange(1024) * 1e-5)
+        rep = d.run()
+    assert len(rep.breakers) == 1
+    assert next(iter(rep.breakers.values()))["state"] == "closed"

@@ -9,6 +9,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.runtime.elastic import plan_mesh, logical_mapping
 from repro.runtime.fault import (
+    DeviceLossInjector,
     FaultInjector,
     HeartbeatMonitor,
     StragglerDetector,
@@ -72,6 +73,64 @@ def test_run_with_restarts_gives_up_after_max(tmp_path):
             bad_step, {"x": jnp.asarray(0.0)}, 5,
             CheckpointManager(str(tmp_path), keep=2), max_restarts=2,
         )
+
+
+def test_run_with_restarts_composed_with_monitors(tmp_path):
+    """Resume-exactness holds with the full supervision stack attached:
+    heartbeat beaten every step, straggler detector flagging the one
+    deliberately slow step, and a mid-run fault — the final state still
+    equals the no-fault run."""
+
+    def step_fn(step, state):
+        time.sleep(0.05 if step == 8 else 0.01)
+        return {"acc": state["acc"] + jnp.asarray(step + 1.0)}
+
+    init = {"acc": jnp.asarray(0.0)}
+    want, _ = run_with_restarts(
+        step_fn, init, 10, CheckpointManager(str(tmp_path / "a"), keep=5), checkpoint_every=2
+    )
+    hb = HeartbeatMonitor(timeout_s=60.0)  # unstarted: beats recorded, no watchdog
+    det = StragglerDetector(window=16, threshold=2.5)
+    got, log = run_with_restarts(
+        step_fn,
+        init,
+        10,
+        CheckpointManager(str(tmp_path / "b"), keep=5),
+        checkpoint_every=2,
+        injector=FaultInjector(fail_at_steps=(7,)),
+        straggler=det,
+        heartbeat=hb,
+    )
+    assert log["restarts"] == 1 and log["resumed_from"] == [6]
+    np.testing.assert_allclose(float(got["acc"]), float(want["acc"]))
+    assert log["stragglers"] >= 1  # the slow step was flagged, not fatal
+    assert any(e["step"] == 8 for e in det.events)
+    assert not hb.stalled  # every step beat inside the window
+
+
+def test_run_with_restarts_double_fault_during_replay(tmp_path):
+    """Device loss DURING the replay of a device loss: the same step fails on
+    its first run and again on the post-restore replay (DeviceLossInjector's
+    sequence schedule). Both restarts resume from the same checkpoint and the
+    final state is still exact."""
+
+    def step_fn(step, state):
+        return {"acc": state["acc"] + jnp.asarray(step + 1.0)}
+
+    init = {"acc": jnp.asarray(0.0)}
+    want, _ = run_with_restarts(
+        step_fn, init, 10, CheckpointManager(str(tmp_path / "a"), keep=5), checkpoint_every=2
+    )
+    got, log = run_with_restarts(
+        step_fn,
+        init,
+        10,
+        CheckpointManager(str(tmp_path / "b"), keep=5),
+        checkpoint_every=2,
+        injector=DeviceLossInjector(fail_at_waves={7: (0, 1)}),
+    )
+    assert log["restarts"] == 2 and log["resumed_from"] == [6, 6]
+    np.testing.assert_allclose(float(got["acc"]), float(want["acc"]))
 
 
 def test_plan_mesh_factors():

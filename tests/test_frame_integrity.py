@@ -1,0 +1,335 @@
+"""Frame integrity (DESIGN.md §18): CRC32C correctness, the FEATURE_CRC
+per-section trailer, the typed FrameError family over a truncation/
+corruption grid, FrameStream resynchronization, and `integrity="crc32c"`
+negotiation + bit-exact roundtrips composed with dict + entropy stages.
+"""
+import numpy as np
+import pytest
+
+from repro import cstream
+from repro.core import bits, dictstore
+from repro.core.pipeline import CompressionPipeline, DecompressionPipeline
+
+RNG = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------------- crc32c --
+def _crc32c_bitwise(data: bytes) -> int:
+    """Independent per-bit reference (reflected poly 0x82F63B78)."""
+    crc = 0xFFFFFFFF
+    for byte in data:
+        crc ^= byte
+        for _ in range(8):
+            crc = (crc >> 1) ^ (0x82F63B78 if crc & 1 else 0)
+    return crc ^ 0xFFFFFFFF
+
+
+def test_crc32c_known_vector():
+    # the universal CRC32C check value (iSCSI / RFC 3720)
+    assert bits.crc32c(b"123456789") == 0xE3069283
+    assert bits.crc32c(b"") == 0
+
+
+@pytest.mark.parametrize("n", [1, 7, 63, 100, 1000, 2048, 2049, 4096, 10_000])
+def test_crc32c_matches_bitwise_reference(n):
+    """Both the scalar path (n <= cutover) and the vectorized slicing-by-4
+    path must agree with a per-bit reference implementation."""
+    data = RNG.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+    assert bits.crc32c(data) == _crc32c_bitwise(data)
+
+
+def test_crc32c_accepts_bytes_like():
+    data = RNG.integers(0, 256, size=300, dtype=np.uint8).tobytes()
+    want = bits.crc32c(data)
+    assert bits.crc32c(memoryview(data)) == want
+    assert bits.crc32c(bytearray(data)) == want
+
+
+# ---------------------------------------------------------------- wire layout --
+def _frame(n=256, codec_id=7, seed=1234) -> bits.Frame:
+    rng = np.random.default_rng(seed)
+    blen = rng.integers(0, 33, size=n).astype(np.int32)
+    words = rng.integers(0, 2**32, size=(2 * n + 2,), dtype=np.uint64).astype(np.uint32)
+    return bits.build_frame(
+        codec_id=codec_id, lanes=4, per_lane=n // 4, n_full=1, tail_per_lane=0,
+        flush_slots=0, n_valid=n, blocks=[(words, int(blen.sum()), blen, n)],
+    )
+
+
+def test_crc_frame_roundtrips_and_reserializes():
+    frame = _frame()
+    frame.integrity = "crc32c"
+    buf = frame.to_bytes()
+    assert frame.wire_bytes == len(buf)
+    head = np.frombuffer(buf[:8], "<u4")
+    assert int(head[1]) == bits.FRAME_VERSION | bits.FEATURE_CRC
+    back = bits.Frame.from_bytes(buf)
+    assert back.integrity == "crc32c"
+    np.testing.assert_array_equal(back.payload, frame.payload)
+    np.testing.assert_array_equal(back.bitlen, frame.bitlen)
+    assert back.to_bytes() == buf  # parsed CRC frames reserialize exactly
+
+
+def test_crc_off_frames_stay_byte_identical():
+    """Golden regression: integrity=None must not move a single byte —
+    the CRC feature is pay-for-what-you-use on the wire."""
+    frame = _frame()
+    baseline = frame.to_bytes()
+    frame.integrity = "crc32c"
+    protected = frame.to_bytes()
+    frame.integrity = None
+    assert frame.to_bytes() == baseline
+    # the protected layout is the baseline + exactly the 5-word trailer
+    assert len(protected) == len(baseline) + 4 * bits._CRC_TRAILER_WORDS
+    assert protected[8:-4 * bits._CRC_TRAILER_WORDS] == baseline[8:]
+
+
+def test_crc_overhead_is_constant():
+    for n in (64, 256, 1024):
+        f = _frame(n)
+        plain = len(f.to_bytes())
+        f.integrity = "crc32c"
+        assert len(f.to_bytes()) == plain + 4 * bits._CRC_TRAILER_WORDS
+
+
+def test_crc_rejects_unknown_kind():
+    frame = _frame()
+    frame.integrity = "md5"
+    with pytest.raises(ValueError, match="integrity"):
+        frame.to_bytes()
+
+
+def test_crc_empty_frame():
+    empty = bits.build_frame(
+        codec_id=3, lanes=4, per_lane=0, n_full=0, tail_per_lane=0,
+        flush_slots=0, n_valid=0, blocks=[],
+    )
+    empty.integrity = "crc32c"
+    back = bits.Frame.from_bytes(empty.to_bytes())
+    assert back.n_symbols == 0 and back.integrity == "crc32c"
+
+
+def test_crc_composes_with_entropy():
+    frame = _frame().apply_entropy()
+    frame.integrity = "crc32c"
+    buf = frame.to_bytes()
+    head = np.frombuffer(buf[:8], "<u4")
+    assert int(head[1]) == bits.FRAME_VERSION | bits.FEATURE_ENTROPY | bits.FEATURE_CRC
+    back = bits.Frame.from_bytes(buf)
+    np.testing.assert_array_equal(back.payload, _frame().payload)
+    assert back.to_bytes() == buf
+
+
+# ----------------------------------------------------- corruption detection --
+def test_single_byte_corruption_detected_everywhere():
+    """Flip one bit at every byte offset: the parser must raise a typed,
+    single-line FrameError at EVERY position — header, counts, metadata,
+    payload and the trailer itself."""
+    frame = _frame(n=64)
+    frame.integrity = "crc32c"
+    buf = frame.to_bytes()
+    step = max(1, len(buf) // 97)  # sample offsets, always include the tail
+    offsets = sorted(set(range(0, len(buf), step)) | set(range(len(buf) - 24, len(buf))))
+    for off in offsets:
+        bad = bytearray(buf)
+        bad[off] ^= 0x10
+        with pytest.raises(bits.FrameError) as ei:
+            bits.Frame.from_bytes(bytes(bad))
+        assert "\n" not in str(ei.value), f"offset {off}"
+
+
+def test_section_crc_mismatch_names_the_section():
+    frame = _frame(n=64)
+    frame.integrity = "crc32c"
+    buf = bytearray(frame.to_bytes())
+    buf[-4] ^= 0x01  # corrupt the stored payload CRC word
+    with pytest.raises(bits.FrameIntegrityError, match="payload"):
+        bits.Frame.from_bytes(bytes(buf))
+
+
+def test_header_crc_checked_before_sizes_are_trusted():
+    """An inflated lane count under CRC must fail as an INTEGRITY error
+    (header CRC mismatch), not as a downstream size blowup."""
+    frame = _frame(n=64)
+    frame.integrity = "crc32c"
+    buf = bytearray(frame.to_bytes())
+    buf[12:16] = (10**6).to_bytes(4, "little")  # lanes word
+    with pytest.raises(bits.FrameIntegrityError, match="header"):
+        bits.Frame.from_bytes(bytes(buf))
+
+
+# ------------------------------------------------------------ truncation grid --
+@pytest.mark.parametrize("crc", [False, True])
+def test_truncation_grid_raises_typed_single_line_errors(crc):
+    """Satellite: cutting the buffer at ANY length (including misaligned)
+    must raise a FrameError subclass with a single-line message — never an
+    IndexError or a silent short parse."""
+    frame = _frame(n=64)
+    if crc:
+        frame.integrity = "crc32c"
+    buf = frame.to_bytes()
+    cuts = sorted(set(
+        list(range(0, 48)) + [len(buf) // 2, len(buf) - 21, len(buf) - 4, len(buf) - 1]
+    ))
+    for cut in cuts:
+        with pytest.raises(bits.FrameError) as ei:
+            bits.Frame.from_bytes(buf[:cut])
+        assert "\n" not in str(ei.value), f"cut {cut}"
+    # typed subfamily: short/misaligned buffers are FrameTruncatedError
+    with pytest.raises(bits.FrameTruncatedError):
+        bits.Frame.from_bytes(buf[:7])
+    with pytest.raises(bits.FrameTruncatedError):
+        bits.Frame.from_bytes(buf[:-1])
+
+
+def test_error_family_is_valueerror_compatible():
+    """The pre-PR-10 contract was plain ValueError; every typed error must
+    still satisfy it so existing handlers keep working."""
+    for exc in (
+        bits.FrameError, bits.FrameTruncatedError, bits.FrameHeaderError,
+        bits.FrameFeatureError, bits.FrameIntegrityError, bits.FrameDecodeError,
+    ):
+        assert issubclass(exc, ValueError)
+    assert issubclass(bits.FrameFeatureError, bits.FrameHeaderError)
+
+
+def test_parse_frame_wraps_everything_single_line():
+    with pytest.raises(bits.FrameError):
+        bits.parse_frame(b"\x00" * 64)
+    with pytest.raises(bits.FrameTruncatedError):
+        bits.parse_frame(b"ab")
+    frame = _frame(n=64)
+    back = bits.parse_frame(frame.to_bytes())
+    np.testing.assert_array_equal(back.payload, frame.payload)
+
+
+# ------------------------------------------------------------ stream resync --
+def test_frame_stream_resyncs_past_corruption():
+    """Collector-side scanner: good | corrupted | good must yield the two
+    good frames and record one typed error at the corrupt offset."""
+    f1, f2, f3 = _frame(seed=1), _frame(seed=2), _frame(seed=3)
+    for f in (f1, f2, f3):
+        f.integrity = "crc32c"
+    b1, b2, b3 = f1.to_bytes(), f2.to_bytes(), f3.to_bytes()
+    poisoned = bytearray(b2)
+    poisoned[len(poisoned) // 2] ^= 0x40
+    stream = bits.FrameStream()
+    stream.feed(b1 + bytes(poisoned) + b3)
+    frames = list(stream.frames())
+    assert len(frames) == 2
+    np.testing.assert_array_equal(frames[0].payload, f1.payload)
+    np.testing.assert_array_equal(frames[1].payload, f3.payload)
+    assert len(stream.errors) == 1
+    off, err = stream.errors[0]
+    assert off == len(b1) and isinstance(err, bits.FrameIntegrityError)
+    assert stream.resyncs >= 1
+
+
+def test_frame_stream_skips_leading_garbage_and_truncated_tail():
+    f = _frame(seed=4)
+    f.integrity = "crc32c"
+    buf = f.to_bytes()
+    stream = bits.FrameStream()
+    stream.feed(b"\xde\xad\xbe\xef" * 8 + buf + buf[: len(buf) // 2])
+    frames = list(stream.frames())
+    assert len(frames) == 1
+    np.testing.assert_array_equal(frames[0].payload, f.payload)
+
+
+# ----------------------------------------------------------- negotiation/API --
+def test_negotiate_integrity_capability_and_signature():
+    spec = cstream.JobSpec(codec="tcomp32", egress=True, integrity="crc32c")
+    plan = cstream.negotiate(spec)
+    assert plan.integrity is not None
+    assert plan.integrity.kind == "crc32c"
+    assert plan.integrity.sections == bits._CRC_SECTIONS
+    assert plan.integrity.trailer_bytes == 4 * bits._CRC_TRAILER_WORDS
+    # integrity participates in the gang dispatch signature: protected and
+    # unprotected sessions must never stack into one wave
+    plain = cstream.negotiate(spec.replace(integrity=None))
+    assert plan.signature != plain.signature
+    assert cstream.capability("tcomp32").integrity == ("crc32c",)
+
+
+def test_negotiate_integrity_requires_egress():
+    with pytest.raises(cstream.NegotiationError, match="egress") as ei:
+        cstream.negotiate(cstream.JobSpec(codec="tcomp32", integrity="crc32c"))
+    assert "\n" not in str(ei.value)
+
+
+def test_jobspec_integrity_validation_and_serialization():
+    with pytest.raises(cstream.NegotiationError, match="integrity"):
+        cstream.JobSpec(codec="tcomp32", egress=True, integrity="md5")
+    spec = cstream.JobSpec(codec="rle", egress=True, integrity="crc32c")
+    assert cstream.JobSpec.from_dict(spec.to_dict()) == spec
+
+
+@pytest.mark.parametrize("codec", ["tcomp32", "rle", "leb128"])
+def test_session_crc_roundtrip_bit_exact(codec):
+    """End-to-end: an integrity session's frames parse, verify and decode
+    back to the exact input through a fresh collector pipeline."""
+    rng = np.random.default_rng(7)
+    src = (rng.integers(0, 400, 3000) // np.uint32(3)).astype(np.uint32)
+    spec = cstream.JobSpec(codec=codec, egress=True, integrity="crc32c")
+    with cstream.open(spec) as h:
+        h.push(src).flush()
+        frames = h.frames()
+    plan = cstream.negotiate(spec)
+    dec = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+    got = np.concatenate([dec.ingest(f.to_bytes()).values for f in frames])
+    np.testing.assert_array_equal(got, src)
+
+
+def test_session_crc_composes_with_dict_and_entropy():
+    """The acceptance composition: dict + entropy + CRC on one session,
+    decoded bit-exact by a registry-resolving collector."""
+    rng = np.random.default_rng(11)
+    src = ((rng.zipf(1.3, size=4096) - 1) % 300).astype(np.uint32)
+    reg = dictstore.DictRegistry()
+    prev = dictstore.set_default_registry(reg)
+    try:
+        reg.publish(dictstore.train_dict(src, idx_bits=12, topic="sensor"))
+        spec = cstream.JobSpec(
+            codec="tdic32", egress=True, dictionary="sensor:v1", integrity="crc32c"
+        )
+        with cstream.open(spec) as h:
+            h.push(src).flush()
+            frames = h.frames()
+        for f in frames:
+            back = bits.Frame.from_bytes(f.to_bytes())
+            assert back.integrity == "crc32c" and back.dict_id == ("sensor", 1)
+        plan = cstream.negotiate(spec.replace(dictionary=None))
+        dec = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+        got = np.concatenate([dec.ingest(f.to_bytes()).values for f in frames])
+        np.testing.assert_array_equal(got, src)
+        # entropy + CRC on a second session of the same stream
+        espec = cstream.JobSpec(codec="tcomp32", egress=True, entropy="rans",
+                                integrity="crc32c")
+        with cstream.open(espec) as h:
+            h.push(src).flush()
+            eframes = h.frames()
+        for f in eframes:
+            buf = f.to_bytes()
+            assert bits.Frame.from_bytes(buf).to_bytes() == buf
+    finally:
+        dictstore.set_default_registry(prev)
+
+
+def test_gang_crc_sessions_stay_bit_exact():
+    rng = np.random.default_rng(13)
+    spec = cstream.JobSpec(codec="rle", egress=True, gang=True,
+                           integrity="crc32c", flush_tuples=512)
+    srcs = {t: (rng.integers(0, 5, 1024).astype(np.uint32)) for t in ("a", "b")}
+    ts = np.arange(1024) * 1e-5
+    with cstream.Dispatcher(gang=True) as d:
+        handles = {t: d.open(spec, topic=t) for t in srcs}
+        for t, v in srcs.items():
+            handles[t].push(v, timestamps=ts)
+        d.run()
+        plan = cstream.negotiate(spec)
+        dec = DecompressionPipeline(plan.spec, codec=plan.codec, plan=plan.execution)
+        for t, v in srcs.items():
+            got = np.concatenate(
+                [dec.ingest(f.to_bytes()).values for f in handles[t].frames()]
+            )
+            np.testing.assert_array_equal(got, v)
